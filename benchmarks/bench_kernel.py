@@ -1,0 +1,61 @@
+"""Spinner-scores Pallas kernel: interpret-mode validation timing + the
+static VMEM/roofline accounting of the kernel itself (TPU-target numbers).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import generators
+from repro.core.graph import build_tiled_csr
+from repro.kernels import ops, ref
+
+from .common import emit
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    g = generators.powerlaw_ba(3000 if quick else 20_000, 8, seed=0)
+    for k, tile in ((16, 128), (64, 128), (256, 128)):
+        tiled = build_tiled_csr(g, tile_v=tile, tile_e=tile)
+        labels = jnp.asarray(
+            np.random.default_rng(0).integers(0, k, g.num_vertices),
+            jnp.int32)
+        out = ops.spinner_scores_tiled(labels, tiled=tiled, k=k)
+        expect = ref.spinner_scores_ref(labels, jnp.asarray(g.src),
+                                        jnp.asarray(g.dst),
+                                        jnp.asarray(g.weight),
+                                        g.num_vertices, k)
+        err = float(jnp.abs(out - expect).max())
+        # ref-path timing (the XLA scatter-add production path on CPU)
+        f = jax.jit(lambda lab: ref.spinner_scores_ref(
+            lab, jnp.asarray(g.src), jnp.asarray(g.dst),
+            jnp.asarray(g.weight), g.num_vertices, k))
+        f(labels).block_until_ready()
+        t0 = time.time()
+        f(labels).block_until_ready()
+        dt = time.time() - t0
+        # static kernel accounting for the TPU target
+        k_pad = ops.round_up(k, 128)
+        e_pad = tiled.num_tiles * tiled.max_chunks * tiled.tile_e
+        vmem = (tile * tiled.tile_e + tiled.tile_e * k_pad
+                + tile * k_pad) * 4
+        mxu_flops = 2 * e_pad * (tile + k_pad)
+        hbm = e_pad * (4 + 4 + 4) + tiled.padded_v * k_pad * 4
+        rows.append({
+            "name": f"kernel/spinner_scores/k{k}",
+            "us_per_call": dt * 1e6,
+            "derived": f"max_err={err:.1e};vmem_bytes={vmem};"
+                       f"pad_overhead={e_pad / (2 * g.num_undirected_edges):.2f};"
+                       f"arith_intensity={mxu_flops / hbm:.1f}",
+            "err": err, "vmem": vmem, "e_pad": e_pad,
+        })
+    emit(rows, "bench_kernel")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

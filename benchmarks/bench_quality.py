@@ -1,0 +1,50 @@
+"""Figure 3 + Tables 1 & 3: locality phi and balance rho vs k.
+
+For each workload graph, sweep the partition count and record phi, rho and
+the improvement over hash partitioning (Fig. 3b); the paper's headline
+claims are phi comparable to offline partitioners with rho <= c, and
+locality improvements over hash growing with k (up to ~250x at k = 512).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import SpinnerConfig, metrics, partition
+
+from .common import emit, get_graph, hash_labels, timed
+
+SWEEPS = {
+    "smallworld-100k": (2, 4, 8, 16, 32, 64, 128, 256, 512),
+    "powerlaw-50k": (2, 8, 32, 128),
+    "clustered-64k": (2, 8, 32, 64),
+}
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    for gname, ks in SWEEPS.items():
+        g = get_graph(gname)
+        if quick:
+            ks = ks[:4]
+        for k in ks:
+            cfg = SpinnerConfig(k=k, seed=0, max_iters=60 if quick else 120)
+            res, dt = timed(partition, g, cfg, record_history=False)
+            phi = metrics.phi(g, res.labels)
+            rho = metrics.rho(g, res.labels, k)
+            phi_hash = metrics.phi(g, hash_labels(g.num_vertices, k))
+            rows.append({
+                "name": f"quality/{gname}/k{k}",
+                "us_per_call": dt * 1e6 / max(1, res.iterations),
+                "derived": f"phi={phi:.3f};rho={rho:.3f};"
+                           f"phi_over_hash={phi / max(phi_hash, 1e-9):.1f};"
+                           f"iters={res.iterations}",
+                "phi": phi, "rho": rho, "k": k, "graph": gname,
+                "phi_hash": phi_hash, "iterations": res.iterations,
+                "seconds": dt,
+            })
+    emit(rows, "bench_quality")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

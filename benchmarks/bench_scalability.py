@@ -1,0 +1,111 @@
+"""Figure 5: per-iteration runtime scaling.
+
+(a) vs |V| at fixed degree (Watts-Strogatz, as in the paper),
+(b) vs workers (distributed shard_map engine in a subprocess with N host
+    devices -- on this 1-core container the numbers validate *overhead*,
+    not speedup; see EXPERIMENTS.md),
+(c) vs number of partitions k.
+
+As in the paper we time the FIRST full iteration (every vertex active),
+averaged over a few repeats after a warmup call.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core import SpinnerConfig, generators
+from repro.core.spinner import compute_loads, init_labels, make_step
+
+from .common import emit
+
+
+def _iter_time(g, k: int, repeats: int = 3) -> float:
+    cfg = SpinnerConfig(k=k, seed=0)
+    step = make_step(g, cfg)
+    key = jax.random.PRNGKey(0)
+    labels = init_labels(g, cfg, key)
+    loads = compute_loads(g, labels, k)
+    out = step(labels, loads, key)           # warmup/compile
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(repeats):
+        out = step(labels, loads, key)       # first-iteration semantics
+        jax.block_until_ready(out)
+    return (time.time() - t0) / repeats
+
+
+def run(quick: bool = False) -> list:
+    rows = []
+    # (a) vs graph size
+    sizes = (2**14, 2**15, 2**16) if quick else (2**14, 2**15, 2**16, 2**17)
+    for v in sizes:
+        g = generators.watts_strogatz(v, 20, 0.3, seed=1)
+        dt = _iter_time(g, 16)
+        rows.append({
+            "name": f"scalability/V{v}",
+            "us_per_call": dt * 1e6,
+            "derived": f"edges={g.num_undirected_edges};"
+                       f"us_per_edge={dt * 1e6 / g.num_undirected_edges:.4f}",
+            "V": v, "E": g.num_undirected_edges, "seconds": dt,
+        })
+    # (c) vs partitions
+    g = generators.watts_strogatz(2**15, 20, 0.3, seed=1)
+    for k in (2, 8, 32, 128) if quick else (2, 8, 32, 128, 512):
+        dt = _iter_time(g, k)
+        rows.append({
+            "name": f"scalability/k{k}",
+            "us_per_call": dt * 1e6,
+            "derived": f"us_per_k={dt * 1e6 / k:.2f}",
+            "k": k, "seconds": dt,
+        })
+    # (b) vs workers (subprocess with forced host device counts)
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for ndev in (1, 2, 4) if quick else (1, 2, 4, 8):
+        code = (
+            "import numpy as np, jax, time;"
+            "from repro.core import generators;"
+            "from repro.core.spinner import SpinnerConfig;"
+            "from repro.core.distributed import shard_graph, "
+            "make_distributed_step;"
+            "g = generators.watts_strogatz(2**15, 20, 0.3, seed=1);"
+            "cfg = SpinnerConfig(k=16, seed=0);"
+            f"mesh = jax.sharding.Mesh(np.array(jax.devices()), ('data',));"
+            "sg = shard_graph(g, mesh.size);"
+            "step = make_distributed_step(sg, cfg, mesh);"
+            "import jax.numpy as jnp;"
+            "labels = jnp.zeros((sg.ndev, sg.v_per_dev), jnp.int32);"
+            "loads = jnp.zeros((16,), jnp.float32)"
+            ".at[0].set(float(sg.deg_w.sum()));"
+            "args = tuple(map(jnp.asarray, (sg.src_local, sg.dst, sg.weight,"
+            " sg.deg_w)));"
+            "key = jax.random.PRNGKey(0);"
+            "o = step(labels, *args, loads, key); jax.block_until_ready(o);"
+            "t0 = time.time();"
+            "o = step(labels, *args, loads, key); jax.block_until_ready(o);"
+            "print('ITER_S', time.time() - t0)"
+        )
+        env = dict(os.environ,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
+                   PYTHONPATH=os.path.join(here, "src"))
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=600)
+        line = [ln for ln in r.stdout.splitlines() if "ITER_S" in ln]
+        dt = float(line[0].split()[1]) if line else float("nan")
+        rows.append({
+            "name": f"scalability/workers{ndev}",
+            "us_per_call": dt * 1e6,
+            "derived": f"devices={ndev}",
+            "workers": ndev, "seconds": dt,
+        })
+    emit(rows, "bench_scalability")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Elastic repartitioning (Section 3.5): scale a running partitioning
+16 -> 20 -> 12 partitions without recomputing from scratch, exactly what a
+cluster does when nodes join or are preempted.
+
+    PYTHONPATH=src python examples/elastic_resize.py
+"""
+import numpy as np
+
+from repro.core import SpinnerConfig, generators, metrics, partition, resize
+
+graph = generators.watts_strogatz(30_000, 16, 0.3, seed=4)
+print(f"graph: {graph.num_vertices} vertices, "
+      f"{graph.num_undirected_edges} edges\n")
+
+k = 16
+res = partition(graph, SpinnerConfig(k=k, seed=0), record_history=False)
+print(f"initial k={k}: phi={metrics.phi(graph, res.labels):.3f} "
+      f"rho={metrics.rho(graph, res.labels, k):.3f} "
+      f"({res.iterations} iters)")
+
+for k_new, event in ((20, "4 nodes join"), (12, "8 nodes preempted")):
+    cfg = SpinnerConfig(k=k_new, seed=1)
+    res_new, relabeled = resize(graph, res.labels, cfg, k_old=k)
+    moved = metrics.partitioning_difference(res.labels, res_new.labels)
+    print(f"{event}: k={k} -> {k_new}  "
+          f"adapted in {res_new.iterations} iters, moved {moved:.1%}  "
+          f"phi={metrics.phi(graph, res_new.labels):.3f} "
+          f"rho={metrics.rho(graph, res_new.labels, k_new):.3f}")
+    res, k = res_new, k_new

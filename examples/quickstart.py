@@ -1,0 +1,29 @@
+"""Quickstart: partition a graph with Spinner and inspect quality.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import SpinnerConfig, generators, metrics, partition
+
+# a small-world graph (the paper's synthetic workload family)
+graph = generators.watts_strogatz(n=20_000, k_nbrs=20, beta=0.3, seed=1)
+print(f"graph: {graph.num_vertices} vertices, "
+      f"{graph.num_undirected_edges} edges")
+
+# paper defaults: c = 1.05, eps = 1e-3, w = 5  (Section 5.1)
+cfg = SpinnerConfig(k=16, c=1.05, eps=1e-3, halt_window=5, seed=0)
+result = partition(graph, cfg)
+
+phi = metrics.phi(graph, result.labels)
+rho = metrics.rho(graph, result.labels, cfg.k)
+hash_phi = metrics.phi(graph, np.arange(graph.num_vertices) % cfg.k)
+print(f"converged in {result.iterations} iterations "
+      f"(halting criterion: eps={cfg.eps}, w={cfg.halt_window})")
+print(f"locality  phi = {phi:.3f}   (hash partitioning: {hash_phi:.3f}, "
+      f"{phi / hash_phi:.1f}x better)")
+print(f"balance   rho = {rho:.3f}   (capacity bound c = {cfg.c})")
+print("per-iteration trace (first 5):")
+for h in result.history[:5]:
+    print(f"  iter {h['iteration']:3d}  phi={h['phi']:.3f} "
+          f"rho={h['rho']:.3f} migrations={h['migrations']}")

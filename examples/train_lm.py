@@ -1,0 +1,69 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps.
+
+Uses the same ModelAPI/train-step/data/checkpoint stack as the production
+launcher, on a single host.  Loss on the synthetic motif language drops
+from ~ln(V) to near the motif entropy within a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt import checkpoint
+from repro.configs import ARCHS
+from repro.data import pipeline
+from repro.models import build, init_params
+from repro.optim import adamw
+from repro.train import steps
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    args = ap.parse_args()
+
+    # ~100M params: stablelm family scaled down
+    cfg = dataclasses.replace(
+        ARCHS["stablelm-1.6b"], n_layers=8, d_model=768, n_heads=12,
+        n_kv_heads=12, d_ff=2048, vocab=32_000, attn_chunk_q=256,
+        attn_chunk_kv=256)
+    api = build(cfg)
+    print(f"model: {api.num_params / 1e6:.1f}M params")
+
+    params = init_params(api, jax.random.PRNGKey(0))
+    state = steps.init_train_state(params)
+    opt_cfg = adamw.AdamWConfig(lr=6e-4, warmup_steps=30,
+                                total_steps=args.steps, weight_decay=0.1)
+    train_step = jax.jit(steps.make_train_step(api, opt_cfg),
+                         donate_argnums=(0,))
+    data_cfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=256,
+                                   global_batch=8, seed=0)
+
+    start = checkpoint.latest_step(args.ckpt_dir) or 0
+    if start:
+        state = checkpoint.restore(args.ckpt_dir, state)
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = jax.tree.map(jnp.asarray, pipeline.batch_at(data_cfg, step))
+        state, stats = train_step(state, batch)
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d}  loss={float(stats['loss']):.4f}  "
+                  f"gnorm={float(stats['grad_norm']):.2f}  "
+                  f"lr={float(stats['lr']):.2e}  "
+                  f"({(time.time() - t0):.0f}s)")
+        if (step + 1) % args.ckpt_every == 0:
+            checkpoint.save(args.ckpt_dir, step + 1, state)
+            checkpoint.gc_old(args.ckpt_dir, keep=2)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: Spinner (scalable graph partitioning) as a production JAX framework."""
+__version__ = "0.1.0"

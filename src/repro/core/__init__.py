@@ -1,0 +1,17 @@
+"""Spinner core: the paper's contribution as a composable JAX module."""
+from . import generators, graph, incremental, metrics
+from .graph import Graph, TiledCSR, add_edges, build_tiled_csr, from_edges
+from .incremental import adapt, elastic_relabel, extend_labels, resize
+from .metrics import (partitioning_difference, phi, phi_weighted, rho,
+                      score_global, summarize)
+from .spinner import (PartitionResult, SpinnerConfig, compute_loads,
+                      init_labels, make_step, partition)
+
+__all__ = [
+    "Graph", "TiledCSR", "from_edges", "add_edges", "build_tiled_csr",
+    "SpinnerConfig", "PartitionResult", "partition", "make_step",
+    "init_labels", "compute_loads", "adapt", "resize", "elastic_relabel",
+    "extend_labels", "phi", "phi_weighted", "rho", "score_global",
+    "partitioning_difference", "summarize", "generators", "graph",
+    "metrics", "incremental",
+]

@@ -1,0 +1,229 @@
+"""Graph containers and preprocessing for Spinner.
+
+The paper's Giraph substrate stores vertex objects with adjacency lists and
+runs two supersteps (NeighborPropagation / NeighborDiscovery) to convert a
+directed graph into the weighted undirected form of Eq. (3).  On TPU we adapt
+this to a single vectorized symmetrization pass over a structure-of-arrays
+COO edge list (sort packed canonical keys, count duplicates -> weight in
+{1, 2}), producing a CSR-sorted symmetric representation that every other
+module (LPA, Pregel engine, Pallas kernel) consumes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Weighted undirected graph in symmetric COO form, CSR-sorted by src.
+
+    Every undirected edge {u, v} appears twice: once as (u, v) and once as
+    (v, u), both carrying the Eq. (3) weight w(u, v) in {1, 2}.  This makes
+    per-vertex aggregation a pure segment operation over ``src``.
+    """
+
+    num_vertices: int
+    src: np.ndarray        # int32 (2*E_undirected,)  sorted ascending
+    dst: np.ndarray        # int32 (2*E_undirected,)
+    weight: np.ndarray     # float32 (2*E_undirected,)
+    row_ptr: np.ndarray    # int64 (V+1,)  CSR offsets into src/dst/weight
+    deg_w: np.ndarray      # float32 (V,)  weighted degree = sum of incident w
+
+    @property
+    def num_directed_entries(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def num_undirected_edges(self) -> int:
+        return int(self.src.shape[0]) // 2
+
+    @property
+    def total_weight(self) -> float:
+        """Sum of weighted degrees = 2 * (weighted undirected edge count)."""
+        return float(self.deg_w.sum())
+
+    def validate(self) -> None:
+        assert self.src.shape == self.dst.shape == self.weight.shape
+        assert self.row_ptr.shape == (self.num_vertices + 1,)
+        assert np.all(np.diff(self.row_ptr) >= 0)
+        assert self.src.size == 0 or (
+            self.src.min() >= 0 and self.src.max() < self.num_vertices
+        )
+        # symmetry: the multiset of (dst, src) equals (src, dst)
+        fwd = np.stack([self.src, self.dst]), self.weight
+        key_f = self.src.astype(np.int64) * self.num_vertices + self.dst
+        key_b = self.dst.astype(np.int64) * self.num_vertices + self.src
+        assert np.array_equal(np.sort(key_f), np.sort(key_b)), "not symmetric"
+
+
+def _dedupe(src: np.ndarray, dst: np.ndarray, num_vertices: int
+            ) -> Tuple[np.ndarray, np.ndarray]:
+    """Remove self-loops and exact duplicate directed edges."""
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    key = src.astype(np.int64) * num_vertices + dst.astype(np.int64)
+    key = np.unique(key)
+    return (key // num_vertices).astype(np.int32), (key % num_vertices).astype(np.int32)
+
+
+def from_edges(src, dst, num_vertices: int, directed: bool = True) -> Graph:
+    """Build the weighted undirected Graph per Eq. (3).
+
+    w(u,v) = 2 if both (u,v) and (v,u) exist in the directed input, else 1.
+    Undirected input gets w = 1 everywhere.
+    """
+    src = np.asarray(src, dtype=np.int32)
+    dst = np.asarray(dst, dtype=np.int32)
+    if src.size:
+        assert int(max(src.max(), dst.max())) < num_vertices
+    src, dst = _dedupe(src, dst, num_vertices)
+
+    lo = np.minimum(src, dst).astype(np.int64)
+    hi = np.maximum(src, dst).astype(np.int64)
+    canon = lo * num_vertices + hi
+    uniq, counts = np.unique(canon, return_counts=True)
+    u = (uniq // num_vertices).astype(np.int32)
+    v = (uniq % num_vertices).astype(np.int32)
+    if directed:
+        w = counts.astype(np.float32)          # 1 = one direction, 2 = both
+    else:
+        w = np.ones_like(counts, dtype=np.float32)
+
+    sym_src = np.concatenate([u, v])
+    sym_dst = np.concatenate([v, u])
+    sym_w = np.concatenate([w, w])
+    return _finish(sym_src, sym_dst, sym_w, num_vertices)
+
+
+def _finish(src, dst, w, num_vertices: int) -> Graph:
+    order = np.lexsort((dst, src))
+    src, dst, w = src[order], dst[order], w[order].astype(np.float32)
+    counts = np.bincount(src, minlength=num_vertices).astype(np.int64)
+    row_ptr = np.zeros(num_vertices + 1, dtype=np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    deg_w = np.zeros(num_vertices, dtype=np.float32)
+    np.add.at(deg_w, src, w)
+    return Graph(num_vertices=num_vertices, src=src.astype(np.int32),
+                 dst=dst.astype(np.int32), weight=w, row_ptr=row_ptr,
+                 deg_w=deg_w)
+
+
+def add_edges(graph: Graph, new_src, new_dst, directed: bool = True,
+              num_vertices: Optional[int] = None) -> Graph:
+    """Incremental growth (Section 3.4): returns the extended graph.
+
+    ``num_vertices`` may exceed the old count to inject new vertices.
+    Weights are recomputed for touched pairs; untouched edges keep theirs.
+    """
+    V = max(num_vertices or 0, graph.num_vertices,
+            int(np.max(new_src) + 1) if len(new_src) else 0,
+            int(np.max(new_dst) + 1) if len(new_dst) else 0)
+    # Reconstruct a directed view of the old graph: an undirected edge of
+    # weight 2 stands for both directions, weight 1 for the canonical one.
+    half = graph.src < graph.dst
+    u, v, w = graph.src[half], graph.dst[half], graph.weight[half]
+    both = w >= 2
+    old_src = np.concatenate([u, v[both]])
+    old_dst = np.concatenate([v, u[both]])
+    src = np.concatenate([old_src, np.asarray(new_src, np.int32)])
+    dst = np.concatenate([old_dst, np.asarray(new_dst, np.int32)])
+    return from_edges(src, dst, V, directed=directed)
+
+
+def remove_vertices(graph: Graph, vertices) -> Graph:
+    """Drop vertices (keeping ids stable) and their incident edges."""
+    drop = np.zeros(graph.num_vertices, dtype=bool)
+    drop[np.asarray(vertices)] = True
+    keep = ~(drop[graph.src] | drop[graph.dst])
+    return _finish(graph.src[keep], graph.dst[keep], graph.weight[keep],
+                   graph.num_vertices)
+
+
+# ---------------------------------------------------------------------------
+# Tiled CSR for the Pallas kernel (see kernels/spinner_scores.py)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TiledCSR:
+    """Edge chunks grouped by source-vertex tile, padded for the MXU.
+
+    Layout: ``(num_vertex_tiles, max_chunks, tile_e)`` dense arrays.  A pad
+    entry has weight 0 and src_local 0, so it contributes nothing.  Degree
+    skew across tiles is reduced beforehand by interleaving vertices by
+    degree rank (see ``build_tiled_csr``); the permutation is recorded so
+    scores can be mapped back.
+    """
+
+    tile_v: int
+    tile_e: int
+    num_tiles: int
+    max_chunks: int
+    src_local: np.ndarray   # int32 (num_tiles, max_chunks, tile_e)
+    dst: np.ndarray         # int32 (num_tiles, max_chunks, tile_e)
+    weight: np.ndarray      # float32 (num_tiles, max_chunks, tile_e)
+    perm: np.ndarray        # int32 (V,) original vertex -> tiled row
+    inv_perm: np.ndarray    # int32 (V_pad,) tiled row -> original vertex (or -1)
+    padded_v: int
+
+
+def build_tiled_csr(graph: Graph, tile_v: int = 128, tile_e: int = 128,
+                    balance_by_degree: bool = True) -> TiledCSR:
+    V = graph.num_vertices
+    num_tiles = max(1, -(-V // tile_v))
+    padded_v = num_tiles * tile_v
+
+    if balance_by_degree and V > tile_v:
+        # Round-robin vertices (sorted by degree, desc) across tiles so hub
+        # vertices spread out and per-tile edge counts even up.
+        rank = np.argsort(-graph.deg_w, kind="stable")
+        # rank[i] is the vertex with i-th largest degree; place it at row
+        # (i % num_tiles) * tile_v + (i // num_tiles): round-robin across
+        # tiles.  i // num_tiles <= (V-1) // num_tiles < tile_v, so no tile
+        # ever overflows.
+        i = np.arange(V, dtype=np.int64)
+        rows = np.empty(V, dtype=np.int64)
+        rows[rank] = (i % num_tiles) * tile_v + (i // num_tiles)
+        perm = rows.astype(np.int32)
+    else:
+        perm = np.arange(V, dtype=np.int32)
+
+    inv_perm = np.full(padded_v, -1, dtype=np.int32)
+    inv_perm[perm] = np.arange(V, dtype=np.int32)
+
+    new_src = perm[graph.src]
+    order = np.argsort(new_src, kind="stable")
+    s = new_src[order]
+    d = graph.dst[order]          # dst stays in ORIGINAL ids (labels indexed)
+    w = graph.weight[order]
+
+    tile_of = s // tile_v
+    counts = np.bincount(tile_of, minlength=num_tiles)
+    chunks_per_tile = np.maximum(1, -(-counts // tile_e))
+    max_chunks = int(chunks_per_tile.max())
+
+    src_local = np.zeros((num_tiles, max_chunks, tile_e), dtype=np.int32)
+    dstA = np.zeros((num_tiles, max_chunks, tile_e), dtype=np.int32)
+    wA = np.zeros((num_tiles, max_chunks, tile_e), dtype=np.float32)
+
+    starts = np.zeros(num_tiles + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    for t in range(num_tiles):
+        lo, hi = starts[t], starts[t + 1]
+        n = hi - lo
+        if n == 0:
+            continue
+        flat_sl = (s[lo:hi] - t * tile_v).astype(np.int32)
+        flat_d = d[lo:hi]
+        flat_w = w[lo:hi]
+        nc = -(-n // tile_e)
+        pad = nc * tile_e - n
+        src_local[t, :nc].reshape(-1)[:n] = flat_sl
+        dstA[t, :nc].reshape(-1)[:n] = flat_d
+        wA[t, :nc].reshape(-1)[:n] = flat_w
+        del pad
+    return TiledCSR(tile_v=tile_v, tile_e=tile_e, num_tiles=num_tiles,
+                    max_chunks=max_chunks, src_local=src_local, dst=dstA,
+                    weight=wA, perm=perm, inv_perm=inv_perm, padded_v=padded_v)

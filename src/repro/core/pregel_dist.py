@@ -1,0 +1,189 @@
+"""Distributed Pregel with halo exchange (shard_map).
+
+The integration the paper performs on Giraph (Section 5.6), on our mesh:
+vertices are physically placed by partition label (one partition per
+device), and each superstep exchanges only the *boundary* values other
+devices actually reference -- an all_to_all halo exchange with
+precomputed index lists.  A better partitioning (Spinner vs hash) directly
+shrinks the halo, i.e. the bytes on the wire, which is exactly the
+mechanism behind the paper's 2x application speedup.
+
+PageRank is implemented end-to-end; halo construction is generic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from .graph import Graph
+
+
+@dataclasses.dataclass(frozen=True)
+class HaloPlan:
+    ndev: int
+    v_per_dev: int
+    perm: np.ndarray           # (V,) original id -> placed id
+    send_idx: np.ndarray       # (ndev, ndev, H) local indices to send
+    halo_size: int             # H (padded per pair)
+    true_halo: int             # sum of real (unpadded) halo entries
+    # per-device edge arrays (edges live at their dst owner)
+    src_ext: np.ndarray        # (ndev, E) index into [local values | halo]
+    dst_local: np.ndarray      # (ndev, E) local dst index
+    edge_valid: np.ndarray     # (ndev, E) bool
+    out_deg: np.ndarray        # (ndev, v_per_dev) f32 (global out-degree)
+
+
+def build_halo_plan(graph: Graph, labels: np.ndarray, ndev: int) -> HaloPlan:
+    V = graph.num_vertices
+    labels = np.asarray(labels)
+    assert labels.max() < ndev
+    # place partition p's vertices contiguously
+    order = np.argsort(labels, kind="stable")
+    counts = np.bincount(labels, minlength=ndev)
+    v_per_dev = int(counts.max())
+    perm = np.empty(V, np.int64)
+    placed = []
+    off = 0
+    for p in range(ndev):
+        mine = order[off: off + counts[p]]
+        perm[mine] = p * v_per_dev + np.arange(counts[p])
+        off += counts[p]
+    src_p = perm[graph.src]
+    dst_p = perm[graph.dst]
+    owner_src = src_p // v_per_dev
+    owner_dst = dst_p // v_per_dev
+
+    # halo: for each (needer q, owner p != q) the unique src vertices
+    need = {}
+    H = 1
+    true_halo = 0
+    for q in range(ndev):
+        qe = owner_dst == q
+        for p in range(ndev):
+            if p == q:
+                continue
+            ids = np.unique(src_p[qe & (owner_src == p)])
+            need[(q, p)] = ids
+            true_halo += ids.size
+            H = max(H, ids.size)
+
+    send_idx = np.zeros((ndev, ndev, H), np.int64)  # [owner p][needer q]
+    recv_pos = {}                                    # (q, p) -> slot base
+    for (q, p), ids in need.items():
+        local = ids - p * v_per_dev
+        send_idx[p, q, : local.size] = local
+        recv_pos[(q, p)] = ids
+
+    # remap edge srcs: local -> [0, v_per_dev); remote -> v_per_dev + p*H + slot
+    e_per = np.bincount(owner_dst, minlength=ndev)
+    E = int(e_per.max()) if e_per.size else 1
+    src_ext = np.zeros((ndev, E), np.int64)
+    dst_local = np.zeros((ndev, E), np.int64)
+    valid = np.zeros((ndev, E), bool)
+    for q in range(ndev):
+        qe = np.where(owner_dst == q)[0]
+        s, d = src_p[qe], dst_p[qe]
+        so = owner_src[qe]
+        ext = np.empty(s.size, np.int64)
+        local = so == q
+        ext[local] = s[local] - q * v_per_dev
+        for p in range(ndev):
+            if p == q:
+                continue
+            sel = so == p
+            if not sel.any():
+                continue
+            ids = recv_pos[(q, p)]
+            slot = np.searchsorted(ids, s[sel])
+            ext[sel] = v_per_dev + p * H + slot
+        src_ext[q, : s.size] = ext
+        dst_local[q, : s.size] = d - q * v_per_dev
+        valid[q, : s.size] = True
+
+    out_deg = np.zeros(ndev * v_per_dev, np.float32)
+    np.add.at(out_deg, src_p, 1.0)
+    return HaloPlan(ndev=ndev, v_per_dev=v_per_dev, perm=perm,
+                    send_idx=send_idx, halo_size=H, true_halo=true_halo,
+                    src_ext=src_ext, dst_local=dst_local, edge_valid=valid,
+                    out_deg=out_deg.reshape(ndev, v_per_dev))
+
+
+def pagerank_distributed(graph: Graph, labels: np.ndarray, mesh: Mesh,
+                         iters: int = 20, damping: float = 0.85,
+                         axis: str = "data") -> Tuple[np.ndarray, dict]:
+    ndev = mesh.shape[axis]
+    plan = build_halo_plan(graph, labels, ndev)
+    V = graph.num_vertices
+    vl, H = plan.v_per_dev, plan.halo_size
+
+    send_idx = jnp.asarray(plan.send_idx)       # (ndev, ndev, H)
+    src_ext = jnp.asarray(plan.src_ext)
+    dst_local = jnp.asarray(plan.dst_local)
+    w_valid = jnp.asarray(plan.edge_valid.astype(np.float32))
+    out_deg = jnp.asarray(plan.out_deg)
+
+    def superstep(pr_l, send_l, src_l, dst_l, wv_l, deg_l):
+        share = (pr_l[0] / jnp.maximum(deg_l[0], 1.0)).astype(jnp.float32)
+        # prepare per-destination buffers and swap: (ndev, H)
+        outbox = share[send_l[0]]                           # (ndev, H)
+        halo = jax.lax.all_to_all(outbox, axis, split_axis=0, concat_axis=0)
+        ext = jnp.concatenate([share, halo.reshape(-1)])
+        contrib = jnp.zeros((vl,), jnp.float32).at[dst_l[0]].add(
+            ext[src_l[0]] * wv_l[0])
+        pr_new = (1 - damping) / V + damping * contrib
+        return pr_new[None]
+
+    step = jax.jit(shard_map(
+        superstep, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
+        out_specs=P(axis), check_rep=False))
+
+    pr = jnp.full((ndev, vl), 1.0 / V, jnp.float32)
+    for _ in range(iters):
+        pr = step(pr, send_idx, src_ext, dst_local, w_valid, out_deg)
+    pr_flat = np.asarray(pr).reshape(-1)
+    values = np.empty(V, np.float32)
+    values = pr_flat[plan.perm]
+    stats = {
+        "halo_padded_bytes_per_step": int(ndev * (ndev - 1) * H * 4),
+        "halo_true_bytes_per_step": int(plan.true_halo * 4),
+        "v_per_dev": vl,
+        "iters": iters,
+    }
+    return values, stats
+
+
+def _selftest() -> None:
+    """Run under XLA_FLAGS=--xla_force_host_platform_device_count=8."""
+    from . import generators, metrics, pregel
+    from .spinner import SpinnerConfig, partition
+
+    g = generators.watts_strogatz(4000, 12, 0.2, seed=3)
+    ndev = len(jax.devices())
+    mesh = Mesh(np.array(jax.devices()), ("data",))
+    cfg = SpinnerConfig(k=ndev, seed=1)
+    res = partition(g, cfg, record_history=False)
+    hash_labels = (np.arange(g.num_vertices) * 2654435761 % ndev
+                   ).astype(np.int32)
+
+    ref = pregel.pagerank(g, res.labels, ndev, iters=10).values
+    pr_sp, st_sp = pagerank_distributed(g, res.labels, mesh, iters=10)
+    pr_h, st_h = pagerank_distributed(g, hash_labels, mesh, iters=10)
+    np.testing.assert_allclose(pr_sp, ref, rtol=1e-4, atol=1e-9)
+    np.testing.assert_allclose(pr_h, ref, rtol=1e-4, atol=1e-9)
+    red = 1 - st_sp["halo_true_bytes_per_step"] / st_h["halo_true_bytes_per_step"]
+    print(f"devices={ndev} halo spinner={st_sp['halo_true_bytes_per_step']}B "
+          f"hash={st_h['halo_true_bytes_per_step']}B reduction={red:.1%}")
+    assert red > 0.3, "spinner should reduce halo traffic"
+    print("PREGEL_DIST SELFTEST OK")
+
+
+if __name__ == "__main__":
+    _selftest()

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for Spinner's compute hot-spots (validated interpret=True)."""
+from . import ops, ref
+from .ops import spinner_scores, spinner_scores_tiled
+from .spinner_scores import spinner_scores_pallas
+
+__all__ = ["ops", "ref", "spinner_scores", "spinner_scores_tiled",
+           "spinner_scores_pallas"]

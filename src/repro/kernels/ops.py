@@ -1,0 +1,60 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a TPU backend the kernel runs compiled; everywhere else it runs in
+``interpret=True`` mode (the kernel body executed op-by-op on the host),
+which is how correctness is validated in this repository.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, TiledCSR, build_tiled_csr
+
+from . import ref
+from .spinner_scores import spinner_scores_pallas
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("tile_v", "k_pad", "k",
+                                             "num_vertices", "interpret"))
+def _scores_from_tiles(labels, src_local, dst, w, perm, *, tile_v: int,
+                       k_pad: int, k: int, num_vertices: int,
+                       interpret: bool):
+    dst_label = labels[dst]                      # gather (T, C, TILE_E)
+    scores_pad = spinner_scores_pallas(src_local, dst_label, w,
+                                       tile_v=tile_v, k_pad=k_pad,
+                                       interpret=interpret)
+    return scores_pad[perm, :k]                  # back to original vertex order
+
+
+def spinner_scores_tiled(labels: jax.Array, *, tiled: TiledCSR, k: int,
+                         interpret: Optional[bool] = None) -> jax.Array:
+    """(V, k) ComputeScores matrix via the Pallas kernel."""
+    if interpret is None:
+        interpret = _default_interpret()
+    k_pad = round_up(max(k, 1), 128)
+    return _scores_from_tiles(
+        labels, jnp.asarray(tiled.src_local), jnp.asarray(tiled.dst),
+        jnp.asarray(tiled.weight), jnp.asarray(tiled.perm),
+        tile_v=tiled.tile_v, k_pad=k_pad, k=k,
+        num_vertices=int(tiled.perm.shape[0]), interpret=interpret)
+
+
+def spinner_scores(labels: jax.Array, graph: Graph, k: int,
+                   tile_v: int = 128, tile_e: int = 128,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Convenience: tile a Graph and compute its score matrix."""
+    tiled = build_tiled_csr(graph, tile_v=tile_v, tile_e=tile_e)
+    return spinner_scores_tiled(labels, tiled=tiled, k=k, interpret=interpret)

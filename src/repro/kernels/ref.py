@@ -1,0 +1,24 @@
+"""Pure-jnp oracles for the kernels package."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spinner_scores_ref(labels: jax.Array, src: jax.Array, dst: jax.Array,
+                       w: jax.Array, num_vertices: int, k: int) -> jax.Array:
+    """ComputeScores by scatter-add: scores[u, labels[v]] += w(u, v)."""
+    nbr = labels[dst]
+    return jnp.zeros((num_vertices, k), jnp.float32).at[src, nbr].add(w)
+
+
+def spinner_scores_tiled_ref(labels: jax.Array, src_local: jax.Array,
+                             dst: jax.Array, w: jax.Array, tile_v: int,
+                             k: int) -> jax.Array:
+    """Oracle operating directly on the tiled-CSR layout (incl. padding)."""
+    t, c, tile_e = src_local.shape
+    rows = (src_local
+            + tile_v * jnp.arange(t, dtype=jnp.int32)[:, None, None]).reshape(-1)
+    lbl = labels[dst.reshape(-1)]
+    return jnp.zeros((t * tile_v, k), jnp.float32).at[rows, lbl].add(
+        w.reshape(-1))

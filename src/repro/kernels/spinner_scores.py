@@ -1,0 +1,80 @@
+"""Pallas TPU kernel for Spinner's ComputeScores hot loop.
+
+The per-iteration work of LPA is ``scores[u, label(v)] += w(u, v)`` over all
+edges -- a sparse-dense matmul A @ onehot(labels).  A GPU implementation
+would use atomics; the TPU has none, and scatter lowers to serialized
+dynamic-update-slices.  The TPU-native re-cast: process edges in chunks that
+all share one source-vertex tile and turn the scatter into a dense MXU
+matmul
+
+    out[TILE_V, K] += onehot(src_local)[TILE_E, TILE_V]^T
+                      @ (onehot(dst_label) * w)[TILE_E, K]
+
+accumulated in a VMEM-resident (TILE_V, K) block across the chunk grid
+dimension (flash-attention-style revisiting).  Preprocessing
+(``core.graph.build_tiled_csr``) sorts edges by source tile, pads each tile's
+chunk list, and interleaves vertices by degree so hub-heavy tiles do not
+dominate the chunk count.
+
+Pad entries carry weight 0 and therefore contribute nothing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(src_local_ref, dst_label_ref, w_ref, out_ref, *, tile_v: int,
+            k_pad: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    sl = src_local_ref[0, 0, :]                       # (TILE_E,) int32
+    lbl = dst_label_ref[0, 0, :]                      # (TILE_E,) int32
+    w = w_ref[0, 0, :]                                # (TILE_E,) f32
+
+    rows = jax.lax.broadcasted_iota(jnp.int32, (sl.shape[0], tile_v), 1)
+    onehot_v = (sl[:, None] == rows).astype(jnp.float32)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (lbl.shape[0], k_pad), 1)
+    onehot_l = (lbl[:, None] == cols).astype(jnp.float32) * w[:, None]
+
+    out_ref[...] += jax.lax.dot_general(
+        onehot_v, onehot_l, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def spinner_scores_pallas(src_local: jax.Array, dst_label: jax.Array,
+                          w: jax.Array, *, tile_v: int, k_pad: int,
+                          interpret: bool = False) -> jax.Array:
+    """Run the tiled ComputeScores kernel.
+
+    Args:
+      src_local: (T, C, TILE_E) int32, row of each edge within its tile.
+      dst_label: (T, C, TILE_E) int32, label of each edge's destination.
+      w: (T, C, TILE_E) float32, Eq. (3) edge weights (0 for padding).
+      tile_v: rows per source-vertex tile (multiple of 8; 128 for MXU).
+      k_pad: padded label count (multiple of 128 for lane alignment).
+    Returns:
+      (T * tile_v, k_pad) float32 score matrix in tiled row order.
+    """
+    t, c, tile_e = src_local.shape
+    assert dst_label.shape == w.shape == (t, c, tile_e)
+    kernel = functools.partial(_kernel, tile_v=tile_v, k_pad=k_pad)
+    edge_spec = pl.BlockSpec((1, 1, tile_e), lambda i, j: (i, j, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(t, c),
+        in_specs=[edge_spec, edge_spec, edge_spec],
+        out_specs=pl.BlockSpec((tile_v, k_pad), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t * tile_v, k_pad), jnp.float32),
+        interpret=interpret,
+        compiler_params=dict(
+            mosaic=dict(dimension_semantics=("arbitrary", "arbitrary"))
+        ) if not interpret else None,
+    )(src_local, dst_label, w)

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x shape x mesh) cell lowers,
+compiles, and is shardable on the production meshes -- with no allocation.
+
+Per cell this script records, as JSON:
+  * memory_analysis(): per-device argument/output/temp/alias bytes,
+  * cost_analysis(): per-device HLO FLOPs and bytes accessed,
+  * the collective schedule: per-op-kind operand bytes and counts parsed
+    from the compiled HLO (feeds the roofline's collective term).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/artifacts
+"""
+import argparse      # noqa: E402
+import gzip          # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES_BY_NAME, cell_is_runnable  # noqa: E402
+from repro.launch.hlo_analysis import analyze  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import build, input_specs         # noqa: E402
+from repro.optim import adamw                        # noqa: E402
+from repro.parallel import rules                     # noqa: E402
+from repro.train import steps                        # noqa: E402
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_COLL_RE = re.compile(
+    r"=\s*(?P<type>\([^=]*?\)|\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-device result bytes per collective kind, from compiled HLO.
+
+    all-reduce is charged 2x (ring = reduce-scatter + all-gather phases);
+    ``-done`` ops are skipped to avoid double-counting async pairs.
+    """
+    stats = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group("op")
+        nbytes = _type_bytes(m.group("type"))
+        if op == "all-reduce":
+            nbytes *= 2
+        e = stats.setdefault(op, {"count": 0, "bytes": 0})
+        e["count"] += 1
+        e["bytes"] += nbytes
+    stats["total_bytes"] = sum(v["bytes"] for k, v in stats.items()
+                               if isinstance(v, dict))
+    return stats
+
+
+def _make_fn_and_args(arch: str, shape_name: str, mesh,
+                      variant: str = "base"):
+    """Returns (fn, arg_specs, in_shardings, out_shardings, donate)."""
+    cfg = ARCHS[arch]
+    if variant == "opt":
+        cfg = cfg.optimized()
+    elif variant.startswith("knob:"):
+        # e.g. knob:cast_params_before_scan=True,ce_chunked=512
+        import dataclasses as _dc
+        kv = {}
+        for part in variant[5:].split(","):
+            k, v = part.split("=")
+            kv[k] = eval(v)  # ints/bools/strings from trusted CLI
+        cfg = _dc.replace(cfg, **kv)
+    shape = SHAPES_BY_NAME[shape_name]
+    api = build(cfg)
+    batch_specs, cache_specs = input_specs(cfg, shape)
+    p_sh = rules.param_shardings(api.param_specs, mesh)
+    b_sh = rules.batch_shardings(batch_specs, mesh)
+
+    if shape.kind == "train":
+        state_specs = steps.train_state_specs(api.param_specs)
+        state_sh = steps.TrainState(params=p_sh,
+                                    opt=adamw.AdamWState(
+                                        step=rules.replicated(mesh),
+                                        m=p_sh, v=p_sh),
+                                    step=rules.replicated(mesh))
+        opt_cfg = adamw.AdamWConfig()
+        fn = steps.make_train_step(api, opt_cfg)
+        return (fn, (state_specs, batch_specs), (state_sh, b_sh),
+                (state_sh, None), (0,))
+    if shape.kind == "prefill":
+        fn = steps.make_prefill_step(api)
+        return (fn, (api.param_specs, batch_specs), (p_sh, b_sh),
+                None, ())
+    # decode
+    c_sh = rules.cache_shardings(cache_specs, mesh, shape.global_batch)
+    fn = steps.make_decode_step(api)
+    return (fn, (api.param_specs, batch_specs, cache_specs),
+            (p_sh, b_sh, c_sh), (None, c_sh), (2,))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             hlo_dir: str = None, variant: str = "base") -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape_name, "variant": variant,
+           "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+           "n_devices": mesh.size}
+    t0 = time.time()
+    fn, arg_specs, in_sh, out_sh, donate = _make_fn_and_args(
+        arch, shape_name, mesh, variant)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*arg_specs)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+    ma = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["flops"] = float(ca.get("flops", 0.0))
+    rec["bytes_accessed"] = float(ca.get("bytes accessed", 0.0))
+    hlo_text = compiled.as_text()
+    if hlo_dir:
+        os.makedirs(hlo_dir, exist_ok=True)
+        vtag = "" if variant == "base" else f"__{variant.replace(':','-').replace(',','-').replace('=','-')}"
+        tag = (f"{arch}__{shape_name}__"
+               f"{'multi' if multi_pod else 'single'}{vtag}.hlo.gz")
+        with gzip.open(os.path.join(hlo_dir, tag), "wt") as f:
+            f.write(hlo_text)
+    rec["collectives"] = collective_stats(hlo_text)
+    t2 = time.time()
+    rec["analyzed"] = analyze(hlo_text)   # trip-count-weighted (see module)
+    rec["analyze_s"] = round(time.time() - t2, 2)
+    api = build(ARCHS[arch])
+    rec["num_params"] = api.num_params
+    rec["num_active_params"] = api.num_active_params
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="base",
+                    help="base | opt | knob:field=value,...")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = (list(SHAPES_BY_NAME) if (args.all or args.shape is None)
+              else [args.shape])
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    for a in archs:
+        for s in shapes:
+            if not cell_is_runnable(ARCHS[a], SHAPES_BY_NAME[s]):
+                continue
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for a, s, mp in cells:
+        vtag = ("" if args.variant == "base" else
+                "__" + args.variant.replace(":", "-").replace(",", "-")
+                .replace("=", "-"))
+        tag = f"{a}__{s}__{'multi' if mp else 'single'}{vtag}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"skip {tag}")
+            continue
+        try:
+            rec = run_cell(a, s, mp, hlo_dir=os.path.join(args.out, "hlo"),
+                           variant=args.variant)
+            status = "OK"
+        except Exception as e:  # record the failure; the suite must be green
+            rec = {"arch": a, "shape": s,
+                   "mesh": "multi" if mp else "single",
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()}
+            status = "FAIL"
+            failures += 1
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        extra = ""
+        if status == "OK":
+            gb = (rec["memory"]["argument_bytes"]
+                  + rec["memory"]["temp_bytes"]) / 2**30
+            extra = (f" lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                     f"mem/dev={gb:.1f}GiB "
+                     f"dotflops={rec['analyzed']['dot_flops']:.3g} "
+                     f"hbm={rec['analyzed']['hbm_bytes']:.3g} "
+                     f"coll={rec['analyzed']['collective_bytes']:.3g}B")
+        print(f"{status} {tag}{extra}", flush=True)
+    print(f"done: {len(cells)} cells, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

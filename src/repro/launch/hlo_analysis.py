@@ -1,0 +1,255 @@
+"""Trip-count-aware analysis of compiled HLO modules.
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE, so any scanned
+(layer-stacked) model is undercounted by ~the layer count.  This module
+re-derives roofline inputs from ``compiled.as_text()`` with correct loop
+weighting:
+
+  * dot FLOPs       2 * prod(result dims) * prod(contracting dims), per dot,
+                    weighted by the product of enclosing-loop trip counts
+                    (``known_trip_count`` from the backend config).
+  * HBM bytes       per top-level instruction: result + operand bytes
+                    (fusions as single units; in-place dynamic-update-slice
+                    fusions charged update-size, not buffer-size).
+  * collective bytes / counts   per op kind, trip-weighted; all-reduce
+                    charged 2x (ring reduce-scatter + all-gather phases).
+
+This is an approximation of a real TPU profile (fusion boundaries on the
+CPU backend differ from TPU), but loop structure, dots, and the collective
+schedule are decided before backend-specific fusion, so the big terms
+carry over.  See EXPERIMENTS.md for validation against analytic FLOPs.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\(.*?\)|\S+)\s+([\w\-]+)"
+    r"\(([^)]*)\)(.*)$")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_SIG_RE = re.compile(r"%?([\w\.\-]+)\s*:\s*([^,()]+(?:\([^)]*\))?)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+class Instr:
+    __slots__ = ("name", "type", "op", "args", "attrs")
+
+    def __init__(self, name, type_, op, args, attrs):
+        self.name = name
+        self.type = type_
+        self.op = op
+        self.args = args
+        self.attrs = attrs
+
+
+def parse_module(hlo: str):
+    """-> (computations: {name: [Instr]}, entry_name, symtab {comp: {name: type}})."""
+    comps: Dict[str, List[Instr]] = {}
+    symtab: Dict[str, Dict[str, str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in hlo.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                symtab[cur] = {}
+                if m.group(1):
+                    entry = cur
+                for pname, ptype in _SIG_RE.findall(m.group(3)):
+                    symtab[cur][pname] = ptype.strip()
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group(1), m.group(2), m.group(3), m.group(4),
+                        m.group(5))
+            comps[cur].append(ins)
+            symtab[cur][ins.name] = ins.type
+    return comps, entry, symtab
+
+
+def _multipliers(comps, entry) -> Dict[str, float]:
+    """Execution-count multiplier per computation (trip-count weighted)."""
+    mult: Dict[str, float] = {c: 0.0 for c in comps}
+    mult[entry] = 1.0
+    # callees are defined before callers; walk callers in definition order
+    order = list(comps.keys())
+    for comp in reversed(order):
+        m = mult.get(comp, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comps[comp]:
+            if ins.op == "while":
+                trips = 1
+                tm = _TRIP_RE.search(ins.attrs)
+                if tm:
+                    trips = int(tm.group(1))
+                bm = _BODY_RE.search(ins.attrs)
+                cm = _COND_RE.search(ins.attrs)
+                if bm:
+                    mult[bm.group(1)] = mult.get(bm.group(1), 0.0) + m * trips
+                if cm:
+                    mult[cm.group(1)] = mult.get(cm.group(1), 0.0) \
+                        + m * (trips + 1)
+            else:
+                for rx in (_CALLS_RE, _TO_APPLY_RE):
+                    mm = rx.search(ins.attrs)
+                    if mm:
+                        mult[mm.group(1)] = mult.get(mm.group(1), 0.0) + m
+    return mult
+
+
+def _dot_flops(ins: Instr, syms: Dict[str, str]) -> float:
+    out_dims = _shape_dims(ins.type)
+    lhs_name = ins.args.split(",")[0].strip().lstrip("%")
+    lhs_type = syms.get(lhs_name, "")
+    lhs_dims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.attrs)
+    contract = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                contract *= lhs_dims[int(idx)]
+    n = 1
+    for d in out_dims:
+        n *= d
+    return 2.0 * n * contract
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "conditional", "call",
+                   "after-all", "iota"}
+
+
+def analyze(hlo: str) -> dict:
+    comps, entry, symtab = parse_module(hlo)
+    mult = _multipliers(comps, entry)
+    fusion_root: Dict[str, str] = {}
+    for cname, instrs in comps.items():
+        if instrs:
+            fusion_root[cname] = instrs[-1].op
+
+    dot_flops = 0.0
+    hbm_bytes = 0.0       # every top-level instruction's I/O (CPU-fusion
+                          # granularity; upper bound for a TPU)
+    tpu_bytes = 0.0       # dot/scatter/gather/DUS/copy/collective I/O only
+                          # (assumes XLA-TPU fuses all elementwise chains)
+    by_op: Dict[str, float] = {}
+    coll: Dict[str, dict] = {}
+    # fused computations are charged through their fusion instruction for
+    # bytes, but their dots count at the fusion's multiplier
+    fused_names = set()
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            cm = _CALLS_RE.search(ins.attrs)
+            if ins.op == "fusion" and cm:
+                fused_names.add(cm.group(1))
+
+    for cname, instrs in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        syms = symtab[cname]
+        in_fused = cname in fused_names
+        for ins in instrs:
+            if ins.op == "dot":
+                dot_flops += m * _dot_flops(ins, syms)
+            if ins.op in COLLECTIVES or (
+                    ins.op.endswith("-start")
+                    and ins.op[:-6] in COLLECTIVES):
+                op = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+                nbytes = type_bytes(ins.type)
+                if op == "all-reduce":
+                    nbytes *= 2
+                e = coll.setdefault(op, {"count": 0.0, "bytes": 0.0})
+                e["count"] += m
+                e["bytes"] += m * nbytes
+            if in_fused or ins.op in _SKIP_BYTES_OPS:
+                continue
+            # HBM traffic estimate
+            operand_names = [a.strip().lstrip("%")
+                             for a in ins.args.split(",") if a.strip()]
+            op_bytes = [type_bytes(syms.get(nm, "")) for nm in operand_names]
+            res = type_bytes(ins.type)
+            if ins.op == "dynamic-update-slice":
+                upd = op_bytes[1] if len(op_bytes) > 1 else 0
+                hbm_bytes += m * 2 * upd
+                tpu_bytes += m * 2 * upd
+                by_op["dus"] = by_op.get("dus", 0.0) + m * 2 * upd
+                continue
+            root = None
+            if ins.op == "fusion":
+                cm = _CALLS_RE.search(ins.attrs)
+                root = fusion_root.get(cm.group(1)) if cm else None
+            if root == "dynamic-update-slice" and op_bytes:
+                big = max(op_bytes)
+                b = m * (2 * (sum(op_bytes) - big))
+                hbm_bytes += b
+                tpu_bytes += b
+                by_op["dus"] = by_op.get("dus", 0.0) + b
+                continue
+            b = m * (res + sum(op_bytes))
+            hbm_bytes += b
+            if (ins.op in ("dot", "scatter", "gather", "copy",
+                           "dynamic-slice")
+                    or ins.op in COLLECTIVES or ins.op.endswith("-start")):
+                tpu_bytes += b
+                key = "dot" if ins.op == "dot" else ins.op
+                by_op[key] = by_op.get(key, 0.0) + b
+
+    coll_total = sum(v["bytes"] for v in coll.values())
+    return {
+        "dot_flops": dot_flops,
+        "hbm_bytes": hbm_bytes,
+        "tpu_bytes": tpu_bytes,
+        "bytes_by_op": by_op,
+        "collectives": coll,
+        "collective_bytes": coll_total,
+        "n_computations": len(comps),
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    with open(sys.argv[1]) as f:
+        print(json.dumps(analyze(f.read()), indent=1))

@@ -1,0 +1,37 @@
+"""Production mesh definitions.
+
+A TPU v5e pod is modeled as 256 chips in a (16, 16) ("data", "model")
+mesh; the multi-pod configuration stacks 2 pods on a leading "pod" axis
+(data-parallel across DCN).  Functions, not module constants: importing
+this module never touches jax device state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) != need:
+        assert len(devices) >= need, (
+            f"need {need} devices, have {len(devices)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
+        devices = devices[:need]
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    import numpy as np
+    devices = jax.devices()
+    n = len(devices)
+    data = n // model_axis
+    return jax.sharding.Mesh(
+        np.asarray(devices[: data * model_axis]).reshape(data, model_axis),
+        ("data", "model"))

@@ -1,0 +1,7 @@
+"""LM substrate: six model families behind one ModelAPI."""
+from . import attention, common, dense, encdec, model_zoo, moe, rwkv, ssm, vlm
+from .model_zoo import ModelAPI, build, init_params, input_specs
+
+__all__ = ["ModelAPI", "build", "init_params", "input_specs", "attention",
+           "common", "dense", "encdec", "model_zoo", "moe", "rwkv", "ssm",
+           "vlm"]

@@ -1,0 +1,302 @@
+"""GQA attention: chunked (flash-style in XLA) prefill/train + cached decode.
+
+Long sequences never materialize the (S, S) score matrix: queries and keys
+are processed in (chunk_q, chunk_kv) blocks with an online-softmax
+accumulator carried through ``lax.scan`` -- the XLA analogue of flash
+attention, and the natural lowering target for a future Pallas port.
+Head dims stay intact through every einsum so a 'model'-sharded head axis
+induces no collectives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import COMPUTE_DTYPE, apply_rope, cast, dense, rope_angles
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, KV, hd)
+    v: jax.Array          # (B, S_max, KV, hd)
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _chunk_qkv(q, k, v, chunk_q, chunk_kv):
+    b, sq, h, hd = q.shape
+    _, skv, kvh, _ = k.shape
+    g = h // kvh
+    nq, nk = sq // chunk_q, skv // chunk_kv
+    # blocks in (B, KV, G, C, hd) layout, chunk index leading for scan
+    qc = q.reshape(b, nq, chunk_q, kvh, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    kc = k.reshape(b, nk, chunk_kv, kvh, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, nk, chunk_kv, kvh, hd).transpose(1, 0, 3, 2, 4)
+    return qc, kc, vc, (b, kvh, g, nq, nk)
+
+
+def _scores(qblk, kblk, scale, causal, qpos, kpos):
+    """(B, KV, G, Cq, Ckv) masked logits block, fp32."""
+    s = jax.lax.dot_general(
+        cast(qblk), cast(kblk), (((4,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32) * scale
+    if causal:
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    return s
+
+
+def _flash_fwd(q, k, v, causal, chunk_q, chunk_kv, q_offset):
+    """Returns (out (B,Sq,H,hd), lse (B,KV,G,Sq))."""
+    b, sq, h, hd = q.shape
+    scale = hd ** -0.5
+    qc, kc, vc, (_, kvh, g, nq, nk) = _chunk_qkv(q, k, v, chunk_q, chunk_kv)
+
+    def q_step(_, qi):
+        qblk, iq = qi                       # (B, KV, G, Cq, hd)
+        qpos = q_offset + iq * chunk_q + jnp.arange(chunk_q)
+
+        def kv_step(carry, kj):
+            m, l, acc = carry
+            kblk, vblk, jk = kj
+            kpos = jk * chunk_kv + jnp.arange(chunk_kv)
+            s = _scores(qblk, kblk, scale, causal, qpos, kpos)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jax.lax.dot_general(      # (B, KV, G, Cq, hd)
+                p.astype(COMPUTE_DTYPE), cast(vblk),
+                (((4,), (2,)), ((0, 1), (0, 1))),
+                preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, chunk_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, chunk_q), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, chunk_q, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kc, vc, jnp.arange(nk)))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(COMPUTE_DTYPE)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return None, (out, lse)
+
+    _, (out, lse) = jax.lax.scan(q_step, None, (qc, jnp.arange(nq)))
+    # out: (nq, B, KV, G, Cq, hd) -> (B, Sq, H, hd)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hd)
+    lse = lse.transpose(1, 2, 3, 0, 4).reshape(b, kvh, g, sq)
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, dout, causal, chunk_q, chunk_kv,
+                    q_offset):
+    """Standard flash backward: recompute p blockwise.
+
+    dq accumulates along the q-chunk scan (emitted as ys); dk/dv are
+    full-size fp32 carries updated chunk-in-place.
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    scale = hd ** -0.5
+    qc, kc, vc, (_, _, g, nq, nk) = _chunk_qkv(q, k, v, chunk_q, chunk_kv)
+    doc = dout.reshape(b, nq, chunk_q, kvh, g, hd).transpose(1, 0, 3, 4, 2, 5)
+    lsec = lse.reshape(b, kvh, g, nq, chunk_q).transpose(3, 0, 1, 2, 4)
+    outc = out.reshape(b, nq, chunk_q, kvh, g, hd).transpose(1, 0, 3, 4, 2, 5)
+
+    def q_step(carry, xs):
+        dk_all, dv_all = carry               # (nk, B, KV, Ckv, hd) fp32
+        qblk, dblk, oblk, lseb, iq = xs
+        qpos = q_offset + iq * chunk_q + jnp.arange(chunk_q)
+        delta = jnp.sum(dblk.astype(jnp.float32)
+                        * oblk.astype(jnp.float32), axis=-1)  # (B,KV,G,Cq)
+
+        def kv_step(inner, kj):
+            dq_acc, dk_all, dv_all = inner
+            kblk, vblk, jk = kj
+            kpos = jk * chunk_kv + jnp.arange(chunk_kv)
+            s = _scores(qblk, kblk, scale, causal, qpos, kpos)
+            p = jnp.exp(s - lseb[..., None])                  # (B,KV,G,Cq,Ckv)
+            dp = jax.lax.dot_general(                         # dout @ v^T
+                dblk.astype(COMPUTE_DTYPE), cast(vblk),
+                (((4,), (3,)), ((0, 1), (0, 1))),
+                preferred_element_type=jnp.float32)
+            ds = p * (dp - delta[..., None])                  # fp32
+            dsc = ds.astype(COMPUTE_DTYPE)
+            dq_acc = dq_acc + jax.lax.dot_general(            # ds @ k
+                dsc, cast(kblk), (((4,), (2,)), ((0, 1), (0, 1))),
+                preferred_element_type=jnp.float32) * scale
+            dk_blk = jax.lax.dot_general(                     # ds^T @ q
+                dsc, cast(qblk),
+                (((3,), (3,)), ((0, 1, 2), (0, 1, 2))),
+                preferred_element_type=jnp.float32) * scale   # (B,KV,G,Ckv,hd)
+            dv_blk = jax.lax.dot_general(                     # p^T @ dout
+                p.astype(COMPUTE_DTYPE), dblk.astype(COMPUTE_DTYPE),
+                (((3,), (3,)), ((0, 1, 2), (0, 1, 2))),
+                preferred_element_type=jnp.float32)
+            dk_all = dk_all.at[jk].add(dk_blk.sum(axis=2))    # sum G
+            dv_all = dv_all.at[jk].add(dv_blk.sum(axis=2))
+            return (dq_acc, dk_all, dv_all), None
+
+        dq0 = jnp.zeros((b, kvh, g, chunk_q, hd), jnp.float32)
+        (dq_acc, dk_all, dv_all), _ = jax.lax.scan(
+            kv_step, (dq0, dk_all, dv_all), (kc, vc, jnp.arange(nk)))
+        return (dk_all, dv_all), dq_acc
+
+    dk0 = jnp.zeros((nk, b, kvh, chunk_kv, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, b, kvh, chunk_kv, hd), jnp.float32)
+    (dk_all, dv_all), dq = jax.lax.scan(
+        q_step, (dk0, dv0), (qc, doc, outc, lsec, jnp.arange(nq)))
+    # dq: (nq, B, KV, G, Cq, hd) -> (B, Sq, H, hd)
+    dq = dq.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, hd)
+    dk = dk_all.transpose(1, 0, 3, 2, 4).reshape(b, skv, kvh, hd)
+    dv = dv_all.transpose(1, 0, 3, 2, 4).reshape(b, skv, kvh, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, chunk_q, chunk_kv, q_offset):
+    return _flash_fwd(q, k, v, causal, chunk_q, chunk_kv, q_offset)[0]
+
+
+def _flash_vjp_fwd(q, k, v, causal, chunk_q, chunk_kv, q_offset):
+    out, lse = _flash_fwd(q, k, v, causal, chunk_q, chunk_kv, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, chunk_q, chunk_kv, q_offset, res, dout):
+    q, k, v, out, lse = res
+    return _flash_bwd_impl(q, k, v, out, lse, dout, causal, chunk_q,
+                           chunk_kv, q_offset)
+
+
+_flash.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool, chunk_q: int, chunk_kv: int,
+                      q_offset: int = 0) -> jax.Array:
+    """Flash attention in XLA: q (B, Sq, H, hd); k, v (B, Skv, KV, hd).
+
+    Never materializes (Sq, Skv); backward recomputes probability blocks
+    (custom VJP), so autodiff stores only (q, k, v, out, lse).
+    """
+    import math
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    chunk_q = math.gcd(min(chunk_q, sq), sq)
+    chunk_kv = math.gcd(min(chunk_kv, skv), skv)
+    return _flash(q, k, v, causal, chunk_q, chunk_kv, q_offset)
+
+
+def decode_attention(q: jax.Array, cache: KVCache, pos: jax.Array
+                     ) -> jax.Array:
+    """One-token attention against a cache: q (B, 1, H, hd), pos scalar.
+
+    Positions > pos are masked; the current token must already be written.
+    """
+    b, _, h, hd = q.shape
+    _, smax, kvh, _ = cache.k.shape
+    g = h // kvh
+    qh = cast(q).reshape(b, kvh, g, hd)
+    s = jax.lax.dot_general(               # (B, KV, G, Smax)
+        qh, cast(cache.k).transpose(0, 2, 1, 3),
+        (((3,), (3,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32) * hd ** -0.5
+    mask = jnp.arange(smax) <= pos
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(COMPUTE_DTYPE)
+    out = jax.lax.dot_general(             # (B, KV, G, hd)
+        p, cast(cache.v).transpose(0, 2, 1, 3),
+        (((3,), (2,)), ((0, 1), (0, 1))),
+        preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(COMPUTE_DTYPE)
+
+
+def attention(x: jax.Array, p: dict, *, n_heads: int, n_kv_heads: int,
+              head_dim: int, rope_theta: Optional[float], causal: bool,
+              chunk_q: int, chunk_kv: int,
+              memory: Optional[jax.Array] = None,
+              cache: Optional[KVCache] = None,
+              pos: Optional[jax.Array] = None,
+              return_cache: bool = False,
+              bf16_wire: bool = False,
+              replicate_heads: bool = False,
+              ) -> Tuple[jax.Array, Optional[KVCache]]:
+    """Unified attention block over params {wq, wk, wv, wo [, bq, bk, bv]}.
+
+    - self-attn train/prefill: memory=None, cache=None
+    - cross-attn: memory = encoder/image states (keys/values source)
+    - decode: cache + pos given; x is the (B, 1, d) current token
+    """
+    b, sq, _ = x.shape
+    kv_src = x if memory is None else memory
+    q = _split_heads(dense(x, p["wq"], p.get("bq")), n_heads, head_dim)
+
+    if cache is not None and memory is not None:
+        # cross-attn during decode: cache holds the projected memory
+        k_all, v_all = cache.k, cache.v
+        out = decode_attention(q, KVCache(k_all, v_all),
+                               jnp.asarray(k_all.shape[1] - 1))
+        return dense(out.reshape(b, sq, -1), p["wo"],
+                     bf16_wire=bf16_wire), cache
+
+    k = _split_heads(dense(kv_src, p["wk"], p.get("bk")), n_kv_heads, head_dim)
+    v = _split_heads(dense(kv_src, p["wv"], p.get("bv")), n_kv_heads, head_dim)
+
+    if cache is not None:                          # self-attn decode
+        assert pos is not None
+        angles = rope_angles(pos[None], head_dim, rope_theta) \
+            if rope_theta else None
+        if angles is not None:
+            q = apply_rope(q, angles)
+            k = apply_rope(k, angles)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, cast(k), pos,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, cast(v), pos,
+                                                      axis=1)
+        new_cache = KVCache(k_cache, v_cache)
+        out = decode_attention(q, new_cache, pos)
+        return dense(out.reshape(b, sq, -1), p["wo"],
+                     bf16_wire=bf16_wire), new_cache
+
+    if rope_theta and memory is None:
+        angles = rope_angles(jnp.arange(sq), head_dim, rope_theta)
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+
+    if replicate_heads:
+        from repro.parallel.constraints import BATCH, constrain
+        q = constrain(q, BATCH, None, None, None)
+        k = constrain(k, BATCH, None, None, None)
+        v = constrain(v, BATCH, None, None, None)
+    out = chunked_attention(q, k, v, causal=causal, chunk_q=chunk_q,
+                            chunk_kv=chunk_kv)
+    out = dense(out.reshape(b, sq, -1), p["wo"], bf16_wire=bf16_wire)
+    if return_cache:
+        return out, KVCache(cast(k), cast(v))
+    return out, None
+
+
+def attn_param_specs(d_model: int, n_heads: int, n_kv_heads: int,
+                     head_dim: int, qkv_bias: bool = False,
+                     prefix_shape: Tuple[int, ...] = ()) -> dict:
+    from .common import spec
+    ps = prefix_shape
+    p = {
+        "wq": spec(*ps, d_model, n_heads * head_dim),
+        "wk": spec(*ps, d_model, n_kv_heads * head_dim),
+        "wv": spec(*ps, d_model, n_kv_heads * head_dim),
+        "wo": spec(*ps, n_heads * head_dim, d_model),
+    }
+    if qkv_bias:
+        p["bq"] = spec(*ps, n_heads * head_dim)
+        p["bk"] = spec(*ps, n_kv_heads * head_dim)
+        p["bv"] = spec(*ps, n_kv_heads * head_dim)
+    return p

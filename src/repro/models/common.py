@@ -1,0 +1,114 @@
+"""Shared model building blocks (pure JAX, no framework dependency).
+
+Parameters are nested dicts of arrays.  Each model module defines
+``param_specs(cfg)`` returning the same pytree with ShapeDtypeStructs, which
+drives (a) real initialization for smoke tests / training, and (b)
+allocation-free lowering for the multi-pod dry-run.
+
+Compute policy: parameters are stored fp32 (canonical/master), cast to bf16
+at use; matmuls accumulate fp32 via ``preferred_element_type``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+COMPUTE_DTYPE = jnp.bfloat16
+PARAM_DTYPE = jnp.float32
+
+
+def spec(*shape, dtype=PARAM_DTYPE) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def init_from_specs(specs: PyTree, key: jax.Array) -> PyTree:
+    """Initialize a parameter pytree from its spec pytree.
+
+    Leaf-name heuristics: '*norm*'/'*scale*' -> ones; '*bias*' -> zeros;
+    everything else truncated-normal with fan-in scaling.
+    """
+    leaves, treedef = jax.tree.flatten_with_path(specs)
+    keys = jax.random.split(key, len(leaves))
+
+    def init_leaf(path, s, k):
+        name = "/".join(str(getattr(p, "key", p)) for p in path).lower()
+        if "norm" in name or name.endswith("scale") or "/g_" in name:
+            return jnp.ones(s.shape, s.dtype)
+        if "bias" in name or name.endswith("_b") or "decay0" in name:
+            return jnp.zeros(s.shape, s.dtype)
+        fan_in = s.shape[-2] if len(s.shape) >= 2 else s.shape[-1]
+        std = min(0.02, fan_in ** -0.5)
+        return (jax.random.truncated_normal(k, -3, 3, s.shape, jnp.float32)
+                * std).astype(s.dtype)
+
+    inited = [init_leaf(p, s, k) for (p, s), k in zip(leaves, keys)]
+    return jax.tree.unflatten(jax.tree.structure(specs), inited)
+
+
+def cast(x: jax.Array, dtype=COMPUTE_DTYPE) -> jax.Array:
+    return x.astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def dense(x: jax.Array, w: jax.Array, b=None,
+          bf16_wire: bool = False) -> jax.Array:
+    """x @ w in bf16 with fp32 accumulation; x: (..., d_in), w: (d_in, d_out).
+
+    ``bf16_wire``: emit bf16 from the dot itself so a GSPMD partial-sum
+    all-reduce (row-parallel weights) moves bf16, not fp32.  MXU hardware
+    accumulation is fp32 either way; only the wire/HBM format changes.
+    """
+    pet = COMPUTE_DTYPE if bf16_wire else jnp.float32
+    y = jax.lax.dot_general(
+        cast(x), cast(w), (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=pet)
+    if b is not None:
+        y = (y.astype(jnp.float32) + b.astype(jnp.float32))
+    return y.astype(COMPUTE_DTYPE)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float
+                ) -> jax.Array:
+    """(..., head_dim//2) rotation angles for given integer positions."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                             / head_dim))
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); angles: (B, S, hd//2) or (S, hd//2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if angles.ndim == 2:
+        angles = angles[None]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w1, w3, w2, bf16_wire: bool = False) -> jax.Array:
+    """LLaMA-style gated MLP: (silu(x@w1) * (x@w3)) @ w2."""
+    return dense(jax.nn.silu(dense(x, w1).astype(jnp.float32)).astype(
+        COMPUTE_DTYPE) * dense(x, w3), w2, bf16_wire=bf16_wire)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token CE; logits (..., V) fp32-safe, labels (...) int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def count_params(specs: PyTree) -> int:
+    import math
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(specs))

@@ -1,0 +1,209 @@
+"""Dense decoder-only LM (llama lineage: granite, stablelm, qwen2.5).
+
+Layers are stacked along a leading L axis and driven by ``lax.scan`` so the
+HLO is O(1) in depth (essential to compile 94-layer configs quickly), with
+optional rematerialization of the scan body.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .attention import KVCache, attention, attn_param_specs
+from .common import (COMPUTE_DTYPE, cast, dense, rms_norm,
+                     softmax_cross_entropy, spec, swiglu)
+from repro.parallel.constraints import BATCH, MODEL, constrain
+
+
+def layer_param_specs(cfg: ModelConfig, n_layers: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "attn_norm": spec(n_layers, d),
+        "attn": attn_param_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                 cfg.qkv_bias, prefix_shape=(n_layers,)),
+        "mlp_norm": spec(n_layers, d),
+        "w1": spec(n_layers, d, f),
+        "w3": spec(n_layers, d, f),
+        "w2": spec(n_layers, f, d),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": spec(cfg.vocab_padded, cfg.d_model),
+        "layers": layer_param_specs(cfg, cfg.n_layers),
+        "final_norm": spec(cfg.d_model),
+        "lm_head": spec(cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def constrain_residual(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Pin the residual stream's sharding at block boundaries.
+
+    'replicated': (batch, None, None) -- the canonical Megatron layout;
+    kills GSPMD's drift into feature-sharded residuals (which forces an
+    fp32 activation all-reduce after EVERY projection, see EXPERIMENTS.md
+    Perf).  'seq': (batch, model, None) -- Megatron sequence parallelism;
+    the pair AR(fp32) collapses into RS + bf16 AG at block edges.
+    """
+    if cfg.residual_sharding == "replicated" and x.ndim == 3:
+        return constrain(x, BATCH, None, None)
+    if cfg.residual_sharding == "seq" and x.ndim == 3:
+        return constrain(x, BATCH, MODEL, None)
+    return x
+
+
+def _layer(x: jax.Array, lp: dict, cfg: ModelConfig, *, causal: bool = True,
+           cache: Optional[KVCache] = None, pos=None,
+           return_cache: bool = False) -> Tuple[jax.Array, Optional[KVCache]]:
+    if cfg.gather_weights:
+        from repro.parallel.rules import constrain_compute
+        lp = constrain_compute(lp)
+    x = constrain_residual(x, cfg)
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    if cfg.residual_sharding == "seq":
+        h = constrain(h, BATCH, None, None)   # gather S for attention
+    a, new_cache = attention(
+        h, lp["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, rope_theta=cfg.rope_theta, causal=causal,
+        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        cache=cache, pos=pos, return_cache=return_cache,
+        bf16_wire=cfg.bf16_reduce, replicate_heads=cfg.attn_replicate)
+    x = x + a
+    x = constrain_residual(x, cfg)
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    x = x + swiglu(h, lp["w1"], lp["w3"], lp["w2"],
+                   bf16_wire=cfg.bf16_reduce)
+    return x, new_cache
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return constrain(cast(params["embed"][tokens]), BATCH, None, None)
+
+
+def lm_logits(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = constrain(x, BATCH, None, None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return constrain(dense(x, params["lm_head"]), BATCH, None, MODEL)
+
+
+def lm_loss(params: dict, x: jax.Array, labels: jax.Array,
+            cfg: ModelConfig) -> jax.Array:
+    """Final-norm + head + CE.
+
+    With ``cfg.ce_chunked`` > 0 the (B, S, V) logits tensor is never
+    materialized: sequence chunks are projected, reduced to (lse,
+    label-logit) pairs, and rematerialized in the backward pass -- the
+    memory-term optimization logged in EXPERIMENTS.md Perf.
+    """
+    if not cfg.ce_chunked:
+        return softmax_cross_entropy(lm_logits(params, x, cfg), labels)
+    x = constrain(x, BATCH, None, None)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    b, s, d = x.shape
+    import math
+    chunk = math.gcd(cfg.ce_chunked, s)
+    nc = s // chunk
+    xc = x.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    head = cast(params["lm_head"])
+
+    @jax.checkpoint
+    def body(acc, xs):
+        xb, lb = xs
+        logits = jax.lax.dot_general(
+            cast(xb), head, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        logits = constrain(logits, BATCH, None, MODEL)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - ll), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), (xc, lc))
+    return total / (b * s)
+
+
+def maybe_cast_stack(tree, cfg: ModelConfig):
+    """bf16-cast stacked layer params before the scan so FSDP
+    all-gathers move bf16, not fp32 (collective-term optimization)."""
+    if not cfg.cast_params_before_scan:
+        return tree
+    return jax.tree.map(
+        lambda p: cast(p) if p.dtype == jnp.float32 and p.ndim >= 2 else p,
+        tree)
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence causal forward -> (B, S, V) logits (train path)."""
+    x = embed(params, tokens)
+
+    def body(h, lp):
+        h, _ = _layer(h, lp, cfg)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return lm_logits(params, x, cfg)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    x = embed(params, batch["tokens"])
+
+    def body(h, lp):
+        h, _ = _layer(h, lp, cfg)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, maybe_cast_stack(params["layers"], cfg))
+    return lm_loss(params, x, batch["labels"], cfg)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> KVCache:
+    shape = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(spec(*shape, dtype=COMPUTE_DTYPE),
+                   spec(*shape, dtype=COMPUTE_DTYPE))
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> KVCache:
+    s = cache_specs(cfg, batch, seq_len)
+    return KVCache(jnp.zeros(s.k.shape, s.k.dtype),
+                   jnp.zeros(s.v.shape, s.v.dtype))
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, KVCache]:
+    """Run the prompt; returns last-position logits + stacked KV caches."""
+    x = embed(params, tokens)
+
+    def body(h, lp):
+        h, kv = _layer(h, lp, cfg, return_cache=True)
+        return h, kv
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    logits = lm_logits(params, x[:, -1:, :], cfg)
+    return logits, caches
+
+
+def decode_step(params: dict, token: jax.Array, pos: jax.Array,
+                cache: KVCache, cfg: ModelConfig
+                ) -> Tuple[jax.Array, KVCache]:
+    """One decode step. token: (B,) int32; pos: scalar int32;
+    cache: stacked (L, B, S_max, KV, hd)."""
+    x = embed(params, token[:, None])
+
+    def body(h, lp_kv):
+        lp, k_l, v_l = lp_kv
+        h, new_kv = _layer(h, lp, cfg, cache=KVCache(k_l, v_l), pos=pos)
+        return h, new_kv
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    logits = lm_logits(params, x, cfg)
+    return logits, KVCache(new_caches.k, new_caches.v)

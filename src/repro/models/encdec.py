@@ -1,0 +1,176 @@
+"""Encoder-decoder backbone (seamless-m4t-large-v2).
+
+Assigned as the transformer backbone only: the speech frontend is a stub,
+so the encoder consumes precomputed frame embeddings (B, S_src, d) from
+``input_specs``.  Decoder layers carry self-attention (causal, cached at
+decode) and cross-attention (keys/values from the encoder output,
+precomputed into a cache at prefill).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .attention import KVCache, attention, attn_param_specs, decode_attention
+from .common import (COMPUTE_DTYPE, cast, dense, rms_norm,
+                     softmax_cross_entropy, spec, swiglu)
+from .dense import lm_logits
+from repro.parallel.constraints import BATCH, constrain
+
+
+class EncDecCache(NamedTuple):
+    self_kv: KVCache     # (L, B, S_max, KV, hd)
+    cross_kv: KVCache    # (L, B, S_src, KV, hd)
+
+
+def _mlp_specs(cfg: ModelConfig, n: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {"mlp_norm": spec(n, d), "w1": spec(n, d, f),
+            "w3": spec(n, d, f), "w2": spec(n, f, d)}
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    ne, nd = cfg.n_enc_layers, cfg.n_layers
+    enc = {
+        "attn_norm": spec(ne, d),
+        "attn": attn_param_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                 prefix_shape=(ne,)),
+        **_mlp_specs(cfg, ne),
+    }
+    dec = {
+        "attn_norm": spec(nd, d),
+        "attn": attn_param_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                 prefix_shape=(nd,)),
+        "cross_norm": spec(nd, d),
+        "cross": attn_param_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                  prefix_shape=(nd,)),
+        **_mlp_specs(cfg, nd),
+    }
+    return {
+        "enc_in_norm": spec(d),
+        "enc_layers": enc,
+        "enc_out_norm": spec(d),
+        "embed": spec(cfg.vocab_padded, d),
+        "dec_layers": dec,
+        "final_norm": spec(d),
+        "lm_head": spec(d, cfg.vocab_padded),
+    }
+
+
+def encode(params, src_embed: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """src_embed: (B, S_src, d) stub frontend output -> encoder states."""
+    x = constrain(cast(src_embed), BATCH, None, None)
+    x = rms_norm(x, params["enc_in_norm"], cfg.norm_eps)
+
+    def body(h, lp):
+        a, _ = attention(
+            rms_norm(h, lp["attn_norm"], cfg.norm_eps), lp["attn"],
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+            rope_theta=cfg.rope_theta, causal=False,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv)
+        h = h + a
+        h = h + swiglu(rms_norm(h, lp["mlp_norm"], cfg.norm_eps),
+                       lp["w1"], lp["w3"], lp["w2"])
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return rms_norm(x, params["enc_out_norm"], cfg.norm_eps)
+
+
+def _dec_layer(x, lp, cfg: ModelConfig, memory=None, self_cache=None,
+               cross_cache=None, pos=None, return_cache=False):
+    a, new_self = attention(
+        rms_norm(x, lp["attn_norm"], cfg.norm_eps), lp["attn"],
+        n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.hd,
+        rope_theta=cfg.rope_theta, causal=True, chunk_q=cfg.attn_chunk_q,
+        chunk_kv=cfg.attn_chunk_kv, cache=self_cache, pos=pos,
+        return_cache=return_cache)
+    x = x + a
+    h = rms_norm(x, lp["cross_norm"], cfg.norm_eps)
+    if cross_cache is not None:          # decode: precomputed memory K/V
+        b = h.shape[0]
+        q = dense(h, lp["cross"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+        o = decode_attention(q, cross_cache,
+                             jnp.int32(cross_cache.k.shape[1] - 1))
+        x = x + dense(o.reshape(b, 1, -1), lp["cross"]["wo"])
+        new_cross = cross_cache
+    else:                                # train/prefill: full cross-attn
+        o, new_cross = attention(
+            h, lp["cross"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=None, causal=False,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+            memory=memory, return_cache=return_cache)
+        x = x + o
+    x = x + swiglu(rms_norm(x, lp["mlp_norm"], cfg.norm_eps),
+                   lp["w1"], lp["w3"], lp["w2"])
+    return x, new_self, new_cross
+
+
+def forward(params, src_embed, tokens, cfg: ModelConfig) -> jax.Array:
+    memory = encode(params, src_embed, cfg)
+    x = cast(params["embed"][tokens])
+
+    def body(h, lp):
+        h, _, _ = _dec_layer(h, lp, cfg, memory=memory)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_layers"])
+    return lm_logits(params, x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig) -> jax.Array:
+    logits = forward(params, batch["src_embed"], batch["tokens"], cfg)
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, src_embed, tokens, cfg: ModelConfig
+            ) -> Tuple[jax.Array, EncDecCache]:
+    memory = encode(params, src_embed, cfg)
+    x = cast(params["embed"][tokens])
+
+    def body(h, lp):
+        h, skv, ckv = _dec_layer(h, lp, cfg, memory=memory,
+                                 return_cache=True)
+        return h, (skv, ckv)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, (skv, ckv) = jax.lax.scan(body, x, params["dec_layers"])
+    return (lm_logits(params, x[:, -1:, :], cfg),
+            EncDecCache(KVCache(*skv), KVCache(*ckv)))
+
+
+def decode_step(params, token, pos, cache: EncDecCache, cfg: ModelConfig):
+    x = cast(params["embed"][token[:, None]])
+
+    def body(h, xs):
+        lp, sk, sv, ck, cv = xs
+        h, new_self, _ = _dec_layer(h, lp, cfg, self_cache=KVCache(sk, sv),
+                                    cross_cache=KVCache(ck, cv), pos=pos)
+        return h, new_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_layers"], cache.self_kv.k, cache.self_kv.v,
+                  cache.cross_kv.k, cache.cross_kv.v))
+    return (lm_logits(params, x, cfg),
+            EncDecCache(KVCache(*new_self), cache.cross_kv))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int, src_len: int
+                ) -> EncDecCache:
+    L = cfg.n_layers
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return EncDecCache(
+        KVCache(spec(L, batch, seq_len, kv, hd, dtype=COMPUTE_DTYPE),
+                spec(L, batch, seq_len, kv, hd, dtype=COMPUTE_DTYPE)),
+        KVCache(spec(L, batch, src_len, kv, hd, dtype=COMPUTE_DTYPE),
+                spec(L, batch, src_len, kv, hd, dtype=COMPUTE_DTYPE)))

@@ -1,0 +1,151 @@
+"""Unified model API across the six families.
+
+``build(cfg)`` returns a ``ModelAPI`` whose three entry points take a
+``batch`` dict (and a cache/state pytree for decode), hiding family
+differences from the training loop, the serving loop, and the dry-run:
+
+  train:   batch = {tokens, labels [, src_embed | img_embed]}
+  prefill: batch = {tokens [, src_embed | img_embed]}
+  decode:  batch = {token (B,), pos ()} + cache pytree
+
+``input_specs`` produces ShapeDtypeStructs for every input of an assigned
+(arch x shape) cell, allocation-free, for ``.lower().compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+from . import dense, encdec, moe, rwkv, ssm, vlm
+from .common import COMPUTE_DTYPE, count_params, init_from_specs, spec
+
+# Fixed stub lengths for modality frontends at decode time (DESIGN.md).
+ENCDEC_DECODE_SRC_LEN = 4096
+
+
+class ModelAPI(NamedTuple):
+    cfg: ModelConfig
+    param_specs: Any
+    loss: Callable          # (params, batch) -> scalar
+    prefill: Callable       # (params, batch) -> (logits, cache)
+    decode: Callable        # (params, batch, cache) -> (logits, cache)
+    cache_specs: Callable   # (batch_size, seq_len) -> pytree | None
+    num_params: int
+    num_active_params: int  # = num_params for non-MoE
+
+
+def _moe_active_params(cfg: ModelConfig, total: int) -> int:
+    """Parameters touched per token: experts count only top_k of n_experts."""
+    per_expert = 3 * cfg.d_model * cfg.d_expert
+    all_experts = cfg.n_layers * cfg.n_experts * per_expert
+    active_experts = cfg.n_layers * cfg.top_k * per_expert
+    return total - all_experts + active_experts
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam == "dense":
+        specs = dense.param_specs(cfg)
+        api = ModelAPI(
+            cfg, specs,
+            loss=lambda p, b: dense.loss_fn(p, b, cfg),
+            prefill=lambda p, b: dense.prefill(p, b["tokens"], cfg),
+            decode=lambda p, b, c: dense.decode_step(
+                p, b["token"], b["pos"], c, cfg),
+            cache_specs=lambda bs, sl: dense.cache_specs(cfg, bs, sl),
+            num_params=count_params(specs), num_active_params=0)
+    elif fam == "moe":
+        specs = moe.param_specs(cfg)
+        api = ModelAPI(
+            cfg, specs,
+            loss=lambda p, b: moe.loss_fn(p, b, cfg),
+            prefill=lambda p, b: moe.prefill(p, b["tokens"], cfg),
+            decode=lambda p, b, c: moe.decode_step(
+                p, b["token"], b["pos"], c, cfg),
+            cache_specs=lambda bs, sl: moe.cache_specs(cfg, bs, sl),
+            num_params=count_params(specs), num_active_params=0)
+    elif fam == "encdec":
+        specs = encdec.param_specs(cfg)
+        api = ModelAPI(
+            cfg, specs,
+            loss=lambda p, b: encdec.loss_fn(p, b, cfg),
+            prefill=lambda p, b: encdec.prefill(
+                p, b["src_embed"], b["tokens"], cfg),
+            decode=lambda p, b, c: encdec.decode_step(
+                p, b["token"], b["pos"], c, cfg),
+            cache_specs=lambda bs, sl: encdec.cache_specs(
+                cfg, bs, sl, ENCDEC_DECODE_SRC_LEN),
+            num_params=count_params(specs), num_active_params=0)
+    elif fam == "vlm":
+        specs = vlm.param_specs(cfg)
+        api = ModelAPI(
+            cfg, specs,
+            loss=lambda p, b: vlm.loss_fn(p, b, cfg),
+            prefill=lambda p, b: vlm.prefill(
+                p, b["tokens"], b["img_embed"], cfg),
+            decode=lambda p, b, c: vlm.decode_step(
+                p, b["token"], b["pos"], c, cfg),
+            cache_specs=lambda bs, sl: vlm.cache_specs(cfg, bs, sl),
+            num_params=count_params(specs), num_active_params=0)
+    elif fam == "rwkv":
+        specs = rwkv.param_specs(cfg)
+        api = ModelAPI(
+            cfg, specs,
+            loss=lambda p, b: rwkv.loss_fn(p, b, cfg),
+            prefill=lambda p, b: rwkv.prefill(p, b["tokens"], cfg),
+            decode=lambda p, b, c: rwkv.decode_step(
+                p, b["token"], b["pos"], c, cfg),
+            cache_specs=lambda bs, sl: rwkv.state_specs(cfg, bs),
+            num_params=count_params(specs), num_active_params=0)
+    elif fam == "hybrid":
+        specs = ssm.param_specs(cfg)
+        api = ModelAPI(
+            cfg, specs,
+            loss=lambda p, b: ssm.loss_fn(p, b, cfg),
+            prefill=lambda p, b: ssm.prefill(p, b["tokens"], cfg),
+            decode=lambda p, b, c: ssm.decode_step(
+                p, b["token"], b["pos"], c, cfg),
+            cache_specs=lambda bs, sl: ssm.state_specs(cfg, bs, sl),
+            num_params=count_params(specs), num_active_params=0)
+    else:
+        raise ValueError(f"unknown family {fam}")
+
+    active = (_moe_active_params(cfg, api.num_params)
+              if fam == "moe" else api.num_params)
+    return api._replace(num_active_params=active)
+
+
+def init_params(api: ModelAPI, key: jax.Array):
+    return init_from_specs(api.param_specs, key)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig
+                ) -> Tuple[dict, Optional[Any]]:
+    """(batch specs, cache specs or None) for one (arch x shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    tok = spec(b, s, dtype=jnp.int32)
+    if shape.kind == "train":
+        batch = {"tokens": tok, "labels": tok}
+        if cfg.family == "encdec":
+            batch["src_embed"] = spec(b, s, cfg.d_model, dtype=COMPUTE_DTYPE)
+        if cfg.family == "vlm":
+            batch["img_embed"] = spec(b, cfg.n_img_tokens, cfg.d_model,
+                                      dtype=COMPUTE_DTYPE)
+        return batch, None
+    if shape.kind == "prefill":
+        batch = {"tokens": tok}
+        if cfg.family == "encdec":
+            batch["src_embed"] = spec(b, s, cfg.d_model, dtype=COMPUTE_DTYPE)
+        if cfg.family == "vlm":
+            batch["img_embed"] = spec(b, cfg.n_img_tokens, cfg.d_model,
+                                      dtype=COMPUTE_DTYPE)
+        return batch, None
+    # decode: one new token against a seq_len-deep cache/state
+    batch = {"token": spec(b, dtype=jnp.int32), "pos": spec(dtype=jnp.int32)}
+    api_cache = build(cfg).cache_specs(b, s)
+    return batch, api_cache

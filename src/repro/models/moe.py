@@ -1,0 +1,222 @@
+"""Mixture-of-Experts decoder (kimi-k2, qwen3-moe).
+
+Token-choice top-k routing with capacity-bounded expert buffers.  Dispatch
+is scatter-based: each (token, choice) gets a position inside its expert's
+buffer via a cumulative-sum over the (tokens, experts) one-hot matrix;
+overflow beyond capacity is dropped (weight 0), matching Switch/GShard
+semantics.  Experts are stacked (L, E, ...) and sharded over the 'model'
+mesh axis (expert parallelism); the scatter/gather pair between
+token-sharded and expert-sharded layouts is where GSPMD inserts the
+all-to-all-class collectives this family is known for.
+
+Beyond-paper tie-in: `repro.core.placement` partitions the expert
+co-activation graph with Spinner to reorder experts across EP shards,
+reducing cross-shard routing volume (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .attention import KVCache
+from .common import (COMPUTE_DTYPE, cast, dense, rms_norm,
+                     softmax_cross_entropy, spec, swiglu)
+from .dense import _layer as dense_layer  # attention part is shared
+from .dense import embed, lm_logits, lm_loss, maybe_cast_stack
+from .attention import attn_param_specs
+
+
+def layer_param_specs(cfg: ModelConfig, n_layers: int) -> dict:
+    d, e, fe = cfg.d_model, cfg.n_experts, cfg.d_expert
+    p = {
+        "attn_norm": spec(n_layers, d),
+        "attn": attn_param_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                 cfg.qkv_bias, prefix_shape=(n_layers,)),
+        "mlp_norm": spec(n_layers, d),
+        "router": spec(n_layers, d, e),
+        "exp_w1": spec(n_layers, e, d, fe),
+        "exp_w3": spec(n_layers, e, d, fe),
+        "exp_w2": spec(n_layers, e, fe, d),
+    }
+    if cfg.shared_expert_ff:
+        fs = cfg.shared_expert_ff
+        p["shared_w1"] = spec(n_layers, d, fs)
+        p["shared_w3"] = spec(n_layers, d, fs)
+        p["shared_w2"] = spec(n_layers, fs, d)
+    return p
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": spec(cfg.vocab_padded, cfg.d_model),
+        "layers": layer_param_specs(cfg, cfg.n_layers),
+        "final_norm": spec(cfg.d_model),
+        "lm_head": spec(cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def _capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    cap = int(num_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-cap // 8) * 8)           # multiple of 8, at least 8
+
+
+def moe_ffn(x: jax.Array, lp: dict, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss). Capacity-bounded top-k dispatch."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(t, cfg)
+    xt = x.reshape(t, d)
+
+    logits = dense(xt, lp["router"]).astype(jnp.float32)    # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, choice = jax.lax.top_k(probs, k)              # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Position of each (token, choice) inside its expert buffer.
+    if cfg.moe_dispatch == "sort":
+        # O(Tk log Tk) rank-by-sort: peak memory O(Tk), vs the one-hot
+        # cumsum's O(Tk * E) buffers (EXPERIMENTS.md Perf, kimi cell).
+        flat_choice = choice.reshape(-1)                     # (T*k,)
+        order = jnp.argsort(flat_choice)
+        sorted_c = flat_choice[order]
+        # rank within equal-expert run
+        start = jnp.searchsorted(sorted_c, sorted_c, side="left")
+        rank_sorted = jnp.arange(t * k, dtype=jnp.int32) - start
+        pos = jnp.zeros((t * k,), jnp.int32).at[order].set(
+            rank_sorted).reshape(t, k)
+    else:
+        onehot = jax.nn.one_hot(choice, e, dtype=jnp.int32)  # (T, k, E)
+        flat = onehot.reshape(t * k, e)
+        pos_flat = jnp.cumsum(flat, axis=0) * flat           # 1-based ranks
+        pos = pos_flat.reshape(t, k, e).sum(-1) - 1          # (T, k)
+    keep = (pos >= 0) & (pos < cap)
+    pos_c = jnp.clip(pos, 0, cap - 1)
+
+    # Scatter tokens into (E, cap, d) buffers.
+    buf = jnp.zeros((e, cap, d), COMPUTE_DTYPE)
+    tok_flat = jnp.broadcast_to(jnp.arange(t)[:, None], (t, k)).reshape(-1)
+    src = jnp.where(keep.reshape(-1)[:, None], cast(xt)[tok_flat], 0)
+    buf = buf.at[choice.reshape(-1), pos_c.reshape(-1)].add(src)
+
+    h = jax.lax.dot_general(buf, cast(lp["exp_w1"]),
+                            (((2,), (1,)), ((0,), (0,))),
+                            preferred_element_type=jnp.float32)
+    h3 = jax.lax.dot_general(buf, cast(lp["exp_w3"]),
+                             (((2,), (1,)), ((0,), (0,))),
+                             preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(h) * h3).astype(COMPUTE_DTYPE)
+    out_buf = jax.lax.dot_general(
+        h, cast(lp["exp_w2"]), (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=(COMPUTE_DTYPE if cfg.bf16_reduce
+                                else jnp.float32)
+        ).astype(COMPUTE_DTYPE)                              # (E, cap, d)
+
+    # Gather back and combine with gate weights.
+    gathered = out_buf[choice.reshape(-1), pos_c.reshape(-1)]  # (T*k, d)
+    gathered = gathered.reshape(t, k, d)
+    w = jnp.where(keep, gate_vals, 0.0).astype(jnp.float32)
+    out = (gathered.astype(jnp.float32) * w[..., None]).sum(1)
+
+    # Switch-style load-balance aux loss over all k choices.
+    me = probs.mean(0)                                        # (E,)
+    ce = jax.nn.one_hot(choice, e, dtype=jnp.float32).mean((0, 1))
+    aux = e * jnp.sum(me * ce)
+
+    if cfg.shared_expert_ff:
+        out = out + swiglu(xt, lp["shared_w1"], lp["shared_w3"],
+                           lp["shared_w2"]).astype(jnp.float32)
+    return out.reshape(b, s, d).astype(COMPUTE_DTYPE), aux
+
+
+def _layer(x, lp, cfg: ModelConfig, *, cache=None, pos=None,
+           return_cache=False):
+    if cfg.gather_weights:
+        from repro.parallel.rules import constrain_compute
+        lp = constrain_compute(lp)
+    from .dense import constrain_residual
+    x = constrain_residual(x, cfg)
+    h = rms_norm(x, lp["attn_norm"], cfg.norm_eps)
+    from .attention import attention
+    a, new_cache = attention(
+        h, lp["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, rope_theta=cfg.rope_theta, causal=True,
+        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        cache=cache, pos=pos, return_cache=return_cache,
+        bf16_wire=cfg.bf16_reduce, replicate_heads=cfg.attn_replicate)
+    x = x + a
+    h = rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    m, aux = moe_ffn(h, lp, cfg)
+    return x + m, new_cache, aux
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    x = embed(params, tokens)
+
+    def body(h, lp):
+        h, _, aux = _layer(h, lp, cfg)
+        return h, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, params["layers"])
+    return lm_logits(params, x, cfg), jnp.mean(auxs)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    x = embed(params, batch["tokens"])
+
+    def body(h, lp):
+        h, _, aux = _layer(h, lp, cfg)
+        return h, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, auxs = jax.lax.scan(body, x, maybe_cast_stack(params["layers"], cfg))
+    return (lm_loss(params, x, batch["labels"], cfg)
+            + cfg.router_aux_weight * jnp.mean(auxs))
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> KVCache:
+    shape = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(spec(*shape, dtype=COMPUTE_DTYPE),
+                   spec(*shape, dtype=COMPUTE_DTYPE))
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int) -> KVCache:
+    s = cache_specs(cfg, batch, seq_len)
+    return KVCache(jnp.zeros(s.k.shape, s.k.dtype),
+                   jnp.zeros(s.v.shape, s.v.dtype))
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig):
+    x = embed(params, tokens)
+
+    def body(h, lp):
+        h, kv, _ = _layer(h, lp, cfg, return_cache=True)
+        return h, kv
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params["layers"])
+    return lm_logits(params, x[:, -1:, :], cfg), caches
+
+
+def decode_step(params: dict, token: jax.Array, pos: jax.Array,
+                cache: KVCache, cfg: ModelConfig):
+    x = embed(params, token[:, None])
+
+    def body(h, lp_kv):
+        lp, k_l, v_l = lp_kv
+        h, new_kv, _ = _layer(h, lp, cfg, cache=KVCache(k_l, v_l), pos=pos)
+        return h, new_kv
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], cache.k, cache.v))
+    return lm_logits(params, x, cfg), KVCache(new_caches.k, new_caches.v)

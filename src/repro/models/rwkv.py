@@ -1,0 +1,254 @@
+"""RWKV6 "Finch": attention-free LM with data-dependent per-channel decay.
+
+Training/prefill uses a chunked linear-attention formulation (GLA-style):
+within a chunk the pairwise decay tensor D[t,s,c] = exp(la_ex[t,c] -
+la_in[s,c]) is formed explicitly (exponents are <= 0, so it never
+overflows), the inter-chunk contribution flows through a carried per-head
+state S (hd_k x hd_v), and chunks are scanned sequentially.  Decode is the
+plain O(1) recurrence.  A step-by-step ``lax.scan`` oracle lives in
+``wkv_ref`` for tests.
+
+Simplifications vs the released checkpoint (documented in DESIGN.md):
+static token-shift lerp coefficients (the ddlerp LoRA is kept only for the
+decay, which is the paper-defining "data-dependent decay"), RMSNorm instead
+of LayerNorm.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .common import (COMPUTE_DTYPE, cast, dense, rms_norm,
+                     softmax_cross_entropy, spec)
+
+
+class RWKVState(NamedTuple):
+    tm_last: jax.Array    # (L, B, d)   token-shift carry, time-mix
+    cm_last: jax.Array    # (L, B, d)   token-shift carry, channel-mix
+    s: jax.Array          # (L, B, H, hd, hd) wkv state
+
+
+def layer_param_specs(cfg: ModelConfig, n_layers: int) -> dict:
+    d, f, hd = cfg.d_model, cfg.d_ff, cfg.ssm_head_dim
+    h = d // hd
+    lora = 64
+    return {
+        "ln1": spec(n_layers, d),
+        "ln2": spec(n_layers, d),
+        "mix_r": spec(n_layers, d), "mix_k": spec(n_layers, d),
+        "mix_v": spec(n_layers, d), "mix_w": spec(n_layers, d),
+        "mix_g": spec(n_layers, d),
+        "wr": spec(n_layers, d, d), "wk": spec(n_layers, d, d),
+        "wv": spec(n_layers, d, d), "wg": spec(n_layers, d, d),
+        "wo": spec(n_layers, d, d),
+        "decay0": spec(n_layers, d),
+        "decay_a": spec(n_layers, d, lora),
+        "decay_b": spec(n_layers, lora, d),
+        "bonus_u": spec(n_layers, h, hd),
+        "gn_scale": spec(n_layers, d),
+        "mix_cr": spec(n_layers, d), "mix_ck": spec(n_layers, d),
+        "cwk": spec(n_layers, d, f), "cwv": spec(n_layers, f, d),
+        "cwr": spec(n_layers, d, d),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": spec(cfg.vocab_padded, cfg.d_model),
+        "layers": layer_param_specs(cfg, cfg.n_layers),
+        "final_norm": spec(cfg.d_model),
+        "lm_head": spec(cfg.d_model, cfg.vocab_padded),
+    }
+
+
+def _shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """x_{t-1} along seq; position 0 uses the carried ``last`` token."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _log_decay(xw: jax.Array, lp: dict) -> jax.Array:
+    """Data-dependent log decay, guaranteed < 0 (decay in (0, 1))."""
+    lora = dense(jnp.tanh(dense(xw, lp["decay_a"]).astype(jnp.float32)
+                          ).astype(COMPUTE_DTYPE), lp["decay_b"])
+    return -jnp.exp(jnp.clip(lp["decay0"].astype(jnp.float32)
+                             + lora.astype(jnp.float32), -8.0, 6.0))
+
+
+def wkv_chunked(r, k, v, lw, u, s0, chunk: int):
+    """Chunked WKV. r/k/v/lw: (B, S, H, hd); u: (H, hd); s0: (B, H, hd, hd).
+
+    Recurrence: out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T);
+                S_t = diag(exp(lw_t)) S_{t-1} + k_t v_t^T.
+    Returns (out (B, S, H, hd), s_final).
+    """
+    b, s, h, hd = r.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    n = s // chunk
+    rc = r.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    lwc = lw.reshape(b, n, chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(S, xs):
+        rb, kb, vb, lwb = (x.astype(jnp.float32) for x in xs)
+        la_in = jnp.cumsum(lwb, axis=1)               # inclusive (B,C,H,hd)
+        la_ex = la_in - lwb                           # exclusive
+        # inter-chunk: r_t decayed against carried state
+        r_dec = rb * jnp.exp(la_ex)
+        inter = jnp.einsum("bthc,bhcv->bthv", r_dec, S)
+        # intra-chunk, strictly lower-triangular via pairwise decays
+        dmat = la_ex[:, :, None] - la_in[:, None, :]  # (B,C,C,H,hd) t,s
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+        dmat = jnp.where(tri[None, :, :, None, None], dmat, -jnp.inf)
+        D = jnp.exp(dmat)
+        P = jnp.einsum("bthc,bshc,btshc->btsh", rb, kb, D)
+        intra = jnp.einsum("btsh,bshv->bthv", P, vb)
+        # diagonal bonus term
+        sig = jnp.einsum("bthc,hc,bthc->bth", rb, u.astype(jnp.float32), kb)
+        diag = sig[..., None] * vb
+        out = inter + intra + diag
+        # carry state across the chunk
+        tail = la_in[:, -1:, :, :]                    # (B,1,H,hd)
+        S_new = (jnp.exp(tail[:, 0])[..., None] * S
+                 + jnp.einsum("bshc,bshv->bhcv",
+                              kb * jnp.exp(tail - la_in), vb))
+        return S_new, out.astype(COMPUTE_DTYPE)
+
+    s_fin, outs = jax.lax.scan(jax.checkpoint(step), s0.astype(jnp.float32),
+                               (rc, kc, vc, lwc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return out, s_fin
+
+
+def wkv_ref(r, k, v, lw, u, s0):
+    """Step-by-step oracle for tests."""
+    b, s, h, hd = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, lwt = (x.astype(jnp.float32) for x in xs)
+        kv = jnp.einsum("bhc,bhv->bhcv", kt, vt)
+        out = jnp.einsum("bhc,bhcv->bhv",
+                         rt, S + u.astype(jnp.float32)[None, :, :, None] * kv)
+        S = jnp.exp(lwt)[..., None] * S + kv
+        return S, out
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (r, k, v, lw))
+    s_fin, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return outs.transpose(1, 0, 2, 3).astype(COMPUTE_DTYPE), s_fin
+
+
+def _head_groupnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    """Per-head RMS normalization; x: (B, S, H, hd), scale: (d,)."""
+    b, s, h, hd = x.shape
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = (xf * jax.lax.rsqrt(var + eps)).reshape(b, s, h * hd)
+    return (out * scale.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+
+
+def time_mix(x, last, lp, cfg: ModelConfig, s0):
+    """Returns (out, new_last, s_final). x: (B, S, d)."""
+    b, s, d = x.shape
+    hd = cfg.ssm_head_dim
+    h = d // hd
+    xx = _shift(x, last)
+
+    def lerp(mix):
+        return x + (xx - x) * mix.astype(x.dtype)
+
+    r = dense(lerp(lp["mix_r"]), lp["wr"]).reshape(b, s, h, hd)
+    k = dense(lerp(lp["mix_k"]), lp["wk"]).reshape(b, s, h, hd)
+    v = dense(lerp(lp["mix_v"]), lp["wv"]).reshape(b, s, h, hd)
+    g = dense(lerp(lp["mix_g"]), lp["wg"])
+    lw = _log_decay(lerp(lp["mix_w"]), lp).reshape(b, s, h, hd)
+
+    out, s_fin = wkv_chunked(r, k, v, lw, lp["bonus_u"], s0, cfg.seq_chunk)
+    out = _head_groupnorm(out, lp["gn_scale"], cfg.norm_eps)
+    out = out * jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return dense(out, lp["wo"]), x[:, -1, :], s_fin
+
+
+def channel_mix(x, last, lp):
+    xx = _shift(x, last)
+
+    def lerp(mix):
+        return x + (xx - x) * mix.astype(x.dtype)
+
+    k = dense(lerp(lp["mix_ck"]), lp["cwk"]).astype(jnp.float32)
+    k = jnp.square(jax.nn.relu(k)).astype(COMPUTE_DTYPE)
+    rgate = jax.nn.sigmoid(dense(lerp(lp["mix_cr"]), lp["cwr"])
+                           .astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return rgate * dense(k, lp["cwv"]), x[:, -1, :]
+
+
+def _layer(x, lp, cfg: ModelConfig, state):
+    tm_last, cm_last, s0 = state
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, tm_new, s_new = time_mix(h, tm_last, lp, cfg, s0)
+    x = x + a
+    h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    m, cm_new = channel_mix(h2, cm_last, lp)
+    return x + m, (tm_new, cm_new, s_new)
+
+
+def state_specs(cfg: ModelConfig, batch: int) -> RWKVState:
+    d, hd = cfg.d_model, cfg.ssm_head_dim
+    h = d // hd
+    return RWKVState(
+        spec(cfg.n_layers, batch, d, dtype=COMPUTE_DTYPE),
+        spec(cfg.n_layers, batch, d, dtype=COMPUTE_DTYPE),
+        spec(cfg.n_layers, batch, h, hd, hd, dtype=jnp.float32))
+
+
+def init_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    s = state_specs(cfg, batch)
+    return RWKVState(*(jnp.zeros(x.shape, x.dtype) for x in s))
+
+
+def _run_stack(params, x, cfg: ModelConfig, state: RWKVState):
+    def body(h, lp_state):
+        lp, tm, cm, s0 = lp_state
+        h, (tm2, cm2, s2) = _layer(h, lp, cfg, (tm, cm, s0))
+        return h, (tm2, cm2, s2)
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, news = jax.lax.scan(body, x,
+                           (params["layers"], state.tm_last, state.cm_last,
+                            state.s))
+    return x, RWKVState(*news)
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    from .dense import embed, lm_logits
+    x = embed(params, tokens)
+    state = init_state(cfg, tokens.shape[0])
+    x, _ = _run_stack(params, x, cfg, state)
+    return lm_logits(params, x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    from .dense import embed, lm_logits
+    x = embed(params, tokens)
+    state = init_state(cfg, tokens.shape[0])
+    x, state = _run_stack(params, x, cfg, state)
+    return lm_logits(params, x[:, -1:, :], cfg), state
+
+
+def decode_step(params, token, pos, state: RWKVState, cfg: ModelConfig):
+    """O(1) recurrent decode; ``pos`` unused (state is position-free)."""
+    del pos
+    from .dense import embed, lm_logits
+    x = embed(params, token[:, None])
+    x, state = _run_stack(params, x, cfg, state)
+    return lm_logits(params, x, cfg), state

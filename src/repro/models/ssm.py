@@ -1,0 +1,334 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid stack.
+
+Mamba2's scalar-per-head decay makes the chunked scan fully MXU-friendly:
+the intra-chunk kernel is (C @ B^T) elementwise-scaled by a (chunk, chunk)
+decay matrix per head, and the carried state is (H, N, hd) per sequence.
+
+Zamba2 (arXiv:2411.15242): 81 Mamba2 blocks with ONE weight-shared
+attention(+MLP) block applied after every 6th Mamba2 block (13
+applications) plus a 3-block tail.  Simplifications vs the checkpoint
+(DESIGN.md): the shared block consumes the current hidden state (no
+concat-with-embedding projection), conv is applied to x only (not B/C).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .attention import KVCache, attention, attn_param_specs
+from .common import (COMPUTE_DTYPE, cast, dense, rms_norm,
+                     softmax_cross_entropy, spec, swiglu)
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (..., B, W-1, d_in)   conv tail carry
+    s: jax.Array      # (..., B, H, N, hd)    SSD state
+
+
+class ZambaState(NamedTuple):
+    mamba: MambaState          # leading dims (n_groups, period) / tail (tail,)
+    tail: MambaState
+    attn: KVCache              # (n_groups, B, S_max, KV, hd)
+    pos: jax.Array             # scalar int32 (tokens written)
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = d_in // cfg.ssm_head_dim
+    return d_in, h, cfg.ssm_state
+
+
+def mamba_param_specs(cfg: ModelConfig, prefix_shape: Tuple[int, ...]) -> dict:
+    d = cfg.d_model
+    d_in, h, n = _dims(cfg)
+    ps = prefix_shape
+    return {
+        "norm": spec(*ps, d),
+        "wz": spec(*ps, d, d_in),
+        "wx": spec(*ps, d, d_in),
+        "wB": spec(*ps, d, n),
+        "wC": spec(*ps, d, n),
+        "wdt": spec(*ps, d, h),
+        "conv_w": spec(*ps, cfg.conv_width, d_in),
+        "conv_bias": spec(*ps, d_in),
+        "A_log": spec(*ps, h),
+        "skip_D": spec(*ps, h),
+        "dt_bias": spec(*ps, h),
+        "gn_scale": spec(*ps, d_in),
+        "out_proj": spec(*ps, d_in, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, bias: jax.Array,
+                 carry: Optional[jax.Array]) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, width W; x: (B, S, C), w: (W, C).
+
+    ``carry`` is the previous W-1 inputs (B, W-1, C); returns new carry.
+    """
+    bsz, s, c = x.shape
+    wdt = w.shape[0]
+    if carry is None:
+        carry = jnp.zeros((bsz, wdt - 1, c), x.dtype)
+    ext = jnp.concatenate([carry, x], axis=1)          # (B, S+W-1, C)
+    out = jnp.zeros((bsz, s, c), jnp.float32)
+    for j in range(wdt):
+        out = out + ext[:, j:j + s, :].astype(jnp.float32) \
+            * w[j].astype(jnp.float32)
+    out = out + bias.astype(jnp.float32)
+    new_carry = ext[:, -(wdt - 1):, :] if wdt > 1 else carry
+    return jax.nn.silu(out).astype(COMPUTE_DTYPE), new_carry
+
+
+def ssd_chunked(xh, Bc, Cc, dt, a_log, s0, chunk: int):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, hd); Bc/Cc: (B, S, N); dt: (B, S, H) (post-softplus);
+    a_log: (H,) (negative); s0: (B, H, N, hd).
+    Recurrence: S_t = exp(dt_t a_log) S_{t-1} + dt_t B_t (x) xh_t;
+                y_t = C_t . S_t.
+    """
+    b, s, h, hd = xh.shape
+    n = Bc.shape[-1]
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    nc = s // chunk
+    la_step = dt * a_log[None, None, :]                # (B,S,H) <= 0
+
+    def resh(x):
+        return x.reshape(b, nc, chunk, *x.shape[2:]).transpose(
+            1, 0, 2, *range(3, x.ndim + 1))
+
+    xc, bc, cc, dc, lc = map(resh, (xh, Bc, Cc, dt, la_step))
+
+    def step(S, xs):
+        xb, bb, cb, db, lb = (x.astype(jnp.float32) for x in xs)
+        lai = jnp.cumsum(lb, axis=1)                   # (B,C,H) inclusive
+        # intra: P[t,s,h] = (C_t . B_s) exp(lai_t - lai_s) dt_s, s <= t
+        cb_ = jnp.einsum("btn,bsn->bts", cb, bb)       # (B,C,C)
+        dm = lai[:, :, None, :] - lai[:, None, :, :]   # (B,C,C,H)
+        tri = jnp.tril(jnp.ones((xb.shape[1], xb.shape[1]), bool))
+        dm = jnp.where(tri[None, :, :, None], dm, -jnp.inf)
+        P = cb_[..., None] * jnp.exp(dm) * db[:, None, :, :]
+        intra = jnp.einsum("btsh,bshd->bthd", P, xb)
+        inter = jnp.einsum("btn,bth,bhnd->bthd", cb, jnp.exp(lai), S)
+        out = intra + inter
+        tail = lai[:, -1:, :]                          # (B,1,H)
+        S_new = (jnp.exp(tail[:, 0])[:, :, None, None] * S
+                 + jnp.einsum("bsn,bsh,bshd->bhnd",
+                              bb, db * jnp.exp(tail - lai), xb))
+        return S_new, out.astype(COMPUTE_DTYPE)
+
+    s_fin, outs = jax.lax.scan(jax.checkpoint(step), s0.astype(jnp.float32),
+                               (xc, bc, cc, dc, lc))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, s, h, hd)
+    return out, s_fin
+
+
+def ssd_ref(xh, Bc, Cc, dt, a_log, s0):
+    """Step-by-step oracle."""
+    def step(S, xs):
+        xt, bt, ct, dtt = (x.astype(jnp.float32) for x in xs)
+        decay = jnp.exp(dtt * a_log.astype(jnp.float32))   # (B,H)
+        S = decay[:, :, None, None] * S + jnp.einsum(
+            "bn,bh,bhd->bhnd", bt, dtt, xt)
+        y = jnp.einsum("bn,bhnd->bhd", ct, S)
+        return S, y
+
+    xs = (xh.transpose(1, 0, 2, 3), Bc.transpose(1, 0, 2),
+          Cc.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+    s_fin, outs = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return outs.transpose(1, 0, 2, 3).astype(COMPUTE_DTYPE), s_fin
+
+
+def mamba_block(x, lp, cfg: ModelConfig, state: MambaState
+                ) -> Tuple[jax.Array, MambaState]:
+    """x: (B, S, d) -> (out, new_state)."""
+    b, s, d = x.shape
+    d_in, h, n = _dims(cfg)
+    hd = cfg.ssm_head_dim
+    hx = rms_norm(x, lp["norm"], cfg.norm_eps)
+
+    z = dense(hx, lp["wz"])
+    xin = dense(hx, lp["wx"])
+    Bc = dense(hx, lp["wB"]).astype(jnp.float32)
+    Cc = dense(hx, lp["wC"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dense(hx, lp["wdt"]).astype(jnp.float32)
+                         + lp["dt_bias"].astype(jnp.float32))
+
+    xin, conv_new = _causal_conv(xin, lp["conv_w"], lp["conv_bias"],
+                                 state.conv)
+    xh = xin.reshape(b, s, h, hd)
+    a_log = -jnp.exp(jnp.clip(lp["A_log"].astype(jnp.float32), -8.0, 6.0))
+    y, s_new = ssd_chunked(xh, Bc, Cc, dt, a_log, state.s, cfg.seq_chunk)
+    y = y + lp["skip_D"].astype(jnp.float32)[None, None, :, None] \
+        * xh.astype(jnp.float32)
+    y = y.reshape(b, s, d_in)
+    y = rms_norm((y.astype(jnp.float32)
+                  * jax.nn.silu(z.astype(jnp.float32))).astype(COMPUTE_DTYPE),
+                 lp["gn_scale"], cfg.norm_eps)
+    out = dense(y, lp["out_proj"])
+    return x + out, MambaState(conv_new, s_new)
+
+
+def mamba_state_specs(cfg: ModelConfig, batch: int,
+                      prefix_shape: Tuple[int, ...]) -> MambaState:
+    d_in, h, n = _dims(cfg)
+    return MambaState(
+        spec(*prefix_shape, batch, cfg.conv_width - 1, d_in,
+             dtype=COMPUTE_DTYPE),
+        spec(*prefix_shape, batch, h, n, cfg.ssm_head_dim,
+             dtype=jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Zamba2 hybrid stack
+# ---------------------------------------------------------------------------
+
+def _zamba_shape(cfg: ModelConfig) -> Tuple[int, int]:
+    groups = cfg.n_layers // cfg.attn_period
+    tail = cfg.n_layers - groups * cfg.attn_period
+    return groups, tail
+
+
+def shared_attn_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    return {
+        "attn_norm": spec(d),
+        "attn": attn_param_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "mlp_norm": spec(d),
+        "w1": spec(d, cfg.d_ff), "w3": spec(d, cfg.d_ff),
+        "w2": spec(cfg.d_ff, d),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    groups, tail = _zamba_shape(cfg)
+    p = {
+        "embed": spec(cfg.vocab_padded, cfg.d_model),
+        "mamba": mamba_param_specs(cfg, (groups, cfg.attn_period)),
+        "shared_attn": shared_attn_specs(cfg),
+        "final_norm": spec(cfg.d_model),
+        "lm_head": spec(cfg.d_model, cfg.vocab_padded),
+    }
+    if tail:
+        p["mamba_tail"] = mamba_param_specs(cfg, (tail,))
+    return p
+
+
+def _shared_block(x, sp, cfg: ModelConfig, cache: Optional[KVCache],
+                  pos, return_cache: bool):
+    h = rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+    a, new_cache = attention(
+        h, sp["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, rope_theta=cfg.rope_theta, causal=True,
+        chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+        cache=cache, pos=pos, return_cache=return_cache)
+    x = x + a
+    h = rms_norm(x, sp["mlp_norm"], cfg.norm_eps)
+    return x + swiglu(h, sp["w1"], sp["w3"], sp["w2"]), new_cache
+
+
+def state_specs(cfg: ModelConfig, batch: int, cache_len: int) -> ZambaState:
+    groups, tail = _zamba_shape(cfg)
+    return ZambaState(
+        mamba=mamba_state_specs(cfg, batch, (groups, cfg.attn_period)),
+        tail=mamba_state_specs(cfg, batch, (max(tail, 1),)),
+        attn=KVCache(
+            spec(groups, batch, cache_len, cfg.n_kv_heads, cfg.hd,
+                 dtype=COMPUTE_DTYPE),
+            spec(groups, batch, cache_len, cfg.n_kv_heads, cfg.hd,
+                 dtype=COMPUTE_DTYPE)),
+        pos=spec(dtype=jnp.int32))
+
+
+def init_state(cfg: ModelConfig, batch: int, cache_len: int) -> ZambaState:
+    s = state_specs(cfg, batch, cache_len)
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, x.dtype), s,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _run_stack(params, x, cfg: ModelConfig, state: ZambaState, *,
+               mode: str, pos=None):
+    """mode: 'train' (no caches), 'prefill' (fill caches), 'decode'."""
+    groups, tail = _zamba_shape(cfg)
+    decode = mode == "decode"
+
+    def group_body(carry, xs):
+        h = carry
+        mp, mstate, k_g, v_g = xs
+
+        def mamba_scan(hh, layer):
+            lp, st = layer
+            hh, st2 = mamba_block(hh, lp, cfg, MambaState(*st))
+            return hh, st2
+
+        h, mstates = jax.lax.scan(mamba_scan, h,
+                                  (mp, (mstate.conv, mstate.s)))
+        cache = KVCache(k_g, v_g) if decode else None
+        h, new_cache = _shared_block(h, params["shared_attn"], cfg, cache,
+                                     pos, return_cache=mode == "prefill")
+        kv = new_cache if new_cache is not None else KVCache(k_g, v_g)
+        return h, (mstates, kv)
+
+    body = group_body
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(group_body)
+    x, (mstates, kvs) = jax.lax.scan(
+        body, x, (params["mamba"], state.mamba, state.attn.k, state.attn.v))
+
+    new_tail = state.tail
+    if tail:
+        def tail_scan(hh, layer):
+            lp, st = layer
+            hh, st2 = mamba_block(hh, lp, cfg, MambaState(*st))
+            return hh, st2
+
+        x, new_tail = jax.lax.scan(
+            tail_scan, x, (params["mamba_tail"],
+                           (state.tail.conv, state.tail.s)))
+        new_tail = MambaState(*new_tail)
+
+    new_state = ZambaState(mamba=MambaState(*mstates), tail=new_tail,
+                           attn=KVCache(kvs.k, kvs.v),
+                           pos=(pos + 1 if pos is not None else state.pos))
+    return x, new_state
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    from .dense import embed, lm_logits
+    x = embed(params, tokens)
+    state = init_state(cfg, tokens.shape[0], 8)
+    x, _ = _run_stack(params, x, cfg, state, mode="train")
+    return lm_logits(params, x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch["tokens"], cfg)
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, tokens, cfg: ModelConfig, cache_len: Optional[int] = None):
+    from .dense import embed, lm_logits
+    b, s = tokens.shape
+    cache_len = cache_len or s
+    x = embed(params, tokens)
+    state = init_state(cfg, b, cache_len)
+    x, state = _run_stack(params, x, cfg, state, mode="prefill")
+    # pad prefill caches to cache_len
+    def pad(c):
+        return jnp.pad(c, ((0, 0), (0, 0), (0, cache_len - s), (0, 0),
+                           (0, 0))) if c.shape[2] < cache_len else c
+    state = state._replace(attn=KVCache(pad(state.attn.k), pad(state.attn.v)),
+                           pos=jnp.int32(s))
+    return lm_logits(params, x[:, -1:, :], cfg), state
+
+
+def decode_step(params, token, pos, state: ZambaState, cfg: ModelConfig):
+    from .dense import embed, lm_logits
+    x = embed(params, token[:, None])
+    x, state = _run_stack(params, x, cfg, state, mode="decode", pos=pos)
+    return lm_logits(params, x, cfg), state

@@ -1,0 +1,175 @@
+"""VLM backbone (llama-3.2-vision-11b): decoder with gated cross-attention.
+
+Backbone only: the vision tower is a stub; ``input_specs`` provides
+precomputed patch embeddings (B, n_img_tokens, d_model).  Layout follows
+Llama-3.2-Vision: every ``cross_attn_period``-th layer is a gated
+cross-attention(+MLP) layer -- with period 5 over 40 layers the stack is 8
+groups of (4 self layers + 1 cross layer), scanned at both levels.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from .attention import (KVCache, attention, attn_param_specs,
+                        decode_attention)
+from .common import (COMPUTE_DTYPE, cast, dense, rms_norm,
+                     softmax_cross_entropy, spec, swiglu)
+from .dense import embed, layer_param_specs, lm_logits
+from .dense import _layer as self_layer
+
+
+class VLMCache(NamedTuple):
+    self_kv: KVCache     # (G, P-1, B, S_max, KV, hd)
+    cross_kv: KVCache    # (G, B, n_img, KV, hd)
+
+
+def _shape(cfg: ModelConfig) -> Tuple[int, int]:
+    period = cfg.cross_attn_period
+    assert cfg.n_layers % period == 0, "layers must tile into groups"
+    return cfg.n_layers // period, period
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    groups, period = _shape(cfg)
+    d = cfg.d_model
+    cross = {
+        "norm": spec(groups, d),
+        "attn": attn_param_specs(d, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                                 prefix_shape=(groups,)),
+        "gate_attn": spec(groups),
+        "mlp_norm": spec(groups, d),
+        "w1": spec(groups, d, cfg.d_ff),
+        "w3": spec(groups, d, cfg.d_ff),
+        "w2": spec(groups, cfg.d_ff, d),
+        "gate_mlp": spec(groups),
+    }
+    # self layers: (groups, period-1, ...)
+    import dataclasses
+    sub = dataclasses.replace(cfg)  # same dims
+    self_specs = layer_param_specs(sub, period - 1)
+    self_specs = jax.tree.map(
+        lambda s: spec(groups, *s.shape, dtype=s.dtype), self_specs)
+    return {
+        "embed": spec(cfg.vocab, d),
+        "self_layers": self_specs,
+        "cross_layers": cross,
+        "img_norm": spec(d),
+        "final_norm": spec(d),
+        "lm_head": spec(d, cfg.vocab),
+    }
+
+
+def _cross_layer(x, cp, cfg: ModelConfig, img=None, cross_cache=None,
+                 return_cache=False):
+    h = rms_norm(x, cp["norm"], cfg.norm_eps)
+    if cross_cache is not None:
+        b = h.shape[0]
+        q = dense(h, cp["attn"]["wq"]).reshape(b, 1, cfg.n_heads, cfg.hd)
+        o = decode_attention(q, cross_cache,
+                             jnp.int32(cross_cache.k.shape[1] - 1))
+        a = dense(o.reshape(b, 1, -1), cp["attn"]["wo"])
+        new_cache = cross_cache
+    else:
+        a, new_cache = attention(
+            h, cp["attn"], n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=None, causal=False,
+            chunk_q=cfg.attn_chunk_q, chunk_kv=cfg.attn_chunk_kv,
+            memory=img, return_cache=return_cache)
+    x = x + jnp.tanh(cp["gate_attn"]).astype(COMPUTE_DTYPE) * a
+    m = swiglu(rms_norm(x, cp["mlp_norm"], cfg.norm_eps),
+               cp["w1"], cp["w3"], cp["w2"])
+    x = x + jnp.tanh(cp["gate_mlp"]).astype(COMPUTE_DTYPE) * m
+    return x, new_cache
+
+
+def forward(params, tokens, img_embed, cfg: ModelConfig) -> jax.Array:
+    x = embed(params, tokens)
+    img = rms_norm(cast(img_embed), params["img_norm"], cfg.norm_eps)
+
+    def group(h, gp):
+        sp, cp = gp
+
+        def body(hh, lp):
+            hh, _ = self_layer(hh, lp, cfg)
+            return hh, None
+
+        h, _ = jax.lax.scan(body, h, sp)
+        h, _ = _cross_layer(h, cp, cfg, img=img)
+        return h, None
+
+    if cfg.remat:
+        group = jax.checkpoint(group)
+    x, _ = jax.lax.scan(group, x,
+                        (params["self_layers"], params["cross_layers"]))
+    return lm_logits(params, x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig) -> jax.Array:
+    logits = forward(params, batch["tokens"], batch["img_embed"], cfg)
+    return softmax_cross_entropy(logits, batch["labels"])
+
+
+def prefill(params, tokens, img_embed, cfg: ModelConfig
+            ) -> Tuple[jax.Array, VLMCache]:
+    x = embed(params, tokens)
+    img = rms_norm(cast(img_embed), params["img_norm"], cfg.norm_eps)
+
+    def group(h, gp):
+        sp, cp = gp
+
+        def body(hh, lp):
+            hh, kv = self_layer(hh, lp, cfg, return_cache=True)
+            return hh, kv
+
+        h, self_kv = jax.lax.scan(body, h, sp)
+        h, cross_kv = _cross_layer(h, cp, cfg, img=img, return_cache=True)
+        return h, (self_kv, cross_kv)
+
+    if cfg.remat:
+        group = jax.checkpoint(group)
+    x, (skv, ckv) = jax.lax.scan(
+        group, x, (params["self_layers"], params["cross_layers"]))
+    return (lm_logits(params, x[:, -1:, :], cfg),
+            VLMCache(KVCache(*skv), KVCache(*ckv)))
+
+
+def decode_step(params, token, pos, cache: VLMCache, cfg: ModelConfig):
+    x = embed(params, token[:, None])
+
+    def group(h, xs):
+        sp, cp, sk, sv, ck, cv = xs
+
+        def body(hh, lp_kv):
+            lp, k_l, v_l = lp_kv
+            hh, kv = self_layer(hh, lp, cfg, cache=KVCache(k_l, v_l),
+                                pos=pos)
+            return hh, kv
+
+        h, self_kv = jax.lax.scan(body, h, (sp, sk, sv))
+        h, _ = _cross_layer(h, cp, cfg, cross_cache=KVCache(ck, cv))
+        return h, self_kv
+
+    x, skv = jax.lax.scan(
+        group, x, (params["self_layers"], params["cross_layers"],
+                   cache.self_kv.k, cache.self_kv.v,
+                   cache.cross_kv.k, cache.cross_kv.v))
+    return lm_logits(params, x, cfg), VLMCache(KVCache(*skv), cache.cross_kv)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, seq_len: int) -> VLMCache:
+    groups, period = _shape(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    return VLMCache(
+        KVCache(spec(groups, period - 1, batch, seq_len, kv, hd,
+                     dtype=COMPUTE_DTYPE),
+                spec(groups, period - 1, batch, seq_len, kv, hd,
+                     dtype=COMPUTE_DTYPE)),
+        KVCache(spec(groups, batch, cfg.n_img_tokens, kv, hd,
+                     dtype=COMPUTE_DTYPE),
+                spec(groups, batch, cfg.n_img_tokens, kv, hd,
+                     dtype=COMPUTE_DTYPE)))

@@ -1,0 +1,73 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 block-quantized all-reduce: gradients are quantized per 256-value
+block to int8 with a f32 scale (4.25 bits/value overhead -> ~3.76x wire
+compression), the quantization residual is carried into the next step
+(error feedback, Karimireddy et al. 2019), which keeps SGD/Adam unbiased
+in the long run.  ``compress``/``decompress`` are pure functions usable
+inside jit/shard_map around any collective.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = jax.Array  # leaves
+
+BLOCK = 256
+
+
+class Compressed(NamedTuple):
+    q: jax.Array        # int8 (n_blocks, BLOCK)
+    scale: jax.Array    # f32 (n_blocks,)
+    n: int              # original element count
+
+
+def compress(x: jax.Array) -> Compressed:
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(flat), axis=1) / 127.0
+    q = jnp.round(flat / jnp.maximum(scale, 1e-12)[:, None])
+    return Compressed(q.astype(jnp.int8), scale, n)
+
+
+def decompress(c: Compressed, shape) -> jax.Array:
+    flat = c.q.astype(jnp.float32) * c.scale[:, None]
+    return flat.reshape(-1)[: c.n].reshape(shape)
+
+
+def compress_tree(grads, errors=None):
+    """Quantize a gradient pytree, carrying error feedback.
+
+    Returns (compressed_tree, new_errors): the caller all-reduces the int8
+    payloads, then applies ``decompress_tree``.  new_errors = grad -
+    dequant(quant(grad + error)) must be fed into the next call.
+    """
+    if errors is None:
+        errors = jax.tree.map(jnp.zeros_like, grads)
+    corrected = jax.tree.map(lambda g, e: g.astype(jnp.float32) + e,
+                             grads, errors)
+    comp = jax.tree.map(compress, corrected,
+                        is_leaf=lambda x: isinstance(x, jax.Array))
+    restored = jax.tree.map(
+        lambda c, g: decompress(c, g.shape), comp, grads,
+        is_leaf=lambda x: isinstance(x, Compressed))
+    new_errors = jax.tree.map(lambda c, r: c - r, corrected, restored)
+    return comp, new_errors
+
+
+def decompress_tree(comp, like):
+    return jax.tree.map(lambda c, g: decompress(c, g.shape).astype(g.dtype),
+                        comp, like,
+                        is_leaf=lambda x: isinstance(x, Compressed))
+
+
+def wire_bytes(comp) -> int:
+    total = 0
+    for c in jax.tree.leaves(comp, is_leaf=lambda x: isinstance(x, Compressed)):
+        total += c.q.size + 4 * c.scale.size
+    return total

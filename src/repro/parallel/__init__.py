@@ -1,0 +1,3 @@
+from . import rules
+from .rules import (batch_shardings, cache_shardings, fsdp_axes,
+                    param_shardings, replicated)

@@ -1,0 +1,181 @@
+"""Sharding rules: parameter/cache/batch pytrees -> PartitionSpecs.
+
+Scheme (GSPMD, mesh axes ("pod",) "data", "model"):
+  * FSDP: the contraction-side dim of every large matrix is sharded over
+    ("pod","data") -- ZeRO-3-style; XLA inserts per-layer all-gathers inside
+    the scan and reduce-scatters on the gradient.
+  * TP: head / ffn / expert / vocab dims are sharded over "model".
+  * EP: MoE expert dim is sharded over "model" (expert parallelism).
+  * Small vectors (norm scales, biases of size d, decay LoRAs, gates) are
+    replicated.
+Activations: batch over ("pod","data"); KV caches shard heads over "model"
+when divisible, else the sequence dim.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return fsdp_axes(mesh)
+
+
+def _param_spec(path: str, ndim: int, fsdp) -> P:
+    """PartitionSpec for one parameter leaf, by path name.
+
+    Leading "stacking" dims (layer/group/period axes) are unsharded; the
+    rule applies to the trailing dims.
+    """
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    def tail(*axes):
+        return P(*([None] * (ndim - len(axes))), *axes)
+
+    if name == "embed":
+        return P("model", fsdp)
+    if name == "lm_head":
+        return P(fsdp, "model")
+    if parent in ("attn", "cross"):
+        if name in ("wq", "wk", "wv"):
+            return tail(fsdp, "model")
+        if name == "wo":
+            return tail("model", fsdp)
+        if name in ("bq", "bk", "bv"):
+            return tail("model")
+        return tail()
+    if name in ("exp_w1", "exp_w3"):         # (L, E, d, fe)
+        return tail("model", fsdp, None)
+    if name == "exp_w2":                      # (L, E, fe, d)
+        return tail("model", None, fsdp)
+    if name == "router":
+        return tail(fsdp, None)
+    if name in ("w1", "w3", "cwk", "wz", "wx", "shared_w1", "shared_w3",
+                "wr", "wk", "wv", "wg"):      # (.., d, f|d_in|d)
+        return tail(fsdp, "model")
+    if name in ("w2", "cwv", "out_proj", "wo", "cwr", "shared_w2"):
+        return tail("model", fsdp)
+    if name in ("wB", "wC", "wdt", "decay_a"):
+        return tail(fsdp, None)
+    if name == "conv_w":                      # (.., W, d_in)
+        return tail(None, "model")
+    if name in ("conv_bias", "gn_scale"):
+        return tail("model")
+    return tail()                             # norms, mixes, gates: replicate
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def param_shardings(specs: PyTree, mesh: Mesh) -> PyTree:
+    fsdp = fsdp_axes(mesh)
+
+    def one(path, leaf):
+        return NamedSharding(mesh, _param_spec(_path_str(path),
+                                               len(leaf.shape), fsdp))
+
+    return jax.tree_util.tree_map_with_path(one, specs)
+
+
+def batch_shardings(batch_specs: PyTree, mesh: Mesh) -> PyTree:
+    """Token/label/embedding inputs: batch dim over ("pod","data").
+
+    Batch dims not divisible by the dp extent (e.g. global_batch=1
+    long-context decode) are replicated.
+    """
+    dp = batch_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def one(leaf):
+        if len(leaf.shape) == 0 or leaf.shape[0] % dp_size != 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(dp, *([None] * (len(leaf.shape) - 1))))
+
+    return jax.tree.map(one, batch_specs)
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+def cache_shardings(cache_specs: PyTree, mesh: Mesh, batch_size: int
+                    ) -> PyTree:
+    """KV caches / recurrent states, shape-driven.
+
+    Per leaf: the batch dim is the first dim equal to ``batch_size`` that is
+    divisible by the dp size (if none, batch is replicated -- correct for
+    e.g. global_batch=1 long-context decode).  Of the remaining dims the
+    LARGEST one divisible by the 'model' size is model-sharded: for KV
+    caches that is the sequence dim (sequence-sharded decode attention,
+    flash-decode style); for SSM/RWKV states it is the head or channel dim.
+    """
+    dp = batch_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    msize = _model_size(mesh)
+
+    def one(leaf):
+        shp = leaf.shape
+        ax: list = [None] * len(shp)
+        b_idx = None
+        for i, s in enumerate(shp):
+            if s == batch_size and s % dp_size == 0:
+                b_idx = i
+                ax[i] = dp
+                break
+        cands = [(s, i) for i, s in enumerate(shp)
+                 if i != b_idx and s % msize == 0 and s > 1]
+        if cands:
+            _, m_idx = max(cands)
+            ax[m_idx] = "model"
+        return NamedSharding(mesh, P(*ax))
+
+    return jax.tree.map(one, cache_specs)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def constrain_compute(layer_tree: PyTree) -> PyTree:
+    """FSDP weight gather point: constrain per-layer parameter slices to
+    their COMPUTE sharding (the storage rule with the fsdp axes dropped).
+
+    Applied inside the scan body, this pins GSPMD to "all-gather the
+    (small) weights over the data axis" instead of its alternative
+    "partial dot + all-reduce the (huge) activations" -- see
+    EXPERIMENTS.md Perf iteration 3.  No-op outside a mesh context.
+    """
+    from .constraints import current_mesh
+    mesh = current_mesh()
+    if mesh is None:
+        return layer_tree
+
+    def one(path, leaf):
+        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+            return leaf
+        spec = _param_spec(_path_str(path), leaf.ndim, ())
+        # drop fsdp (empty tuple axes become None)
+        axes = [a if a not in ((), None) else None for a in spec]
+        try:
+            return jax.lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, P(*axes)))
+        except (ValueError, TypeError):
+            return leaf
+
+    return jax.tree_util.tree_map_with_path(one, layer_tree)

@@ -1,0 +1,2 @@
+from . import failures
+from .failures import SupervisorConfig, TrainSupervisor

@@ -1,0 +1,96 @@
+"""Train / serve step factories, shared by the drivers and the dry-run."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import ModelAPI
+from repro.optim import adamw
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt: adamw.AdamWState
+    step: jax.Array     # () int32
+
+
+def init_train_state(params: PyTree) -> TrainState:
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_state_specs(param_specs: PyTree) -> TrainState:
+    return TrainState(params=param_specs,
+                      opt=adamw.state_specs(param_specs),
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def make_train_step(api: ModelAPI, opt_cfg: adamw.AdamWConfig) -> Callable:
+    bf16_grads = getattr(api.cfg, "bf16_grads", False)
+    n_micro = max(1, getattr(api.cfg, "microbatch", 0))
+
+    def grad_fn(params, batch):
+        if bf16_grads:
+            # differentiate w.r.t. bf16 copies: gradients (and their
+            # cross-data-axis reduction) are bf16; AdamW math stays fp32
+            # against the fp32 master params in ``state.params``.
+            params = jax.tree.map(
+                lambda p: p.astype(jnp.bfloat16)
+                if p.dtype == jnp.float32 else p, params)
+        return jax.value_and_grad(api.loss)(params, batch)
+
+    def train_step(state: TrainState, batch: dict
+                   ) -> Tuple[TrainState, dict]:
+        if n_micro > 1:
+            # gradient accumulation: peak activation memory / n_micro,
+            # identical collective volume per global batch.
+            micro = jax.tree.map(
+                lambda x: x.reshape(n_micro, x.shape[0] // n_micro,
+                                    *x.shape[1:]), batch)
+
+            def mstep(acc, mb):
+                loss, g = grad_fn(state.params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), acc, g)
+                return acc, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            gsum, losses = jax.lax.scan(mstep, zeros, micro)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = grad_fn(state.params, batch)
+        params, opt, stats = adamw.update(opt_cfg, grads, state.opt,
+                                          state.params)
+        new_state = TrainState(params=params, opt=opt, step=state.step + 1)
+        return new_state, {"loss": loss, **stats}
+
+    return train_step
+
+
+def make_eval_step(api: ModelAPI) -> Callable:
+    def eval_step(params: PyTree, batch: dict) -> jax.Array:
+        return api.loss(params, batch)
+
+    return eval_step
+
+
+def make_prefill_step(api: ModelAPI) -> Callable:
+    def prefill_step(params: PyTree, batch: dict):
+        return api.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(api: ModelAPI) -> Callable:
+    def decode_step(params: PyTree, batch: dict, cache: PyTree):
+        logits, new_cache = api.decode(params, batch, cache)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token, new_cache
+
+    return decode_step

@@ -1,0 +1,28 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here -- tests see 1 CPU device;
+multi-device behaviour is tested via subprocesses (test_distributed.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def small_world():
+    from repro.core import generators
+    return generators.watts_strogatz(3000, 10, 0.25, seed=7)
+
+
+@pytest.fixture(scope="session")
+def clustered():
+    from repro.core import generators
+    return generators.clustered_graph(8, 250, p_in=0.05,
+                                      p_out_edges_per_v=1.0, seed=5)
+
+
+@pytest.fixture(scope="session")
+def powerlaw():
+    from repro.core import generators
+    return generators.powerlaw_ba(2000, 6, seed=9)
+
+
+@pytest.fixture()
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,59 @@
+"""Unit tests for the trip-count-weighted HLO analyzer (roofline input)."""
+from repro.launch.hlo_analysis import analyze, type_bytes
+
+SYNTHETIC_HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16]{1,0} get-tuple-element(%p), index=1
+  %w = f32[16,16]{1,0} constant({...})
+  %d = f32[8,16]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups=[2,2]<=[4], to_apply=%add
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,16]{1,0}) tuple(%i2, %ar)
+}
+
+%cond (p2: (s32[], f32[8,16])) -> pred[] {
+  %p2 = (s32[], f32[8,16]{1,0}) parameter(0)
+  %j = s32[] get-tuple-element(%p2), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%j, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,16]) -> f32[8,16] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]{1,0}) tuple(%zero, %a)
+  %w2 = (s32[], f32[8,16]{1,0}) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  %g = f32[8,16]{1,0} all-gather(%a), replica_groups=[2,2]<=[4], dimensions={0}
+  ROOT %out = f32[8,16]{1,0} get-tuple-element(%w2), index=1
+}
+"""
+
+
+def test_type_bytes():
+    assert type_bytes("f32[8,16]{1,0}") == 8 * 16 * 4
+    assert type_bytes("bf16[4]") == 8
+    assert type_bytes("(s32[], f32[2,2]{1,0})") == 4 + 16
+    assert type_bytes("pred[]") == 1
+
+
+def test_while_trip_count_weighting():
+    a = analyze(SYNTHETIC_HLO)
+    # dot: 2 * 8*16 out * 16 contraction = 4096 flops, x12 trips
+    assert a["dot_flops"] == 12 * 2 * 8 * 16 * 16
+    # all-reduce charged 2x operand bytes, x12; all-gather once
+    ar = a["collectives"]["all-reduce"]
+    ag = a["collectives"]["all-gather"]
+    assert ar["count"] == 12 and ar["bytes"] == 12 * 2 * 512
+    assert ag["count"] == 1 and ag["bytes"] == 512
+    assert a["collective_bytes"] == 12 * 1024 + 512
+
+
+def test_bytes_by_op_subset_of_total():
+    a = analyze(SYNTHETIC_HLO)
+    assert 0 < a["tpu_bytes"] <= a["hbm_bytes"]
+    assert "dot" in a["bytes_by_op"]

@@ -1,0 +1,144 @@
+"""Numerical equivalence: chunked/flash paths vs step-by-step oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import chunked_attention
+from repro.models.rwkv import wkv_chunked, wkv_ref
+from repro.models.ssm import ssd_chunked, ssd_ref
+
+
+def _ref_attn(q, k, v, causal):
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qf = q.astype(jnp.float32).reshape(b, sq, kvh, g, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    s = s / hd ** 0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, k.shape[1]), bool))
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd)
+
+
+@pytest.mark.parametrize("b,sq,skv,h,kv,hd,causal,cq,ck", [
+    (2, 64, 64, 4, 2, 16, True, 16, 16),
+    (1, 32, 32, 8, 8, 8, True, 32, 8),
+    (2, 64, 128, 4, 1, 16, False, 16, 32),
+    (1, 48, 80, 4, 4, 8, False, 16, 16),   # non-pow2 kv len via gcd
+])
+def test_flash_forward_and_grads(b, sq, skv, h, kv, hd, causal, cq, ck):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.standard_normal((b, sq, h, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, skv, kv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, skv, kv, hd)), jnp.float32)
+
+    def f(q, k, v):
+        return chunked_attention(q, k, v, causal=causal, chunk_q=cq,
+                                 chunk_kv=ck)
+
+    out = f(q, k, v)
+    expect = _ref_attn(q, k, v, causal)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect), atol=0.05, rtol=0.05)
+    co = jnp.asarray(rng.standard_normal(out.shape), jnp.float32)
+    g1 = jax.grad(lambda *a: jnp.sum(f(*a).astype(jnp.float32) * co),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: jnp.sum(_ref_attn(*a, causal) * co),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, e in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(e), atol=0.35, rtol=0.1)
+
+
+@pytest.mark.parametrize("b,s,h,hd,chunk", [
+    (2, 32, 2, 8, 8), (1, 64, 4, 16, 16), (2, 48, 1, 8, 16), (1, 16, 2, 4, 16),
+])
+def test_wkv_chunked_matches_recurrence(b, s, h, hd, chunk):
+    rng = np.random.default_rng(1)
+    r, k, v = (jnp.asarray(rng.standard_normal((b, s, h, hd)) * 0.5,
+                           jnp.float32) for _ in range(3))
+    lw = jnp.asarray(-np.exp(rng.standard_normal((b, s, h, hd)) * 0.5 - 1),
+                     jnp.float32)
+    u = jnp.asarray(rng.standard_normal((h, hd)) * 0.3, jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((b, h, hd, hd)) * 0.1, jnp.float32)
+    out_c, s_c = wkv_chunked(r, k, v, lw, u, s0, chunk)
+    out_r, s_r = wkv_ref(r, k, v, lw, u, s0)
+    np.testing.assert_allclose(np.asarray(out_c, np.float32),
+                               np.asarray(out_r, np.float32),
+                               atol=0.02, rtol=0.02)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r),
+                               atol=0.02, rtol=0.02)
+
+
+@pytest.mark.parametrize("b,s,h,hd,n,chunk", [
+    (2, 32, 3, 8, 4, 8), (1, 64, 2, 16, 8, 16), (2, 24, 1, 8, 4, 12),
+])
+def test_ssd_chunked_matches_recurrence(b, s, h, hd, n, chunk):
+    rng = np.random.default_rng(2)
+    xh = jnp.asarray(rng.standard_normal((b, s, h, hd)) * 0.5, jnp.float32)
+    Bc = jnp.asarray(rng.standard_normal((b, s, n)) * 0.5, jnp.float32)
+    Cc = jnp.asarray(rng.standard_normal((b, s, n)) * 0.5, jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((b, s, h))) * 0.5 + 0.01,
+                     jnp.float32)
+    a_log = jnp.asarray(-np.exp(rng.standard_normal(h) * 0.3), jnp.float32)
+    s0 = jnp.asarray(rng.standard_normal((b, h, n, hd)) * 0.1, jnp.float32)
+    out_c, s_c = ssd_chunked(xh, Bc, Cc, dt, a_log, s0, chunk)
+    out_r, s_r = ssd_ref(xh, Bc, Cc, dt, a_log, s0)
+    np.testing.assert_allclose(np.asarray(out_c, np.float32),
+                               np.asarray(out_r, np.float32),
+                               atol=0.02, rtol=0.02)
+    np.testing.assert_allclose(np.asarray(s_c), np.asarray(s_r),
+                               atol=0.02, rtol=0.02)
+
+
+def test_decode_matches_prefill_dense():
+    """Token-by-token decode equals teacher-forced forward (dense family)."""
+    import dataclasses
+    from repro.configs import ARCHS
+    from repro.models import build, init_params
+    from repro.models import dense as dense_mod
+
+    cfg = ARCHS["qwen2.5-14b"].reduced()   # exercises qkv_bias too
+    api = build(cfg)
+    params = init_params(api, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 24), 0, cfg.vocab)
+    full = dense_mod.forward(params, tok, cfg)
+    logits, cache = dense_mod.prefill(params, tok[:, :16], cfg)
+    cache = jax.tree.map(
+        lambda c: jnp.pad(c, ((0, 0), (0, 0), (0, 8), (0, 0), (0, 0))),
+        cache)
+    np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
+                               np.asarray(full[:, 15], np.float32),
+                               atol=0.1, rtol=0.05)
+    for t in range(16, 20):
+        logits, cache = dense_mod.decode_step(params, tok[:, t],
+                                              jnp.int32(t), cache, cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   atol=0.1, rtol=0.05)
+
+
+def test_decode_matches_prefill_rwkv():
+    from repro.configs import ARCHS
+    from repro.models import rwkv as rwkv_mod
+    from repro.models import build, init_params
+
+    cfg = ARCHS["rwkv6-1.6b"].reduced()
+    api = build(cfg)
+    params = init_params(api, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    full = rwkv_mod.forward(params, tok, cfg)
+    logits, state = rwkv_mod.prefill(params, tok[:, :8], cfg)
+    np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
+                               np.asarray(full[:, 7], np.float32),
+                               atol=0.1, rtol=0.05)
+    for t in range(8, 12):
+        logits, state = rwkv_mod.decode_step(params, tok[:, t], None,
+                                             state, cfg)
+        np.testing.assert_allclose(np.asarray(logits[:, 0], np.float32),
+                                   np.asarray(full[:, t], np.float32),
+                                   atol=0.1, rtol=0.05)

@@ -1,0 +1,94 @@
+"""Per-architecture smoke tests: reduced config, one forward/train step on
+CPU, asserting output shapes and no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS
+from repro.configs.base import ShapeConfig
+from repro.models import build, init_params, input_specs
+
+SMOKE_TRAIN = ShapeConfig("smoke_train", 32, 2, "train")
+SMOKE_DECODE = ShapeConfig("smoke_decode", 32, 2, "decode")
+
+
+def _materialize(specs, vocab, key):
+    out = {}
+    for k, s in specs.items():
+        if s.dtype == jnp.int32:
+            out[k] = (jax.random.randint(key, s.shape, 0, vocab)
+                      if len(s.shape) else jnp.int32(3))
+        else:
+            out[k] = jax.random.normal(key, s.shape, jnp.float32
+                                       ).astype(s.dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke(arch):
+    cfg = ARCHS[arch].reduced()
+    api = build(cfg)
+    params = init_params(api, jax.random.PRNGKey(0))
+    batch_specs, _ = input_specs(cfg, SMOKE_TRAIN)
+    batch = _materialize(batch_specs, cfg.vocab, jax.random.PRNGKey(1))
+
+    loss, grads = jax.jit(jax.value_and_grad(api.loss))(params, batch)
+    assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
+    gnorm = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, f"{arch}: bad grads"
+
+    # prefill: last-position logits with padded-vocab width
+    pf = {k: v for k, v in batch.items() if k != "labels"}
+    logits, cache = jax.jit(api.prefill)(params, pf)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab_padded
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    # one decode step against a fresh decode-shaped cache
+    _, cache_specs = input_specs(cfg, SMOKE_DECODE)
+    cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), cache_specs)
+    dbatch = {"token": batch["tokens"][:, 0], "pos": jnp.int32(3)}
+    dl, new_cache = jax.jit(api.decode)(params, dbatch, cache)
+    assert dl.shape == (2, 1, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(dl, np.float32)).all()
+    # cache structure is preserved (serving loop contract)
+    jax.tree.map(lambda a, b: None if a.shape == b.shape else
+                 pytest.fail(f"{arch}: cache shape changed"),
+                 cache, new_cache)
+
+
+@pytest.mark.parametrize("arch", ["kimi-k2-1t-a32b", "qwen3-moe-235b-a22b"])
+def test_moe_router_balance_loss_positive(arch):
+    cfg = ARCHS[arch].reduced()
+    api = build(cfg)
+    params = init_params(api, jax.random.PRNGKey(0))
+    from repro.models import moe
+    tok = jax.random.randint(jax.random.PRNGKey(2), (2, 32), 0, cfg.vocab)
+    _, aux = moe.forward(params, tok, cfg)
+    assert float(aux) > 0.5   # ~1.0 for uniform routing
+
+
+def test_param_counts_full_configs():
+    """Full (non-reduced) parameter counts are in the right ballpark."""
+    expected = {
+        "granite-8b": (7e9, 10e9),
+        # table dims with SwiGLU (3 MLP mats) -> heavier than the released
+        # 2-mat GPT-bigcode checkpoint; we follow the assignment table.
+        "granite-20b": (18e9, 30e9),
+        "stablelm-1.6b": (1.3e9, 2.1e9),
+        "qwen2.5-14b": (12e9, 16e9),
+        "kimi-k2-1t-a32b": (0.9e12, 1.2e12),
+        "qwen3-moe-235b-a22b": (2.0e11, 2.7e11),
+        "rwkv6-1.6b": (1.3e9, 2.2e9),
+        "zamba2-7b": (6e9, 9e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        api = build(ARCHS[arch])
+        assert lo < api.num_params < hi, (arch, api.num_params)
+
+
+def test_moe_active_params():
+    api = build(ARCHS["kimi-k2-1t-a32b"])
+    assert api.num_active_params < 0.06 * api.num_params
+    assert api.num_active_params > 20e9

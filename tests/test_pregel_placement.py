@@ -1,0 +1,95 @@
+"""Mini-Pregel correctness (vs networkx oracles) + Spinner integration."""
+import networkx as nx
+import numpy as np
+import pytest
+
+from repro.core import SpinnerConfig, generators, metrics, partition, pregel
+from repro.core.placement import (cross_shard_mass, place_experts,
+                                  place_pipeline_stages)
+
+
+@pytest.fixture(scope="module")
+def g_small():
+    return generators.watts_strogatz(500, 8, 0.3, seed=11)
+
+
+def _to_nx(g):
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.num_vertices))
+    G.add_edges_from(zip(g.src.tolist(), g.dst.tolist()))
+    return G
+
+
+class TestPregelApps:
+    def test_pagerank_matches_networkx(self, g_small):
+        labels = np.zeros(g_small.num_vertices, np.int32)
+        res = pregel.pagerank(g_small, labels, 1, iters=60)
+        nxpr = nx.pagerank(_to_nx(g_small), alpha=0.85, max_iter=200,
+                           tol=1e-10)
+        mine = res.values / res.values.sum()
+        theirs = np.array([nxpr[i] for i in range(g_small.num_vertices)])
+        np.testing.assert_allclose(mine, theirs, atol=2e-5)
+
+    def test_sssp_matches_networkx(self, g_small):
+        labels = np.zeros(g_small.num_vertices, np.int32)
+        res = pregel.sssp(g_small, 0, labels, 1)
+        lengths = nx.single_source_shortest_path_length(_to_nx(g_small), 0)
+        for v in range(0, g_small.num_vertices, 17):
+            expect = lengths.get(v, np.inf)
+            assert res.values[v] == expect
+
+    def test_wcc_matches_networkx(self):
+        g = generators.clustered_graph(4, 50, 0.2, 0.0, seed=1)
+        labels = np.zeros(g.num_vertices, np.int32)
+        res = pregel.wcc(g, labels, 1)
+        comps = list(nx.connected_components(_to_nx(g).to_undirected()))
+        for comp in comps:
+            ids = res.values[list(comp)]
+            assert len(np.unique(ids)) == 1
+
+    def test_spinner_partition_speeds_up_apps(self, g_small):
+        k = 8
+        res = partition(g_small, SpinnerConfig(k=k, seed=0),
+                        record_history=False)
+        hash_labels = (np.arange(g_small.num_vertices) * 2654435761 % k
+                       ).astype(np.int32)
+        for app in ("pagerank", "sssp", "wcc"):
+            cmp = pregel.compare_partitionings(
+                g_small, k, hash_labels, res.labels, app,
+                **({"iters": 5} if app == "pagerank" else {}))
+            assert cmp["speedup_b_over_a"] > 1.2, (app, cmp)
+            assert cmp["msg_reduction"] > 0.3, (app, cmp)
+
+
+class TestPlacement:
+    def _choices(self, E=64, K=4, T=8000, G=8, noise=0.25, seed=0):
+        rng = np.random.default_rng(seed)
+        topic = rng.integers(0, G, T)
+        scatter = rng.permutation(E)
+        pref = scatter[topic[:, None] * (E // G)
+                       + rng.integers(0, E // G, (T, K))]
+        rand = rng.integers(0, E, (T, K))
+        return np.where(rng.random((T, K)) < noise, rand, pref
+                        ).astype(np.int32)
+
+    def test_expert_placement_reduces_traffic(self):
+        choices = self._choices()
+        labels, stats = place_experts(choices, 64, 8, seed=0)
+        assert stats["traffic_reduction"] > 0.3
+        assert stats["rho"] < 1.15
+        # balanced: each shard gets experts
+        assert len(np.unique(labels)) == 8
+
+    def test_incremental_replacement_is_stable(self):
+        choices = self._choices(seed=0)
+        labels, _ = place_experts(choices, 64, 8, seed=0)
+        drift = self._choices(seed=1, noise=0.35)
+        labels2, stats2 = place_experts(drift, 64, 8, seed=1, prev=labels)
+        assert stats2["moved_from_prev"] < 0.5
+        assert stats2["cross_after"] <= stats2["cross_before"] + 0.02
+
+    def test_pipeline_stage_assignment(self):
+        costs = np.ones(48)
+        labels, stats = place_pipeline_stages(costs, 4)
+        assert labels.shape == (48,)
+        assert stats["stage_cost_max_over_mean"] < 1.5

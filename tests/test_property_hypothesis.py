@@ -1,0 +1,80 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SpinnerConfig, elastic_relabel, from_edges, metrics,
+                        partition)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+edge_lists = st.integers(5, 60).flatmap(
+    lambda v: st.tuples(
+        st.just(v),
+        st.lists(st.tuples(st.integers(0, v - 1), st.integers(0, v - 1)),
+                 min_size=1, max_size=300)))
+
+
+@given(edge_lists)
+def test_symmetrization_invariants(data):
+    v, edges = data
+    src = [e[0] for e in edges]
+    dst = [e[1] for e in edges]
+    g = from_edges(src, dst, v, directed=True)
+    g.validate()
+    # Eq. 3: weights only 1 or 2
+    assert set(np.unique(g.weight)) <= {1.0, 2.0}
+    # no self loops
+    assert not np.any(g.src == g.dst)
+    # total weight is even (each undirected edge counted twice)
+    assert g.total_weight % 2 == 0
+
+
+@given(edge_lists, st.integers(2, 6))
+def test_partition_labels_in_range_and_loads_conserved(data, k):
+    v, edges = data
+    g = from_edges([e[0] for e in edges], [e[1] for e in edges], v,
+                   directed=False)
+    cfg = SpinnerConfig(k=k, seed=1, max_iters=15)
+    res = partition(g, cfg, record_history=False)
+    assert res.labels.shape == (v,)
+    assert res.labels.min() >= 0 and res.labels.max() < k
+    # loads sum to total weighted degree regardless of migrations
+    np.testing.assert_allclose(float(res.loads.sum()), g.total_weight,
+                               rtol=1e-4, atol=1e-3)
+
+
+@given(st.integers(1, 6), st.integers(1, 6), st.integers(0, 10))
+def test_elastic_relabel_ranges(k_old, n_new, seed):
+    prev = np.random.default_rng(seed).integers(
+        0, k_old, 5000).astype(np.int32)
+    out = elastic_relabel(prev, k_old, k_old + n_new, seed=seed)
+    assert out.min() >= 0 and out.max() < k_old + n_new
+    if n_new == 0:
+        np.testing.assert_array_equal(out, prev)
+    else:
+        # movers go ONLY to new partitions
+        moved = out != prev
+        assert np.all(out[moved] >= k_old)
+
+
+@given(st.integers(2, 8), st.integers(0, 5))
+def test_partitioning_difference_bounds(k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, k, 1000).astype(np.int32)
+    b = rng.integers(0, k, 1000).astype(np.int32)
+    d = metrics.partitioning_difference(a, b)
+    assert 0.0 <= d <= 1.0
+    assert metrics.partitioning_difference(a, a) == 0.0
+
+
+@given(edge_lists, st.integers(2, 5))
+def test_phi_rho_bounds(data, k):
+    v, edges = data
+    g = from_edges([e[0] for e in edges], [e[1] for e in edges], v,
+                   directed=True)
+    labels = np.random.default_rng(0).integers(0, k, v).astype(np.int32)
+    assert 0.0 <= metrics.phi(g, labels) <= 1.0
+    if g.num_undirected_edges:
+        assert metrics.rho(g, labels, k) >= 1.0 - 1e-6

@@ -1,0 +1,73 @@
+"""Incremental (Sec 3.4) and elastic (Sec 3.5) repartitioning."""
+import numpy as np
+import pytest
+
+from repro.core import (SpinnerConfig, adapt, elastic_relabel, metrics,
+                        partition, resize)
+from repro.core.graph import add_edges
+
+
+@pytest.fixture(scope="module")
+def base(small_world):
+    cfg = SpinnerConfig(k=8, seed=0)
+    res = partition(small_world, cfg, record_history=False)
+    return small_world, cfg, res
+
+
+class TestIncremental:
+    def test_fewer_iterations_than_scratch(self, base):
+        g, cfg, res = base
+        rng = np.random.default_rng(3)
+        m = int(0.01 * g.num_undirected_edges)
+        g2 = add_edges(g, rng.integers(0, g.num_vertices, m),
+                       rng.integers(0, g.num_vertices, m))
+        res2 = adapt(g2, res.labels, cfg, record_history=False)
+        assert res2.iterations < 0.5 * res.iterations
+        assert metrics.phi(g2, res2.labels) > 0.8 * metrics.phi(g, res.labels)
+
+    def test_stability(self, base):
+        g, cfg, res = base
+        rng = np.random.default_rng(4)
+        m = int(0.01 * g.num_undirected_edges)
+        g2 = add_edges(g, rng.integers(0, g.num_vertices, m),
+                       rng.integers(0, g.num_vertices, m))
+        res2 = adapt(g2, res.labels, cfg, record_history=False)
+        diff = metrics.partitioning_difference(res.labels, res2.labels)
+        assert diff < 0.15    # paper: 8-11% move vs 95-98% from scratch
+
+    def test_new_vertices_to_least_loaded(self, base):
+        g, cfg, res = base
+        v0 = g.num_vertices
+        g2 = add_edges(g, [v0, v0 + 1], [0, 1], num_vertices=v0 + 2)
+        res2 = adapt(g2, res.labels, cfg, record_history=False)
+        assert res2.labels.shape[0] == v0 + 2
+        assert metrics.rho(g2, res2.labels, cfg.k) < cfg.c + 0.05
+
+
+class TestElastic:
+    def test_grow_migration_probability(self):
+        prev = np.zeros(200_000, np.int32)
+        out = elastic_relabel(prev, k_old=8, k_new=10, seed=0)
+        moved = (out != prev).mean()
+        # Eq. 10: p = n/(k+n) = 2/10
+        assert abs(moved - 0.2) < 0.01
+        assert set(np.unique(out[out != 0])) <= {8, 9}
+
+    def test_shrink_evicts_only_removed(self):
+        rng = np.random.default_rng(0)
+        prev = rng.integers(0, 8, 100_000).astype(np.int32)
+        out = elastic_relabel(prev, k_old=8, k_new=6, seed=0)
+        assert out.max() < 6
+        stayed = prev < 6
+        np.testing.assert_array_equal(out[stayed], prev[stayed])
+
+    def test_resize_recovers_quality(self, base):
+        g, cfg, res = base
+        cfg10 = SpinnerConfig(k=10, seed=5)
+        res2, init = resize(g, res.labels, cfg10, k_old=8,
+                            record_history=False)
+        assert metrics.rho(g, res2.labels, 10) < cfg10.c + 0.05
+        assert metrics.phi(g, res2.labels) > 0.75 * metrics.phi(g, res.labels)
+        # elastic start moves far fewer vertices than a random restart would
+        diff = metrics.partitioning_difference(res.labels, res2.labels)
+        assert diff < 0.55

@@ -1,0 +1,66 @@
+"""End-to-end training loop: loss decreases, checkpoint/restart bit-exact."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint
+from repro.configs import ARCHS
+from repro.data import pipeline
+from repro.models import build, init_params
+from repro.optim import adamw
+from repro.train import steps
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ARCHS["stablelm-1.6b"].reduced()
+    api = build(cfg)
+    params = init_params(api, jax.random.PRNGKey(0))
+    opt_cfg = adamw.AdamWConfig(lr=3e-3, warmup_steps=5, total_steps=200,
+                                weight_decay=0.01)
+    train_step = jax.jit(steps.make_train_step(api, opt_cfg))
+    data_cfg = pipeline.DataConfig(vocab=cfg.vocab, seq_len=64,
+                                   global_batch=8, seed=1, n_motifs=8)
+    return api, train_step, data_cfg, params
+
+
+def _run(train_step, state, data_cfg, start, n):
+    losses = []
+    for step in range(start, start + n):
+        batch = jax.tree.map(jnp.asarray, pipeline.batch_at(data_cfg, step))
+        state, stats = train_step(state, batch)
+        losses.append(float(stats["loss"]))
+    return state, losses
+
+
+def test_loss_decreases(setup):
+    api, train_step, data_cfg, params = setup
+    state = steps.init_train_state(params)
+    state, losses = _run(train_step, state, data_cfg, 0, 40)
+    assert losses[-1] < 0.5 * losses[0], losses[::8]
+    assert int(state.step) == 40
+
+
+def test_checkpoint_restart_bitexact(setup, tmp_path):
+    api, train_step, data_cfg, params = setup
+    state = steps.init_train_state(params)
+    state, _ = _run(train_step, state, data_cfg, 0, 5)
+    checkpoint.save(str(tmp_path), 5, state)
+
+    # continue 5 more steps directly
+    cont, losses_a = _run(train_step, state, data_cfg, 5, 5)
+
+    # crash + restart from checkpoint (data is a pure function of step)
+    restored = checkpoint.restore(str(tmp_path), state)
+    rest, losses_b = _run(train_step, restored, data_cfg, 5, 5)
+    assert losses_a == losses_b  # bit-exact restart
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), cont.params, rest.params)
+
+
+def test_eval_step_matches_loss(setup):
+    api, train_step, data_cfg, params = setup
+    ev = jax.jit(steps.make_eval_step(api))
+    batch = jax.tree.map(jnp.asarray, pipeline.batch_at(data_cfg, 0))
+    assert np.isfinite(float(ev(params, batch)))
