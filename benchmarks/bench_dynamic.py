@@ -18,7 +18,9 @@ from .common import emit, get_graph, timed
 def run(quick: bool = False) -> list:
     g = get_graph("smallworld-100k")
     cfg = SpinnerConfig(k=32, seed=0, max_iters=80 if quick else 150)
-    base, t_base = timed(partition, g, cfg, record_history=False)
+    # fused engine: a whole (re)partitioning run is one device dispatch
+    base, t_base = timed(partition, g, cfg, record_history=False,
+                         engine="fused")
     rng = np.random.default_rng(42)
     rows = []
     fracs = (0.001, 0.01) if quick else (0.001, 0.005, 0.01, 0.025, 0.05)
@@ -30,9 +32,10 @@ def run(quick: bool = False) -> list:
         # same random trajectory and under-reports the shuffle
         cfg_scr = SpinnerConfig(k=cfg.k, seed=cfg.seed + 1000,
                                 max_iters=cfg.max_iters)
-        scratch, t_scr = timed(partition, g2, cfg_scr, record_history=False)
+        scratch, t_scr = timed(partition, g2, cfg_scr, record_history=False,
+                               engine="fused")
         adapted, t_ad = timed(adapt, g2, base.labels, cfg,
-                              record_history=False)
+                              record_history=False, engine="fused")
         time_saving = 1 - t_ad / t_scr
         iter_saving = 1 - adapted.iterations / max(1, scratch.iterations)
         msg_saving = 1 - adapted.total_messages / max(1.0,

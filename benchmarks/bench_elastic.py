@@ -14,13 +14,18 @@ def run(quick: bool = False) -> list:
     g = get_graph("smallworld-100k")
     k0 = 32
     cfg0 = SpinnerConfig(k=k0, seed=0, max_iters=80 if quick else 150)
-    base, _ = timed(partition, g, cfg0, record_history=False)
+    # fused engine: elastic restarts are a single device dispatch
+    base, _ = timed(partition, g, cfg0, record_history=False,
+                    engine="fused")
     rows = []
     for n_new in (1, 4) if quick else (1, 2, 4, 8, 16, 32):
         k = k0 + n_new
         cfg = SpinnerConfig(k=k, seed=1, max_iters=80 if quick else 150)
-        scratch, t_scr = timed(partition, g, cfg, record_history=False)
-        (adapted, relabeled), t_ad = timed(resize, g, base.labels, cfg, k0)
+        scratch, t_scr = timed(partition, g, cfg, record_history=False,
+                               engine="fused")
+        (adapted, relabeled), t_ad = timed(resize, g, base.labels, cfg, k0,
+                                           record_history=False,
+                                           engine="fused")
         time_saving = 1 - t_ad / t_scr
         msg_saving = 1 - adapted.total_messages / max(
             1.0, scratch.total_messages)

@@ -1,0 +1,96 @@
+"""Host vs fused vs chunked engine: per-iteration dispatch overhead.
+
+The fused runner executes the whole run as one ``lax.while_loop`` device
+call; the host loop pays a dispatch + sync round-trip per iteration.  This
+suite isolates that overhead: each runner is compiled once, then timed on a
+steady-state run with the same seed (so all engines execute the identical
+label trajectory and iteration count), and the per-iteration gap between
+host and fused is reported as dispatch overhead.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import SpinnerConfig, engine, partition, prepare_init
+
+from .common import emit, get_graph
+
+
+def _time_engine(graph, cfg, eng, chunk_size=None):
+    """(seconds_warm, iterations): second call timed, first pays compile."""
+    kw = {"record_history": False, "engine": eng}
+    if chunk_size is not None:
+        kw["chunk_size"] = chunk_size
+    res = partition(graph, cfg, **kw)        # warm-up/compile
+    t0 = time.time()
+    res = partition(graph, cfg, **kw)
+    return time.time() - t0, res.iterations
+
+
+def run(quick: bool = False) -> list:
+    g = get_graph("powerlaw-50k" if quick else "smallworld-100k")
+    cfg = SpinnerConfig(k=32, seed=0, max_iters=40 if quick else 100)
+    rows = []
+
+    t_host, iters = _time_engine(g, cfg, "host")
+    t_fused, it_f = _time_engine(g, cfg, "fused")
+    # both engines run f32 halting, so counts should agree; report rather
+    # than assert so a divergence can't abort the whole benchmark run
+    parity = "ok" if it_f == iters else f"DIVERGED({iters}vs{it_f})"
+    per_host = t_host / max(1, iters)
+    per_fused = t_fused / max(1, it_f)
+    rows.append({
+        "name": "engine/host",
+        "us_per_call": per_host * 1e6,
+        "derived": f"iters={iters};total_s={t_host:.3f}",
+        "iterations": iters, "total_s": t_host,
+    })
+    rows.append({
+        "name": "engine/fused",
+        "us_per_call": per_fused * 1e6,
+        "derived": f"iters={it_f};total_s={t_fused:.3f};"
+                   f"speedup={per_host / max(per_fused, 1e-12):.2f}x;"
+                   f"parity={parity}",
+        "iterations": it_f, "total_s": t_fused,
+    })
+    rows.append({
+        "name": "engine/dispatch_overhead",
+        "us_per_call": (per_host - per_fused) * 1e6,
+        "derived": f"host_per_iter_us={per_host * 1e6:.1f};"
+                   f"fused_per_iter_us={per_fused * 1e6:.1f}",
+    })
+
+    for chunk in (8, 32):
+        t_chunk, it_c = _time_engine(g, cfg, "chunked", chunk_size=chunk)
+        per_chunk = t_chunk / max(1, it_c)
+        dispatches = -(-it_c // chunk)
+        rows.append({
+            "name": f"engine/chunked_cs{chunk}",
+            "us_per_call": per_chunk * 1e6,
+            "derived": f"iters={it_c};dispatches={dispatches};"
+                       f"total_s={t_chunk:.3f};"
+                       f"speedup_vs_host={per_host / max(per_chunk, 1e-12):.2f}x",
+            "iterations": it_c, "dispatches": dispatches,
+        })
+
+    # compile cost of the single-dispatch path (first call - steady state)
+    labels, loads, key = prepare_init(g, cfg)
+    runner = engine.make_fused_runner(g, cfg)
+    state0 = engine.init_state(labels, loads, key)
+    t0 = time.time()
+    jax.block_until_ready(runner(state0))
+    t_cold = time.time() - t0
+    rows.append({
+        "name": "engine/fused_compile",
+        "us_per_call": (t_cold - t_fused) * 1e6,
+        "derived": f"cold_s={t_cold:.3f};steady_s={t_fused:.3f}",
+    })
+
+    emit(rows, "bench_engine")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -53,6 +53,26 @@ def run(quick: bool = False) -> list:
                        f"arith_intensity={mxu_flops / hbm:.1f}",
             "err": err, "vmem": vmem, "e_pad": e_pad,
         })
+
+    # end-to-end: both score backends driven by the fused on-device engine
+    # (interpret-mode Pallas is host-speed; the row validates the plumbing
+    # and gives the XLA-backend steady-state number)
+    from repro.core import SpinnerConfig, partition
+    g_small = generators.powerlaw_ba(1000 if quick else 3000, 6, seed=1)
+    for backend in ("xla",) if quick else ("xla", "pallas"):
+        cfg = SpinnerConfig(k=16, seed=0, max_iters=30,
+                            score_backend=backend)
+        partition(g_small, cfg, record_history=False,
+                  engine="fused")                     # compile
+        t0 = time.time()
+        res = partition(g_small, cfg, record_history=False, engine="fused")
+        dt = time.time() - t0
+        rows.append({
+            "name": f"kernel/fused_engine/{backend}",
+            "us_per_call": dt * 1e6 / max(1, res.iterations),
+            "derived": f"iters={res.iterations};total_s={dt:.3f};"
+                       f"backend={backend}",
+        })
     emit(rows, "bench_kernel")
     return rows
 

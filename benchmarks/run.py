@@ -15,12 +15,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--suite", default=None,
                     help="quality|convergence|scalability|dynamic|elastic|"
-                         "apps|placement|kernel|roofline")
+                         "apps|placement|kernel|engine|roofline")
     args = ap.parse_args()
 
     from . import (bench_apps, bench_convergence, bench_dynamic,
-                   bench_elastic, bench_kernel, bench_placement,
-                   bench_quality, bench_scalability, roofline)
+                   bench_elastic, bench_engine, bench_kernel,
+                   bench_placement, bench_quality, bench_scalability,
+                   roofline)
     suites = {
         "quality": bench_quality.run,          # Fig 3, Tables 1 & 3
         "convergence": bench_convergence.run,  # Fig 4
@@ -30,6 +31,7 @@ def main() -> None:
         "apps": bench_apps.run,                # Fig 8, Table 4
         "placement": bench_placement.run,      # beyond-paper
         "kernel": bench_kernel.run,            # Pallas kernel
+        "engine": bench_engine.run,            # host-vs-fused dispatch
         "roofline": roofline.run,              # deliverable (g)
     }
     selected = ([args.suite] if args.suite else list(suites))

@@ -13,14 +13,18 @@ print(f"graph: {graph.num_vertices} vertices, "
       f"{graph.num_undirected_edges} edges\n")
 
 k = 16
-res = partition(graph, SpinnerConfig(k=k, seed=0), record_history=False)
+# fused engine: the full run (and every elastic restart below) is a single
+# lax.while_loop device dispatch
+res = partition(graph, SpinnerConfig(k=k, seed=0), record_history=False,
+                engine="fused")
 print(f"initial k={k}: phi={metrics.phi(graph, res.labels):.3f} "
       f"rho={metrics.rho(graph, res.labels, k):.3f} "
       f"({res.iterations} iters)")
 
 for k_new, event in ((20, "4 nodes join"), (12, "8 nodes preempted")):
     cfg = SpinnerConfig(k=k_new, seed=1)
-    res_new, relabeled = resize(graph, res.labels, cfg, k_old=k)
+    res_new, relabeled = resize(graph, res.labels, cfg, k_old=k,
+                                record_history=False, engine="fused")
     moved = metrics.partitioning_difference(res.labels, res_new.labels)
     print(f"{event}: k={k} -> {k_new}  "
           f"adapted in {res_new.iterations} iters, moved {moved:.1%}  "

@@ -16,7 +16,8 @@ graph = generators.powerlaw_ba(30_000, 8, seed=2)   # hub-heavy, Twitter-like
 print(f"graph: {graph.num_vertices} vertices, "
       f"{graph.num_undirected_edges} edges (power-law)")
 
-res = partition(graph, SpinnerConfig(k=k, seed=0), record_history=False)
+res = partition(graph, SpinnerConfig(k=k, seed=0), record_history=False,
+                engine="fused")   # one device dispatch for the whole run
 hash_labels = (np.arange(graph.num_vertices) * 2654435761 % k
                ).astype(np.int32)
 
@@ -37,7 +38,7 @@ m = int(0.01 * graph.num_undirected_edges)
 grown = add_edges(graph, rng.integers(0, graph.num_vertices, m),
                   rng.integers(0, graph.num_vertices, m))
 res2 = adapt(grown, res.labels, SpinnerConfig(k=k, seed=0),
-             record_history=False)
+             record_history=False, engine="fused")
 moved = metrics.partitioning_difference(res.labels, res2.labels)
 print(f"\n+1% edges: adapted in {res2.iterations} iterations, "
       f"moved {moved:.1%} of vertices "

@@ -13,7 +13,12 @@ print(f"graph: {graph.num_vertices} vertices, "
 
 # paper defaults: c = 1.05, eps = 1e-3, w = 5  (Section 5.1)
 cfg = SpinnerConfig(k=16, c=1.05, eps=1e-3, halt_window=5, seed=0)
-result = partition(graph, cfg)
+# engine="chunked": the iteration loop runs on device (32 iterations per
+# dispatch) with per-iteration history recorded on device.  For the
+# single-dispatch lax.while_loop engine (no history), call
+# partition(graph, cfg, record_history=False) and let engine="auto" pick
+# "fused", or pass engine="fused" explicitly.
+result = partition(graph, cfg, engine="chunked")
 
 phi = metrics.phi(graph, result.labels)
 rho = metrics.rho(graph, result.labels, cfg.k)

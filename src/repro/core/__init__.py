@@ -1,17 +1,21 @@
 """Spinner core: the paper's contribution as a composable JAX module."""
-from . import generators, graph, incremental, metrics
+from . import engine, generators, graph, incremental, metrics
+from .engine import (SpinnerState, make_fused_runner, make_chunked_runner,
+                     make_iteration, make_step_fn, run_chunked, run_fused)
 from .graph import Graph, TiledCSR, add_edges, build_tiled_csr, from_edges
 from .incremental import adapt, elastic_relabel, extend_labels, resize
 from .metrics import (partitioning_difference, phi, phi_weighted, rho,
                       score_global, summarize)
 from .spinner import (PartitionResult, SpinnerConfig, compute_loads,
-                      init_labels, make_step, partition)
+                      init_labels, make_step, partition, prepare_init)
 
 __all__ = [
     "Graph", "TiledCSR", "from_edges", "add_edges", "build_tiled_csr",
-    "SpinnerConfig", "PartitionResult", "partition", "make_step",
+    "SpinnerConfig", "PartitionResult", "SpinnerState", "partition",
+    "prepare_init", "make_step", "make_step_fn", "make_iteration",
+    "make_fused_runner", "make_chunked_runner", "run_fused", "run_chunked",
     "init_labels", "compute_loads", "adapt", "resize", "elastic_relabel",
     "extend_labels", "phi", "phi_weighted", "rho", "score_global",
-    "partitioning_difference", "summarize", "generators", "graph",
+    "partitioning_difference", "summarize", "engine", "generators", "graph",
     "metrics", "incremental",
 ]

@@ -1,0 +1,394 @@
+"""Device-resident Spinner LPA engine (state / step / runner layering).
+
+The legacy driver in ``spinner.py`` round-trips to the host every iteration
+(``float(score_g)`` sync, host PRNG splitting, per-iteration numpy history),
+so on small graphs wall-clock is dominated by dispatch latency rather than
+the ComputeScores kernel.  This module keeps the whole run on device:
+
+  * ``SpinnerState`` -- a pure functional pytree carrying everything one LPA
+    iteration reads or writes: labels, loads, the PRNG key, the Eq. 9
+    halting aggregates (best_score / stall), iteration counter, and the
+    migration statistics of the last step.
+  * ``make_iteration`` -- the two-phase ComputeScores / ComputeMigrations
+    math (Eqs. 8, 11, 12) as a pure function, shared verbatim with the
+    legacy host loop so the two engines are bit-compatible oracles of each
+    other.  The Eq. 8 numerator is delegated to a pluggable score backend
+    (``repro.kernels.ops.get_score_backend``): the XLA scatter-add path and
+    the Pallas ``spinner_scores_tiled`` kernel are interchangeable and
+    selected once at trace time.
+  * ``make_step_fn`` -- one fully-jittable state -> state transition:
+    PRNG split, iteration, and the Section 3.3 eps/halt_window stall logic
+    evaluated on device.
+  * ``run_fused`` -- the entire run as a single ``jax.lax.while_loop``
+    dispatch; nothing touches the host until the final state is read back.
+  * ``run_chunked`` -- a ``jax.lax.scan`` that executes ``chunk_size``
+    iterations per dispatch and records a fixed-size on-device history
+    (score / migrations / message mass / phi / rho per iteration) for
+    callers that need per-iteration traces; the host only syncs once per
+    chunk to check the halting flag.
+
+``spinner.partition`` selects between these runners and the legacy host
+loop via its ``engine`` argument; ``incremental.adapt`` / ``resize`` ride on
+the same entry point, so incremental and elastic restarts are a single
+device call as well.
+"""
+from __future__ import annotations
+
+import weakref
+import dataclasses
+from typing import Callable, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .graph import Graph
+
+DEFAULT_CHUNK = 32
+
+# Per-Graph memoization.  partition()/adapt()/resize() are typically called
+# many times against the same Graph (benchmark sweeps, incremental
+# restarts); rebuilding closures per call would re-upload edge arrays and
+# re-trace/re-compile the jitted step or whole while_loop/scan each time,
+# wiping out the dispatch win.  Every cache below is keyed on id(graph) + a
+# per-use suffix, with a weakref guard so entries die with their graph and
+# a recycled id() can never alias.
+_RUNNER_CACHE: dict = {}      # (kind, cfg, chunk_size, record) -> runner
+_STEP_CACHE: dict = {}        # (cfg,) -> jitted iterate (host loop's step)
+_SCORE_FN_CACHE: dict = {}    # (backend, k) -> score closure
+_EDGE_UPLOAD_CACHE: dict = {} # () -> (src, dst, weight, deg_w) on device
+
+
+def _graph_cached(cache: dict, graph: Graph, suffix: tuple,
+                  build: Callable[[], object]):
+    """Memoize ``build()`` per (graph, suffix); evicted when graph dies."""
+    key = (id(graph),) + suffix
+    entry = cache.get(key)
+    if entry is not None and entry[0]() is graph:
+        return entry[1]
+    value = build()
+    cache[key] = (weakref.ref(graph, lambda _: cache.pop(key, None)), value)
+    return value
+
+
+def _cache_cfg(cfg):
+    """Cache-key view of the config: the seed never enters the traced
+    computation (it only feeds host-side PRNGKey creation in
+    ``prepare_init``), so seed sweeps must share one compiled runner."""
+    return dataclasses.replace(cfg, seed=0)
+
+
+def _get_runner(kind: str, graph: Graph, cfg, chunk_size: Optional[int],
+                score_fn: Optional[Callable], record: bool = True) -> Callable:
+    if score_fn is not None:
+        # custom backend closure: not keyable, build fresh
+        if kind == "fused":
+            return make_fused_runner(graph, cfg, score_fn)
+        return make_chunked_runner(graph, cfg, chunk_size, score_fn,
+                                   record=record)
+    if kind == "fused":
+        build = lambda: make_fused_runner(graph, cfg)
+    else:
+        build = lambda: make_chunked_runner(graph, cfg, chunk_size,
+                                            record=record)
+    return _graph_cached(_RUNNER_CACHE, graph,
+                         (kind, _cache_cfg(cfg), chunk_size, record), build)
+
+
+def cached_jit_step(graph: Graph, cfg) -> Callable:
+    """Jitted ``iterate(labels, loads, key)``, cached per (graph, cfg).
+
+    This is the host loop's step; caching it keeps ``engine="host"`` from
+    re-tracing on every partition() call, same as the fused runners.
+    """
+    return _graph_cached(_STEP_CACHE, graph, (_cache_cfg(cfg),),
+                         lambda: jax.jit(make_iteration(graph, cfg)))
+
+
+class SpinnerState(NamedTuple):
+    """Carry of the fused LPA loop -- one pytree, fully device-resident."""
+
+    labels: jax.Array          # (V,) int32 current assignment
+    loads: jax.Array           # (k,) float32 B(l) (Eq. 6), running update
+    key: jax.Array             # PRNG key consumed by splitting each iter
+    best_score: jax.Array      # f32 scalar, best score(G) so far (Eq. 9)
+    stall: jax.Array           # int32, consecutive non-improving iterations
+    iteration: jax.Array       # int32, iterations completed
+    halted: jax.Array          # bool, eps/halt_window criterion fired
+    total_messages: jax.Array  # f32, cumulative migrant degree mass
+    score: jax.Array           # f32, score(G) after the last iteration
+    migrations: jax.Array      # int32, migrating vertices last iteration
+    message_mass: jax.Array    # f32, migrant degree mass last iteration
+
+
+def init_state(labels: jax.Array, loads: jax.Array,
+               key: jax.Array) -> SpinnerState:
+    return SpinnerState(
+        labels=jnp.asarray(labels, jnp.int32),
+        loads=jnp.asarray(loads, jnp.float32),
+        key=key,
+        best_score=jnp.float32(-jnp.inf),
+        stall=jnp.int32(0),
+        iteration=jnp.int32(0),
+        halted=jnp.asarray(False),
+        total_messages=jnp.float32(0.0),
+        score=jnp.float32(0.0),
+        migrations=jnp.int32(0),
+        message_mass=jnp.float32(0.0),
+    )
+
+
+def device_edges(graph: Graph):
+    """(src, dst, weight, deg_w) as device arrays, uploaded once per Graph.
+
+    Shared by every runner variant and the XLA score backend: a config
+    sweep over one graph would otherwise hold one 2*E copy of
+    src/dst/weight per variant.
+    """
+    return _graph_cached(
+        _EDGE_UPLOAD_CACHE, graph, (),
+        lambda: (jnp.asarray(graph.src), jnp.asarray(graph.dst),
+                 jnp.asarray(graph.weight), jnp.asarray(graph.deg_w)))
+
+
+def make_score_fn(graph: Graph, cfg) -> Callable[[jax.Array], jax.Array]:
+    """Build (or fetch cached) the Eq. 8 numerator fn for the backend.
+
+    Cached per (graph, backend, k): the backend build uploads the O(E)
+    edge arrays (and, for pallas, retiles the CSR on the host), none of
+    which depends on the rest of the config -- so runner variants
+    (different eps/seed/max_iters sweeping the same graph) share one
+    built backend.
+    """
+    from repro.kernels import ops as kernel_ops   # lazy: no import cycle
+    name = cfg.resolved_score_backend()
+
+    def build():
+        return kernel_ops.get_score_backend(name).build(graph, cfg.k)
+
+    return _graph_cached(_SCORE_FN_CACHE, graph, (name, cfg.k), build)
+
+
+def make_iteration(graph: Graph, cfg,
+                   score_fn: Optional[Callable] = None) -> Callable:
+    """One LPA iteration (ComputeScores + ComputeMigrations) as a pure fn.
+
+    Returns ``iterate(labels, loads, key) -> (labels, loads, score_g,
+    n_migrations, migration_mass)``.  Both the legacy host loop and the
+    fused runners call exactly this function, which is what makes them
+    oracles of each other.
+    """
+    if score_fn is None:
+        score_fn = make_score_fn(graph, cfg)
+    deg_w = device_edges(graph)[3]
+    V, k = graph.num_vertices, cfg.k
+    C = jnp.float32(cfg.capacity(graph))
+    degree_weighted = cfg.migration_weighting == "edges"
+
+    def iterate(labels: jax.Array, loads: jax.Array, key: jax.Array):
+        # ---- ComputeScores (Eq. 8) -------------------------------------
+        scores = score_fn(labels)                          # (V, k) f32
+        norm = scores / jnp.maximum(deg_w, 1.0)[:, None]
+        penalty = loads / C                                # pi(l) (Eq. 7)
+        total = norm - penalty[None, :]
+
+        k_noise, k_mig = jax.random.split(key)
+        noise = jax.random.uniform(k_noise, (V, k), jnp.float32,
+                                   0.0, cfg.tie_noise)
+        bonus = cfg.current_bonus * jax.nn.one_hot(labels, k,
+                                                   dtype=jnp.float32)
+        best = jnp.argmax(total + noise + bonus, axis=1).astype(jnp.int32)
+        want = best != labels
+
+        # ---- ComputeMigrations (Eq. 11-12) -----------------------------
+        measure = deg_w if degree_weighted else jnp.ones_like(deg_w)
+        M = jnp.zeros((k,), jnp.float32).at[best].add(
+            jnp.where(want, measure, 0.0))
+        R = jnp.maximum(C - loads, 0.0)                    # Eq. 11
+        p = jnp.clip(R / jnp.maximum(M, 1e-9), 0.0, 1.0)   # Eq. 12
+        u = jax.random.uniform(k_mig, (V,), jnp.float32)
+        migrate = want & (u < p[best])
+
+        new_labels = jnp.where(migrate, best, labels)
+        mig_deg = jnp.where(migrate, deg_w, 0.0)
+        new_loads = (loads
+                     .at[best].add(mig_deg)
+                     .at[labels].add(-mig_deg))
+
+        # ---- halting aggregate: score(G) at the new assignment (Eq. 9) --
+        sel = jnp.take_along_axis(total, new_labels[:, None], axis=1)[:, 0]
+        score_g = jnp.sum(sel)
+        # migration mass = sum of migrant degrees = Pregel messages sent
+        # (each migrating vertex notifies all neighbors, Section 4.1.3)
+        return (new_labels, new_loads, score_g,
+                jnp.sum(migrate).astype(jnp.int32), jnp.sum(mig_deg))
+
+    return iterate
+
+
+def _halting_update(best_score, stall, score_g, eps, halt_window):
+    """Section 3.3 stall logic on device, mirroring the host loop exactly.
+
+    On the first iteration best_score is -inf, so tol is inf and
+    ``best + tol`` is NaN: the comparison is False and the iteration counts
+    toward the stall window -- the same (intentional) behaviour as the
+    legacy host loop's float arithmetic.
+    """
+    tol = eps * jnp.maximum(jnp.float32(1.0), jnp.abs(best_score))
+    improved = score_g > best_score + tol
+    new_best = jnp.maximum(best_score, score_g)
+    new_stall = jnp.where(improved, jnp.int32(0), stall + 1)
+    return new_best, new_stall, new_stall >= halt_window
+
+
+def make_step_fn(graph: Graph, cfg,
+                 score_fn: Optional[Callable] = None) -> Callable:
+    """Jittable ``SpinnerState -> SpinnerState`` transition."""
+    iterate = make_iteration(graph, cfg, score_fn)
+    eps = jnp.float32(cfg.eps)
+    halt_window = cfg.halt_window
+
+    def step_fn(state: SpinnerState) -> SpinnerState:
+        key, k_it = jax.random.split(state.key)
+        labels, loads, score_g, n_mig, mig_mass = iterate(
+            state.labels, state.loads, k_it)
+        best, stall, halted = _halting_update(
+            state.best_score, state.stall, score_g, eps, halt_window)
+        return SpinnerState(
+            labels=labels, loads=loads, key=key,
+            best_score=best, stall=stall,
+            iteration=state.iteration + 1, halted=halted,
+            total_messages=state.total_messages + mig_mass,
+            score=score_g, migrations=n_mig, message_mass=mig_mass)
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# Fused runner: the whole run is one lax.while_loop dispatch
+# ---------------------------------------------------------------------------
+
+def make_fused_runner(graph: Graph, cfg,
+                      score_fn: Optional[Callable] = None) -> Callable:
+    """Compile the full Spinner run into a single device call."""
+    step_fn = make_step_fn(graph, cfg, score_fn)
+    max_iters = cfg.max_iters
+
+    def cond_fn(s: SpinnerState):
+        return jnp.logical_and(jnp.logical_not(s.halted),
+                               s.iteration < max_iters)
+
+    @jax.jit
+    def run(state: SpinnerState) -> SpinnerState:
+        return jax.lax.while_loop(cond_fn, step_fn, state)
+
+    return run
+
+
+def run_fused(graph: Graph, cfg, labels, loads, key,
+              score_fn: Optional[Callable] = None) -> SpinnerState:
+    """Run to the stable state in one ``lax.while_loop`` dispatch.
+
+    The compiled runner is cached per (graph, cfg), so repeated runs --
+    determinism checks, incremental adapt/resize restarts -- skip
+    re-tracing entirely.
+    """
+    runner = _get_runner("fused", graph, cfg, None, score_fn)
+    return runner(init_state(labels, loads, key))
+
+
+# ---------------------------------------------------------------------------
+# Chunked runner: chunk_size iterations per dispatch, on-device history
+# ---------------------------------------------------------------------------
+
+def make_chunked_runner(graph: Graph, cfg, chunk_size: int = DEFAULT_CHUNK,
+                        score_fn: Optional[Callable] = None,
+                        record: bool = True) -> Callable:
+    """Compile ``chunk_size`` iterations + history recording into one scan.
+
+    Each scan step is guarded: once the halting criterion fires (or
+    ``max_iters`` is reached) the state passes through unchanged and the
+    record is marked invalid, so a trailing partial chunk costs nothing but
+    pass-through work.  With ``record=False`` the per-iteration phi trace
+    (an O(E) gather) is skipped and only the validity flags come back.
+    """
+    step_fn = make_step_fn(graph, cfg, score_fn)
+    src, dst, _, _ = device_edges(graph)
+    has_edges = graph.src.size > 0
+    # edgeless graph: mirror metrics.rho's ideal<=0 convention (rho = 1)
+    ideal = jnp.float32(graph.total_weight / cfg.k) if has_edges else None
+    max_iters = cfg.max_iters
+
+    def body(state: SpinnerState, _):
+        active = jnp.logical_and(jnp.logical_not(state.halted),
+                                 state.iteration < max_iters)
+        new_state = jax.lax.cond(active, step_fn, lambda s: s, state)
+        if not record:
+            return new_state, {"valid": active}
+        if has_edges:
+            local = new_state.labels[src] == new_state.labels[dst]
+            phi = jnp.mean(local.astype(jnp.float32))
+            rho = jnp.max(new_state.loads) / ideal
+        else:
+            phi = jnp.float32(1.0)
+            rho = jnp.float32(1.0)
+        rec = {
+            "iteration": new_state.iteration,
+            "score": new_state.score,
+            "migrations": new_state.migrations,
+            "message_mass": new_state.message_mass,
+            "phi": phi,
+            "rho": rho,
+            "valid": active,
+        }
+        return new_state, rec
+
+    @jax.jit
+    def run_chunk(state: SpinnerState):
+        return jax.lax.scan(body, state, None, length=chunk_size)
+
+    return run_chunk
+
+
+def run_chunked(graph: Graph, cfg, labels, loads, key,
+                chunk_size: int = DEFAULT_CHUNK,
+                score_fn: Optional[Callable] = None,
+                callback: Optional[Callable[[int, dict], None]] = None,
+                record: bool = True,
+                ) -> Tuple[SpinnerState, List[dict]]:
+    """Run with at most ``ceil(max_iters / chunk_size)`` device dispatches.
+
+    Returns the final state plus the per-iteration history (same dict
+    schema as the legacy host loop: iteration / score / migrations /
+    message_mass / phi / rho), recorded on device and synced once per
+    chunk.  ``record=False`` skips history recording entirely (the
+    returned list is empty); a ``callback`` forces recording on.
+    """
+    record = record or callback is not None
+    run_chunk = _get_runner("chunked", graph, cfg, chunk_size, score_fn,
+                            record=record)
+    state = init_state(labels, loads, key)
+    history: List[dict] = []
+    num_chunks = -(-cfg.max_iters // chunk_size)
+    for _ in range(num_chunks):
+        state, recs = run_chunk(state)
+        recs = jax.device_get(recs)
+        if record:
+            for i in range(chunk_size):
+                if not bool(recs["valid"][i]):
+                    break
+                entry = {
+                    "iteration": int(recs["iteration"][i]),
+                    "score": float(recs["score"][i]),
+                    "migrations": int(recs["migrations"][i]),
+                    "message_mass": float(recs["message_mass"][i]),
+                    "phi": float(recs["phi"][i]),
+                    "rho": float(recs["rho"][i]),
+                }
+                history.append(entry)
+                if callback is not None:
+                    callback(entry["iteration"], entry)
+        # One scalar sync per chunk: stop dispatching once the run is over.
+        if not bool(recs["valid"][chunk_size - 1]) or bool(
+                jax.device_get(state.halted)):
+            break
+    return state, history

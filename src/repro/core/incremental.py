@@ -3,6 +3,15 @@
 Both reduce to: perturb the previous stable labeling, then restart the core
 LPA -- "supporting incremental and elastic repartitioning is as simple as
 halting the computation and restarting it" (Section 4.2).
+
+Both entry points ride on ``spinner.partition`` and therefore on the
+device-resident engine (``repro.core.engine``): with
+``record_history=False`` (or ``engine="fused"``) an adapt/resize restart
+executes as a single fused ``lax.while_loop`` device call, which is what
+near-real-time reaction to graph changes (xDGP/SDP-style) needs.  The
+default keeps per-iteration history via the chunked runner; pass
+``engine="host"`` (or "chunked"/"fused") through ``**kw`` to pick a
+specific runner.
 """
 from __future__ import annotations
 
@@ -31,7 +40,12 @@ def extend_labels(prev_labels: np.ndarray, new_num_vertices: int) -> np.ndarray:
 
 def adapt(graph: Graph, prev_labels: np.ndarray, cfg: SpinnerConfig,
           **kw) -> PartitionResult:
-    """Incremental LPA: restart from the previous stable state (Section 3.4)."""
+    """Incremental LPA: restart from the previous stable state (Section 3.4).
+
+    Extra keyword arguments (``engine=``, ``chunk_size=``,
+    ``record_history=``, ...) are forwarded to ``partition``; with the
+    default ``engine="auto"`` a no-history adapt is one fused device call.
+    """
     init = extend_labels(prev_labels, graph.num_vertices)
     return partition(graph, cfg, init=init, **kw)
 
@@ -69,6 +83,7 @@ def resize(graph: Graph, prev_labels: np.ndarray, cfg_new: SpinnerConfig,
 
     Returns (result, relabeled_init) so callers can measure the shuffle the
     relabeling itself caused (Section 5.5 partitioning-difference analysis).
+    Like ``adapt``, forwards ``engine=`` and friends to ``partition``.
     """
     init = elastic_relabel(prev_labels, k_old, cfg_new.k,
                            seed=cfg_new.seed if seed is None else seed)

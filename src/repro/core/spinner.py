@@ -15,17 +15,44 @@ aggregators is a single fused reduction.
 
 Halting (Section 3.3): stop when score(G) has not improved by more than eps
 (relative) for more than ``halt_window`` consecutive iterations.
+
+Engine layering (see ``repro.core.engine`` for the device-resident side):
+
+  state   ``engine.SpinnerState`` -- a pure pytree carrying labels, loads,
+          the PRNG key, the Eq. 9 best_score / stall halting aggregates and
+          the last iteration's migration statistics.
+  step    ``engine.make_iteration`` holds the two-phase math as a pure
+          function; ``engine.make_step_fn`` wraps it (PRNG split + on-device
+          halting update) into a jittable state transition.  The Eq. 8
+          numerator comes from a pluggable score backend
+          (``repro.kernels.ops.get_score_backend``): XLA scatter-add or the
+          Pallas tiled kernel, chosen once at trace time.
+  runner  three interchangeable drivers share that step:
+            * ``engine="fused"``   -- the whole run is ONE device dispatch
+              (``lax.while_loop`` with the halting criterion in the carry);
+            * ``engine="chunked"`` -- ``lax.scan`` over ``chunk_size``
+              iterations per dispatch with fixed-size on-device history
+              (phi / rho / score / migration traces), one host sync per
+              chunk;
+            * ``engine="host"``    -- the legacy per-iteration host loop,
+              kept as the bit-compatible oracle for the fused paths.
+          ``engine="auto"`` (default) picks "chunked" when history or a
+          callback is requested and "fused" otherwise.
+
+``incremental.adapt`` and ``incremental.resize`` rebase on the same
+``partition`` entry point, so dynamic and elastic restarts also execute as
+a single fused device call.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import engine as _engine
 from . import metrics
 from .graph import Graph
 
@@ -44,13 +71,21 @@ class SpinnerConfig:
     # open-source Giraph implementation does the same.  "vertices" is the
     # literal paper text, kept for ablation.
     migration_weighting: str = "edges"
-    use_kernel: bool = False           # ComputeScores via the Pallas kernel
+    use_kernel: bool = False           # legacy alias for score_backend="pallas"
+    # ComputeScores backend: "xla" | "pallas" (see repro.kernels.ops).
+    # None defers to use_kernel for backward compatibility.
+    score_backend: Optional[str] = None
     tie_noise: float = 1e-7            # random tie-break amplitude
     current_bonus: float = 1e-6        # prefer the current label on ties
 
     def capacity(self, graph: Graph) -> float:
         """C per Eq. (5), in weighted-degree units (see metrics module)."""
         return self.c * graph.total_weight / self.k
+
+    def resolved_score_backend(self) -> str:
+        if self.score_backend is not None:
+            return self.score_backend
+        return "pallas" if self.use_kernel else "xla"
 
 
 @dataclasses.dataclass
@@ -61,6 +96,7 @@ class PartitionResult:
     halted: bool                        # True if the eps/w criterion fired
     history: List[dict]                 # per-iteration phi/rho/score/migrations
     total_messages: float = 0.0         # sum of migrant degrees (network load)
+    engine: str = "host"                # which runner produced this result
 
 
 def init_labels(graph: Graph, cfg: SpinnerConfig, key: jax.Array) -> jax.Array:
@@ -75,75 +111,19 @@ def compute_loads(graph: Graph, labels: jax.Array, k: int) -> jax.Array:
 
 
 def make_step(graph: Graph, cfg: SpinnerConfig) -> Callable:
-    """Build the jitted two-phase iteration for a fixed graph/config."""
-    src = jnp.asarray(graph.src)
-    dst = jnp.asarray(graph.dst)
-    w = jnp.asarray(graph.weight)
-    deg_w = jnp.asarray(graph.deg_w)
-    V, k = graph.num_vertices, cfg.k
-    C = jnp.float32(cfg.capacity(graph))
-    degree_weighted = cfg.migration_weighting == "edges"
+    """Build the jitted two-phase iteration for a fixed graph/config.
 
-    if cfg.use_kernel:
-        from repro.kernels import ops as kernel_ops
-        from .graph import build_tiled_csr
-        tiled = build_tiled_csr(graph)
-        kernel_fn = functools.partial(kernel_ops.spinner_scores_tiled,
-                                      tiled=tiled, k=k)
-
-    @jax.jit
-    def step(labels: jax.Array, loads: jax.Array, key: jax.Array):
-        # ---- ComputeScores (Eq. 8) -------------------------------------
-        if cfg.use_kernel:
-            scores = kernel_fn(labels)                     # (V, k) f32
-        else:
-            nbr = labels[dst]
-            scores = jnp.zeros((V, k), jnp.float32).at[src, nbr].add(w)
-        norm = scores / jnp.maximum(deg_w, 1.0)[:, None]
-        penalty = loads / C                                # pi(l) (Eq. 7)
-        total = norm - penalty[None, :]
-
-        k_noise, k_mig = jax.random.split(key)
-        noise = jax.random.uniform(k_noise, (V, k), jnp.float32,
-                                   0.0, cfg.tie_noise)
-        bonus = cfg.current_bonus * jax.nn.one_hot(labels, k,
-                                                   dtype=jnp.float32)
-        best = jnp.argmax(total + noise + bonus, axis=1).astype(jnp.int32)
-        want = best != labels
-
-        # ---- ComputeMigrations (Eq. 11-12) -----------------------------
-        measure = deg_w if degree_weighted else jnp.ones_like(deg_w)
-        M = jnp.zeros((k,), jnp.float32).at[best].add(
-            jnp.where(want, measure, 0.0))
-        R = jnp.maximum(C - loads, 0.0)                    # Eq. 11
-        p = jnp.clip(R / jnp.maximum(M, 1e-9), 0.0, 1.0)   # Eq. 12
-        u = jax.random.uniform(k_mig, (V,), jnp.float32)
-        migrate = want & (u < p[best])
-
-        new_labels = jnp.where(migrate, best, labels)
-        mig_deg = jnp.where(migrate, deg_w, 0.0)
-        new_loads = (loads
-                     .at[best].add(mig_deg)
-                     .at[labels].add(-mig_deg))
-
-        # ---- halting aggregate: score(G) at the new assignment (Eq. 9) --
-        sel = jnp.take_along_axis(total, new_labels[:, None], axis=1)[:, 0]
-        score_g = jnp.sum(sel)
-        # migration mass = sum of migrant degrees = Pregel messages sent
-        # (each migrating vertex notifies all neighbors, Section 4.1.3)
-        return new_labels, new_loads, score_g, jnp.sum(migrate), \
-            jnp.sum(mig_deg)
-
-    return step
+    Kept for host-loop and benchmark callers; the math lives in
+    ``engine.make_iteration`` and is shared with the fused runners, and
+    the jitted step is cached per (graph, cfg) so repeated host-engine
+    runs do not re-trace.
+    """
+    return _engine.cached_jit_step(graph, cfg)
 
 
-def partition(graph: Graph,
-              cfg: SpinnerConfig,
-              init: Optional[np.ndarray] = None,
-              record_history: bool = True,
-              callback: Optional[Callable[[int, dict], None]] = None,
-              ) -> PartitionResult:
-    """Run Spinner to a stable state (Sections 3.3, 4.1).
+def prepare_init(graph: Graph, cfg: SpinnerConfig,
+                 init: Optional[np.ndarray] = None):
+    """Shared prologue: initial (labels, loads, key) for every engine.
 
     ``init`` supplies labels for incremental/elastic restarts (Sections
     3.4-3.5); entries equal to -1 are assigned to the least-loaded partition,
@@ -168,9 +148,22 @@ def partition(graph: Graph,
             init2[~known] = fill.astype(np.int32)
             labels = jnp.asarray(init2)
     loads = compute_loads(graph, labels, cfg.k)
+    return labels, loads, key
 
+
+def _partition_host(graph: Graph, cfg: SpinnerConfig, labels, loads, key,
+                    record_history: bool,
+                    callback: Optional[Callable[[int, dict], None]],
+                    ) -> PartitionResult:
+    """Legacy per-iteration host loop -- the fused engines' oracle.
+
+    The halting compare runs in float32 (matching the on-device
+    ``engine._halting_update`` bit for bit), so host and fused engines are
+    guaranteed to agree on iteration counts, not just label trajectories.
+    """
     step = make_step(graph, cfg)
-    best_score = -np.inf
+    best_score = np.float32(-np.inf)
+    eps32 = np.float32(cfg.eps)
     stall = 0
     history: List[dict] = []
     halted = False
@@ -179,28 +172,33 @@ def partition(graph: Graph,
     for it in range(1, cfg.max_iters + 1):
         key, k_it = jax.random.split(key)
         labels, loads, score_g, n_mig, mig_mass = step(labels, loads, k_it)
-        score_g = float(score_g)
+        score_g = np.float32(score_g)
         total_messages += float(mig_mass)
-        if record_history:
+        if record_history or callback is not None:
             lab_np = np.asarray(labels)
             entry = {
                 "iteration": it,
-                "score": score_g,
+                "score": float(score_g),
                 "migrations": int(n_mig),
                 "message_mass": float(mig_mass),
                 "phi": metrics.phi(graph, lab_np),
                 "rho": metrics.rho(graph, lab_np, cfg.k),
             }
-            history.append(entry)
+            if record_history:
+                history.append(entry)
             if callback is not None:
                 callback(it, entry)
         # Halting (Section 3.3): relative improvement below eps for > w iters.
-        tol = cfg.eps * max(1.0, abs(best_score))
-        if score_g > best_score + tol:
-            best_score = max(best_score, score_g)
+        # f32 arithmetic mirroring engine._halting_update; on iteration 1
+        # best_score is -inf, tol is inf, best + tol is NaN and the compare
+        # is False (the invalid-op warning is expected and suppressed).
+        with np.errstate(invalid="ignore"):
+            tol = eps32 * np.maximum(np.float32(1.0), np.abs(best_score))
+            improved = score_g > best_score + tol
+        best_score = np.maximum(best_score, score_g)
+        if improved:
             stall = 0
         else:
-            best_score = max(best_score, score_g)
             stall += 1
             if stall >= cfg.halt_window:
                 halted = True
@@ -209,4 +207,68 @@ def partition(graph: Graph,
     return PartitionResult(labels=np.asarray(labels),
                            loads=np.asarray(loads),
                            iterations=it, halted=halted, history=history,
-                           total_messages=total_messages)
+                           total_messages=total_messages, engine="host")
+
+
+def partition(graph: Graph,
+              cfg: SpinnerConfig,
+              init: Optional[np.ndarray] = None,
+              record_history: Optional[bool] = None,
+              callback: Optional[Callable[[int, dict], None]] = None,
+              engine: str = "auto",
+              chunk_size: Optional[int] = None,
+              ) -> PartitionResult:
+    """Run Spinner to a stable state (Sections 3.3, 4.1).
+
+    ``engine`` selects the runner (see module docstring): "fused" executes
+    the whole run as one ``lax.while_loop`` device dispatch (and therefore
+    returns an empty ``history`` -- there is no per-iteration host
+    visibility inside the loop), "chunked" runs ``chunk_size`` iterations
+    per dispatch recording on-device history, "host" is the legacy
+    per-iteration loop, and "auto" picks "chunked" when
+    ``record_history``/``callback`` need per-iteration traces and "fused"
+    otherwise.
+
+    ``record_history=None`` (default) means "record where the engine can":
+    True for host/chunked, False for fused.  Explicitly requesting
+    ``record_history=True`` or a ``callback`` together with
+    ``engine="fused"`` is an error rather than a silent empty history.
+    """
+    labels, loads, key = prepare_init(graph, cfg, init)
+    if engine == "auto":
+        engine = "fused" if (record_history is False and callback is None) \
+            else "chunked"
+    if engine == "host":
+        return _partition_host(graph, cfg, labels, loads, key,
+                               record_history is not False, callback)
+
+    if engine == "fused":
+        if callback is not None:
+            raise ValueError(
+                "engine='fused' cannot invoke a per-iteration callback; "
+                "use engine='chunked' (or 'auto') instead")
+        if record_history is True:
+            raise ValueError(
+                "engine='fused' cannot record per-iteration history; "
+                "use engine='chunked' (or 'auto') instead")
+        state = _engine.run_fused(graph, cfg, labels, loads, key)
+        history: List[dict] = []
+    elif engine == "chunked":
+        record = record_history is not False
+        state, history = _engine.run_chunked(
+            graph, cfg, labels, loads, key,
+            chunk_size=chunk_size or _engine.DEFAULT_CHUNK,
+            callback=callback, record=record)
+        if not record:
+            history = []     # callback may have forced recording internally
+    else:
+        raise ValueError(
+            f"unknown engine {engine!r}; "
+            "available: auto, fused, chunked, host")
+
+    return PartitionResult(labels=np.asarray(state.labels),
+                           loads=np.asarray(state.loads),
+                           iterations=int(state.iteration),
+                           halted=bool(state.halted), history=history,
+                           total_messages=float(state.total_messages),
+                           engine=engine)

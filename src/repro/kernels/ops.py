@@ -1,13 +1,21 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the Pallas kernels + the score-backend registry.
 
 On a TPU backend the kernel runs compiled; everywhere else it runs in
 ``interpret=True`` mode (the kernel body executed op-by-op on the host),
 which is how correctness is validated in this repository.
+
+The score-backend protocol at the bottom is how the device-resident engine
+(``repro.core.engine``) picks its ComputeScores implementation: a backend is
+built once per (graph, k) at trace time and the returned closure is inlined
+into the fused ``lax.while_loop`` / ``lax.scan`` body, so the XLA
+scatter-add path and the Pallas tiled kernel are interchangeable without
+any per-call dispatch.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Optional
+from typing import Callable, Optional, Protocol, Union
 
 import jax
 import jax.numpy as jnp
@@ -58,3 +66,72 @@ def spinner_scores(labels: jax.Array, graph: Graph, k: int,
     """Convenience: tile a Graph and compute its score matrix."""
     tiled = build_tiled_csr(graph, tile_v=tile_v, tile_e=tile_e)
     return spinner_scores_tiled(labels, tiled=tiled, k=k, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Score-backend protocol: pluggable ComputeScores (Eq. 8 numerator)
+# ---------------------------------------------------------------------------
+
+class ScoreBackend(Protocol):
+    """Builds the Eq. 8 numerator ``labels -> (V, k) scores`` closure.
+
+    ``build`` runs once per (graph, k) at trace time -- any preprocessing
+    (tiling, padding, device upload) happens there, and the returned
+    closure must be pure and jit-traceable so runners can inline it into
+    ``lax.while_loop`` / ``lax.scan`` bodies.
+    """
+
+    name: str
+
+    def build(self, graph: Graph, k: int
+              ) -> Callable[[jax.Array], jax.Array]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class XlaScatterBackend:
+    """ComputeScores via XLA scatter-add -- the Pallas kernel's oracle."""
+
+    name: str = "xla"
+
+    def build(self, graph: Graph, k: int) -> Callable[[jax.Array], jax.Array]:
+        from repro.core.engine import device_edges   # shared upload cache
+        src, dst, w, _ = device_edges(graph)
+        V = graph.num_vertices
+
+        def scores(labels: jax.Array) -> jax.Array:
+            return ref.spinner_scores_ref(labels, src, dst, w, V, k)
+
+        return scores
+
+
+@dataclasses.dataclass(frozen=True)
+class PallasTiledBackend:
+    """ComputeScores via the tiled one-hot-matmul Pallas kernel."""
+
+    name: str = "pallas"
+    tile_v: int = 128
+    tile_e: int = 128
+    interpret: Optional[bool] = None   # None -> compiled on TPU else interpret
+
+    def build(self, graph: Graph, k: int) -> Callable[[jax.Array], jax.Array]:
+        tiled = build_tiled_csr(graph, tile_v=self.tile_v, tile_e=self.tile_e)
+        return functools.partial(spinner_scores_tiled, tiled=tiled, k=k,
+                                 interpret=self.interpret)
+
+
+SCORE_BACKENDS = {
+    "xla": XlaScatterBackend(),
+    "pallas": PallasTiledBackend(),
+}
+
+
+def get_score_backend(backend: Union[str, ScoreBackend]) -> ScoreBackend:
+    """Resolve a backend name; backend instances pass through unchanged."""
+    if isinstance(backend, str):
+        try:
+            return SCORE_BACKENDS[backend]
+        except KeyError:
+            raise ValueError(
+                f"unknown score backend {backend!r}; "
+                f"available: {sorted(SCORE_BACKENDS)}") from None
+    return backend

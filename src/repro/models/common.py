@@ -30,7 +30,9 @@ def init_from_specs(specs: PyTree, key: jax.Array) -> PyTree:
     Leaf-name heuristics: '*norm*'/'*scale*' -> ones; '*bias*' -> zeros;
     everything else truncated-normal with fan-in scaling.
     """
-    leaves, treedef = jax.tree.flatten_with_path(specs)
+    # jax.tree.flatten_with_path only exists on newer jax; the tree_util
+    # spelling is available across the versions we support.
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(specs)
     keys = jax.random.split(key, len(leaves))
 
     def init_leaf(path, s, k):
@@ -45,7 +47,7 @@ def init_from_specs(specs: PyTree, key: jax.Array) -> PyTree:
                 * std).astype(s.dtype)
 
     inited = [init_leaf(p, s, k) for (p, s), k in zip(leaves, keys)]
-    return jax.tree.unflatten(jax.tree.structure(specs), inited)
+    return jax.tree.unflatten(treedef, inited)
 
 
 def cast(x: jax.Array, dtype=COMPUTE_DTYPE) -> jax.Array:

@@ -1,5 +1,8 @@
 """Property-based tests (hypothesis) for system invariants."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (SpinnerConfig, elastic_relabel, from_edges, metrics,

@@ -1,0 +1,227 @@
+"""Device-resident engine parity: fused/chunked runners vs the host oracle.
+
+The fused ``lax.while_loop`` runner and the chunked ``lax.scan`` runner
+share the exact iteration math with the legacy host loop (see
+``engine.make_iteration``), so for a fixed seed all three must produce the
+same label trajectory, iteration count, and loads -- for both the XLA
+scatter-add and the Pallas kernel score backends.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (SpinnerConfig, adapt, engine, generators, metrics,
+                        partition, prepare_init, resize)
+from repro.core.graph import add_edges
+
+BACKENDS = ["xla", "pallas"]
+
+
+@pytest.fixture(scope="module")
+def ws_graph():
+    return generators.watts_strogatz(600, 8, 0.2, seed=11)
+
+
+@pytest.fixture(scope="module")
+def pl_graph():
+    return generators.powerlaw_ba(400, 5, seed=12)
+
+
+class TestFusedParity:
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_watts_strogatz(self, ws_graph, backend):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=60, score_backend=backend)
+        host = partition(ws_graph, cfg, record_history=False, engine="host")
+        fused = partition(ws_graph, cfg, record_history=False, engine="fused")
+        np.testing.assert_array_equal(host.labels, fused.labels)
+        np.testing.assert_allclose(host.loads, fused.loads, rtol=1e-5)
+        assert host.iterations == fused.iterations
+        assert host.halted == fused.halted
+        assert host.total_messages == pytest.approx(fused.total_messages,
+                                                    rel=1e-5)
+
+    @pytest.mark.parametrize("backend", BACKENDS)
+    def test_powerlaw(self, pl_graph, backend):
+        cfg = SpinnerConfig(k=4, seed=3, max_iters=40, score_backend=backend)
+        host = partition(pl_graph, cfg, record_history=False, engine="host")
+        fused = partition(pl_graph, cfg, record_history=False, engine="fused")
+        np.testing.assert_array_equal(host.labels, fused.labels)
+        assert host.iterations == fused.iterations
+        # quality parity is implied by label equality; spell it out anyway
+        assert metrics.phi(pl_graph, fused.labels) == pytest.approx(
+            metrics.phi(pl_graph, host.labels))
+        assert metrics.rho(pl_graph, fused.labels, cfg.k) == pytest.approx(
+            metrics.rho(pl_graph, host.labels, cfg.k))
+
+
+class TestChunkedParity:
+    def test_labels_and_history(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
+        host = partition(ws_graph, cfg, record_history=True, engine="host")
+        chunk = partition(ws_graph, cfg, record_history=True,
+                          engine="chunked", chunk_size=16)
+        np.testing.assert_array_equal(host.labels, chunk.labels)
+        assert host.iterations == chunk.iterations
+        assert len(chunk.history) == chunk.iterations
+        for h, c in zip(host.history, chunk.history):
+            assert h["iteration"] == c["iteration"]
+            assert h["migrations"] == c["migrations"]
+            # device history is f32, host metrics are f64
+            assert h["phi"] == pytest.approx(c["phi"], abs=1e-5)
+            assert h["rho"] == pytest.approx(c["rho"], rel=1e-4)
+            assert h["score"] == pytest.approx(c["score"], rel=1e-4,
+                                               abs=1e-2)
+
+    def test_chunk_size_does_not_change_result(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
+        a = partition(ws_graph, cfg, record_history=True,
+                      engine="chunked", chunk_size=7)
+        b = partition(ws_graph, cfg, record_history=True,
+                      engine="chunked", chunk_size=64)
+        np.testing.assert_array_equal(a.labels, b.labels)
+        assert a.iterations == b.iterations
+        assert len(a.history) == len(b.history)
+
+    def test_dispatch_budget(self, ws_graph, monkeypatch):
+        """Chunked runner issues at most ceil(max_iters/chunk_size) scans."""
+        # unique cfg so the compiled-runner cache can't satisfy this run
+        # before the monkeypatched builder gets a chance to count
+        cfg = SpinnerConfig(k=6, seed=9, max_iters=48)
+        calls = {"n": 0}
+        real = engine.make_chunked_runner
+
+        def counting(graph, cfg_, chunk_size=engine.DEFAULT_CHUNK,
+                     score_fn=None, **kw):
+            run = real(graph, cfg_, chunk_size, score_fn, **kw)
+
+            def wrapped(state):
+                calls["n"] += 1
+                return run(state)
+            return wrapped
+
+        monkeypatch.setattr(engine, "make_chunked_runner", counting)
+        res = partition(ws_graph, cfg, record_history=True,
+                        engine="chunked", chunk_size=16)
+        assert calls["n"] <= -(-cfg.max_iters // 16)
+        assert calls["n"] == -(-res.iterations // 16)
+
+    def test_runner_cache_reuse(self, ws_graph):
+        """Same (graph, cfg) -> the compiled runner is built only once,
+        and the cache key is seed-independent (seed sweeps share it)."""
+        cfg = SpinnerConfig(k=6, seed=13, max_iters=20)
+        a = partition(ws_graph, cfg, record_history=False, engine="fused")
+        key = (id(ws_graph), "fused", engine._cache_cfg(cfg), None, True)
+        assert key in engine._RUNNER_CACHE
+        runner = engine._RUNNER_CACHE[key][1]
+        b = partition(ws_graph, cfg, record_history=False, engine="fused")
+        assert engine._RUNNER_CACHE[key][1] is runner
+        # a different seed reuses the same compiled runner
+        cfg2 = SpinnerConfig(k=6, seed=14, max_iters=20)
+        partition(ws_graph, cfg2, record_history=False, engine="fused")
+        assert engine._RUNNER_CACHE[key][1] is runner
+        assert (id(ws_graph), "fused", engine._cache_cfg(cfg2), None,
+                True) == key
+        np.testing.assert_array_equal(a.labels, b.labels)
+
+    def test_callback_sees_every_iteration(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=40)
+        seen = []
+        res = partition(ws_graph, cfg, record_history=True,
+                        engine="chunked", chunk_size=8,
+                        callback=lambda it, entry: seen.append(it))
+        assert seen == list(range(1, res.iterations + 1))
+
+    def test_no_history_path_matches(self, ws_graph):
+        """record_history=False skips the phi trace but not the math."""
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
+        full = partition(ws_graph, cfg, record_history=True,
+                         engine="chunked", chunk_size=16)
+        bare = partition(ws_graph, cfg, record_history=False,
+                         engine="chunked", chunk_size=16)
+        np.testing.assert_array_equal(full.labels, bare.labels)
+        assert bare.iterations == full.iterations
+        assert bare.history == []
+
+
+class TestAutoEngine:
+    def test_auto_routes_by_history(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=40)
+        assert partition(ws_graph, cfg,
+                         record_history=False).engine == "fused"
+        assert partition(ws_graph, cfg,
+                         record_history=True).engine == "chunked"
+
+    def test_unknown_engine_raises(self, ws_graph):
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=5)
+        with pytest.raises(ValueError, match="unknown engine"):
+            partition(ws_graph, cfg, engine="turbo")
+
+    def test_fused_rejects_callback(self, ws_graph):
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=5)
+        with pytest.raises(ValueError, match="callback"):
+            partition(ws_graph, cfg, record_history=False, engine="fused",
+                      callback=lambda it, e: None)
+
+    def test_fused_rejects_explicit_history(self, ws_graph):
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=5)
+        with pytest.raises(ValueError, match="history"):
+            partition(ws_graph, cfg, record_history=True, engine="fused")
+        # default (None) means "no history where the engine can't": fine
+        res = partition(ws_graph, cfg, engine="fused")
+        assert res.history == []
+
+    def test_unknown_backend_raises(self, ws_graph):
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=5,
+                            score_backend="nonexistent")
+        with pytest.raises(ValueError, match="unknown score backend"):
+            partition(ws_graph, cfg, record_history=False, engine="fused")
+
+
+class TestIncrementalOnFusedEngine:
+    @pytest.fixture(scope="class")
+    def base(self, pl_graph):
+        cfg = SpinnerConfig(k=6, seed=0, max_iters=80)
+        return cfg, partition(pl_graph, cfg, record_history=False,
+                              engine="host")
+
+    def test_adapt_parity(self, pl_graph, base):
+        cfg, res = base
+        rng = np.random.default_rng(1)
+        # includes brand-new vertices so the -1 least-loaded fill is covered
+        g2 = add_edges(pl_graph,
+                       rng.integers(0, pl_graph.num_vertices, 30),
+                       rng.integers(0, pl_graph.num_vertices, 30),
+                       num_vertices=pl_graph.num_vertices + 2)
+        host = adapt(g2, res.labels, cfg, record_history=False,
+                     engine="host")
+        fused = adapt(g2, res.labels, cfg, record_history=False,
+                      engine="fused")
+        np.testing.assert_array_equal(host.labels, fused.labels)
+        assert host.iterations == fused.iterations
+
+    def test_resize_parity(self, pl_graph, base):
+        cfg, res = base
+        cfg8 = SpinnerConfig(k=8, seed=5, max_iters=80)
+        host, init_h = resize(pl_graph, res.labels, cfg8, k_old=cfg.k,
+                              record_history=False, engine="host")
+        fused, init_f = resize(pl_graph, res.labels, cfg8, k_old=cfg.k,
+                               record_history=False, engine="fused")
+        np.testing.assert_array_equal(init_h, init_f)
+        np.testing.assert_array_equal(host.labels, fused.labels)
+        assert host.iterations == fused.iterations
+
+
+class TestEngineInternals:
+    def test_run_fused_state_matches_partition(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
+        labels, loads, key = prepare_init(ws_graph, cfg)
+        state = engine.run_fused(ws_graph, cfg, labels, loads, key)
+        res = partition(ws_graph, cfg, record_history=False, engine="fused")
+        np.testing.assert_array_equal(np.asarray(state.labels), res.labels)
+        assert int(state.iteration) == res.iterations
+        assert bool(state.halted) == res.halted
+
+    def test_fused_respects_max_iters(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=3)
+        res = partition(ws_graph, cfg, record_history=False, engine="fused")
+        assert res.iterations == 3
+        assert not res.halted
