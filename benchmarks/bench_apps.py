@@ -59,12 +59,34 @@ def run(quick: bool = False) -> list:
                            f"min={per.min(1).mean():.0f};"
                            f"idle_frac={(per.max(1) - per.mean(1)).mean() / per.max(1).mean():.1%}",
             })
-    # real halo-exchange engine (subprocess, 8 host devices)
+    # real halo-exchange engine (subprocess, 8 host devices); the script is
+    # the halo-volume comparison that used to live in pregel_dist._selftest
+    halo_code = (
+        "import numpy as np;"
+        "from repro.core import generators;"
+        "from repro.core.pregel_dist import pagerank_distributed;"
+        "from repro.core.spinner import SpinnerConfig, partition;"
+        "from repro.launch.mesh import make_partition_mesh;"
+        "g = generators.watts_strogatz(4000, 12, 0.2, seed=3);"
+        "mesh = make_partition_mesh();"
+        "ndev = mesh.size;"
+        "cfg = SpinnerConfig(k=ndev, seed=1);"
+        "res = partition(g, cfg, record_history=False);"
+        "hash_labels = (np.arange(g.num_vertices) * 2654435761 % ndev)"
+        ".astype(np.int32);"
+        "_, st_sp = pagerank_distributed(g, res.labels, mesh, iters=10);"
+        "_, st_h = pagerank_distributed(g, hash_labels, mesh, iters=10);"
+        "red = 1 - st_sp['halo_true_bytes_per_step']"
+        " / st_h['halo_true_bytes_per_step'];"
+        "print(f\"devices={ndev} halo spinner="
+        "{st_sp['halo_true_bytes_per_step']}B "
+        "hash={st_h['halo_true_bytes_per_step']}B reduction={red:.1%}\")"
+    )
     here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     env = dict(os.environ,
                XLA_FLAGS="--xla_force_host_platform_device_count=8",
                PYTHONPATH=os.path.join(here, "src"))
-    r = subprocess.run([sys.executable, "-m", "repro.core.pregel_dist"],
+    r = subprocess.run([sys.executable, "-c", halo_code],
                        env=env, cwd=here, capture_output=True, text=True,
                        timeout=900)
     line = [ln for ln in r.stdout.splitlines() if "halo" in ln]

@@ -1,4 +1,4 @@
-"""Host vs fused vs chunked engine: per-iteration dispatch overhead.
+"""Host vs fused vs chunked vs sharded engine: dispatch overhead.
 
 The fused runner executes the whole run as one ``lax.while_loop`` device
 call; the host loop pays a dispatch + sync round-trip per iteration.  This
@@ -6,6 +6,15 @@ suite isolates that overhead: each runner is compiled once, then timed on a
 steady-state run with the same seed (so all engines execute the identical
 label trajectory and iteration count), and the per-iteration gap between
 host and fused is reported as dispatch overhead.
+
+The sharded section measures the same quantity for the mesh engine: the
+single ``shard_map(while_loop)`` dispatch of ``engine="sharded"`` against
+``run_sharded_hostloop``, the pre-PR-2 driving mode that dispatches the
+identical sharded step once per iteration with a host sync on
+``state.halted``.  Both walk the same trajectory bit for bit, so the gap
+is pure dispatch/sync cost -- the overhead this PR removes from the
+distributed path.  (In-process this runs on a 1-device mesh; see
+EXPERIMENTS.md for the multi-device workers sweep.)
 """
 from __future__ import annotations
 
@@ -14,6 +23,8 @@ import time
 import jax
 
 from repro.core import SpinnerConfig, engine, partition, prepare_init
+from repro.core.distributed import run_sharded_hostloop
+from repro.launch.mesh import make_partition_mesh
 
 from .common import emit, get_graph
 
@@ -74,6 +85,46 @@ def run(quick: bool = False) -> list:
                        f"speedup_vs_host={per_host / max(per_chunk, 1e-12):.2f}x",
             "iterations": it_c, "dispatches": dispatches,
         })
+
+    # sharded engine: one shard_map(while_loop) dispatch vs per-iteration
+    # host driving of the same sharded step (identical trajectory)
+    mesh = make_partition_mesh()
+    kw = {"record_history": False, "engine": "sharded", "mesh": mesh}
+    partition(g, cfg, **kw)                  # warm-up/compile
+    t0 = time.time()
+    res_sh = partition(g, cfg, **kw)
+    t_sharded = time.time() - t0
+    it_s = res_sh.iterations
+    per_sharded = t_sharded / max(1, it_s)
+
+    state = run_sharded_hostloop(g, cfg, mesh)   # warm-up/compile
+    t0 = time.time()
+    state = run_sharded_hostloop(g, cfg, mesh)
+    t_hloop = time.time() - t0
+    it_h = int(state.iteration)
+    per_hloop = t_hloop / max(1, it_h)
+    parity_sh = "ok" if it_h == it_s else f"DIVERGED({it_s}vs{it_h})"
+    rows.append({
+        "name": "engine/sharded_fused",
+        "us_per_call": per_sharded * 1e6,
+        "derived": f"iters={it_s};total_s={t_sharded:.3f};"
+                   f"mesh={mesh.size}dev",
+        "iterations": it_s, "total_s": t_sharded,
+    })
+    rows.append({
+        "name": "engine/sharded_hostloop",
+        "us_per_call": per_hloop * 1e6,
+        "derived": f"iters={it_h};total_s={t_hloop:.3f};"
+                   f"speedup_fused={per_hloop / max(per_sharded, 1e-12):.2f}x;"
+                   f"parity={parity_sh}",
+        "iterations": it_h, "total_s": t_hloop,
+    })
+    rows.append({
+        "name": "engine/sharded_dispatch_overhead",
+        "us_per_call": (per_hloop - per_sharded) * 1e6,
+        "derived": f"hostloop_per_iter_us={per_hloop * 1e6:.1f};"
+                   f"sharded_per_iter_us={per_sharded * 1e6:.1f}",
+    })
 
     # compile cost of the single-dispatch path (first call - steady state)
     labels, loads, key = prepare_init(g, cfg)

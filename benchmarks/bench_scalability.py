@@ -1,13 +1,16 @@
 """Figure 5: per-iteration runtime scaling.
 
 (a) vs |V| at fixed degree (Watts-Strogatz, as in the paper),
-(b) vs workers (distributed shard_map engine in a subprocess with N host
-    devices -- on this 1-core container the numbers validate *overhead*,
-    not speedup; see EXPERIMENTS.md),
+(b) vs workers (the SHARDED FUSED engine -- one ``shard_map(while_loop)``
+    dispatch per run -- in a subprocess with N forced host devices; on
+    this 1-core container the numbers validate *overhead*, not speedup;
+    see EXPERIMENTS.md),
 (c) vs number of partitions k.
 
-As in the paper we time the FIRST full iteration (every vertex active),
-averaged over a few repeats after a warmup call.
+For (a)/(c) we time the FIRST full iteration (every vertex active), as in
+the paper, averaged over a few repeats after a warmup call.  For (b) we
+time a fixed-length fused run (halting disabled) and report the amortized
+per-iteration cost, which is exactly what the sharded engine changes.
 """
 from __future__ import annotations
 
@@ -64,43 +67,44 @@ def run(quick: bool = False) -> list:
             "derived": f"us_per_k={dt * 1e6 / k:.2f}",
             "k": k, "seconds": dt,
         })
-    # (b) vs workers (subprocess with forced host device counts)
+    # (b) vs workers: the sharded fused engine (ONE while_loop dispatch per
+    # run) in a subprocess with forced host device counts.  halt_window >
+    # max_iters disables halting so every device count runs the same fixed
+    # iteration count and the per-iteration cost is directly comparable.
     here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    iters = 10 if quick else 20
     for ndev in (1, 2, 4) if quick else (1, 2, 4, 8):
         code = (
-            "import numpy as np, jax, time;"
+            "import time;"
             "from repro.core import generators;"
-            "from repro.core.spinner import SpinnerConfig;"
-            "from repro.core.distributed import shard_graph, "
-            "make_distributed_step;"
+            "from repro.core.spinner import SpinnerConfig, partition;"
+            "from repro.launch.mesh import make_partition_mesh;"
             "g = generators.watts_strogatz(2**15, 20, 0.3, seed=1);"
-            "cfg = SpinnerConfig(k=16, seed=0);"
-            f"mesh = jax.sharding.Mesh(np.array(jax.devices()), ('data',));"
-            "sg = shard_graph(g, mesh.size);"
-            "step = make_distributed_step(sg, cfg, mesh);"
-            "import jax.numpy as jnp;"
-            "labels = jnp.zeros((sg.ndev, sg.v_per_dev), jnp.int32);"
-            "loads = jnp.zeros((16,), jnp.float32)"
-            ".at[0].set(float(sg.deg_w.sum()));"
-            "args = tuple(map(jnp.asarray, (sg.src_local, sg.dst, sg.weight,"
-            " sg.deg_w)));"
-            "key = jax.random.PRNGKey(0);"
-            "o = step(labels, *args, loads, key); jax.block_until_ready(o);"
+            f"cfg = SpinnerConfig(k=16, seed=0, max_iters={iters},"
+            " halt_window=10**6);"
+            "mesh = make_partition_mesh();"
+            "kw = dict(record_history=False, engine='sharded', mesh=mesh);"
+            "res = partition(g, cfg, **kw);"
             "t0 = time.time();"
-            "o = step(labels, *args, loads, key); jax.block_until_ready(o);"
-            "print('ITER_S', time.time() - t0)"
+            "res = partition(g, cfg, **kw);"
+            "print('RUN_S', time.time() - t0, res.iterations)"
         )
         env = dict(os.environ,
                    XLA_FLAGS=f"--xla_force_host_platform_device_count={ndev}",
                    PYTHONPATH=os.path.join(here, "src"))
         r = subprocess.run([sys.executable, "-c", code], env=env,
                            capture_output=True, text=True, timeout=600)
-        line = [ln for ln in r.stdout.splitlines() if "ITER_S" in ln]
-        dt = float(line[0].split()[1]) if line else float("nan")
+        line = [ln for ln in r.stdout.splitlines() if "RUN_S" in ln]
+        if line:
+            total_s, ran = float(line[0].split()[1]), int(line[0].split()[2])
+            dt = total_s / max(1, ran)
+        else:
+            total_s, ran, dt = float("nan"), 0, float("nan")
         rows.append({
             "name": f"scalability/workers{ndev}",
             "us_per_call": dt * 1e6,
-            "derived": f"devices={ndev}",
+            "derived": f"devices={ndev};iters={ran};"
+                       f"run_s={total_s:.3f};engine=sharded",
             "workers": ndev, "seconds": dt,
         })
     emit(rows, "bench_scalability")

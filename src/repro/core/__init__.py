@@ -1,7 +1,8 @@
 """Spinner core: the paper's contribution as a composable JAX module."""
 from . import engine, generators, graph, incremental, metrics
 from .engine import (SpinnerState, make_fused_runner, make_chunked_runner,
-                     make_iteration, make_step_fn, run_chunked, run_fused)
+                     make_iteration, make_sharded_runner, make_step_fn,
+                     make_vertex_update, run_chunked, run_fused, run_sharded)
 from .graph import Graph, TiledCSR, add_edges, build_tiled_csr, from_edges
 from .incremental import adapt, elastic_relabel, extend_labels, resize
 from .metrics import (partitioning_difference, phi, phi_weighted, rho,
@@ -13,7 +14,8 @@ __all__ = [
     "Graph", "TiledCSR", "from_edges", "add_edges", "build_tiled_csr",
     "SpinnerConfig", "PartitionResult", "SpinnerState", "partition",
     "prepare_init", "make_step", "make_step_fn", "make_iteration",
-    "make_fused_runner", "make_chunked_runner", "run_fused", "run_chunked",
+    "make_vertex_update", "make_fused_runner", "make_chunked_runner",
+    "make_sharded_runner", "run_fused", "run_chunked", "run_sharded",
     "init_labels", "compute_loads", "adapt", "resize", "elastic_relabel",
     "extend_labels", "phi", "phi_weighted", "rho", "score_global",
     "partitioning_difference", "summarize", "engine", "generators", "graph",

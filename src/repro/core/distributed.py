@@ -1,33 +1,51 @@
-"""Distributed Spinner: edge-sharded LPA over a device mesh (shard_map).
+"""Sharded Spinner: the edge-shard layout layer + legacy entry points.
 
-The Pregel implementation maps onto the mesh as follows (DESIGN.md Sec. 3):
+The iteration math no longer lives here.  Pre-PR-2 this module was a fork
+of the engine: a hand-rolled per-iteration ``shard_map`` step with its own
+copy of the two-phase update and a host halting loop that paid a
+``float(score_g)`` sync every superstep -- exactly the distributed
+overhead xDGP (1309.1049) and SDP (2110.15669) show must be driven to the
+floor for adaptive repartitioning to pay off.  The sharded engine in
+``repro.core.engine`` now runs the whole LPA as ONE
+``shard_map(lax.while_loop)`` dispatch built on the same
+``make_vertex_update`` math as every other engine.  What remains here:
 
-  * vertices are range-partitioned across devices (V/ndev contiguous ids);
-  * edges live on their source vertex's owner (CSR shards never move);
-  * the per-iteration "messages" are ONE tiled all-gather of the int32
-    label vector (V * 4 bytes), the aggregate of Pregel's label-change
-    messages;
-  * the B(l), M(l), score(G) aggregators are psums of (k,) partials --
-    exactly Giraph's sharded aggregators, fused into one collective each.
-
-Per-device work is the same vectorized two-phase update as the
-single-device engine, so the distributed run is bit-compatible with the
-sequential one given the same per-vertex keys (validated in tests).
+  * ``ShardedGraph`` / ``shard_graph`` -- the padding/layout layer:
+    vertices range-partitioned across devices (ceil(V/ndev) contiguous
+    ids, tail padded with degree-0 vertices), edges living on their source
+    vertex's owner (zero-weight rows pad the shards square);
+  * ``device_shards`` -- the layout plus its device upload, cached per
+    (graph, ndev) so mesh sweeps over one graph share a single copy;
+  * ``make_sharded_step`` -- ONE iteration as a jitted ``shard_map``
+    dispatch (the engine's step_fn under a per-call ``shard_map``), kept
+    for the dispatch-overhead benchmark;
+  * ``run_sharded_hostloop`` -- the pre-PR-2 driving mode: one dispatch
+    per iteration with a host sync on ``state.halted``.  The halting
+    criterion is the on-device ``engine._halting_update`` carried in the
+    state, so iteration counts match ``partition(engine="sharded")``
+    exactly -- the ONLY difference this driver measures is dispatch/sync
+    overhead (see ``benchmarks/bench_engine.py``);
+  * ``partition_distributed`` -- back-compat wrapper over
+    ``partition(graph, cfg, engine="sharded", mesh=...)`` returning
+    (labels, comm stats), the quantities Figure 5 scales.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
 
+from . import engine
 from .graph import Graph
 from .spinner import SpinnerConfig
+
+_SHARD_CACHE: dict = {}   # (ndev,) -> (ShardedGraph, device edge arrays)
+_STEP_CACHE: dict = {}    # (cfg, mesh, axis) -> jitted per-iteration step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +62,13 @@ class ShardedGraph:
 
 
 def shard_graph(graph: Graph, ndev: int) -> ShardedGraph:
+    """Range-partition vertices and edges into per-device shards.
+
+    Pure layout: contiguous blocks of ceil(V/ndev) vertex ids per device,
+    every edge stored with its source's owner (the CSR order inside a
+    shard is preserved, so on 1 device the shard IS the graph's edge list
+    and the sharded scatter-add is bit-identical to the unsharded one).
+    """
     v_per_dev = -(-graph.num_vertices // ndev)
     v_pad = v_per_dev * ndev
     owner = graph.src // v_per_dev
@@ -70,130 +95,112 @@ def shard_graph(graph: Graph, ndev: int) -> ShardedGraph:
                         weight=w, deg_w=deg.reshape(ndev, v_per_dev))
 
 
-def make_distributed_step(sg: ShardedGraph, cfg: SpinnerConfig, mesh: Mesh,
-                          axis: str = "data"):
-    """Jitted shard_map iteration: (labels, loads, key) -> updated."""
-    k = cfg.k
-    C = jnp.float32(cfg.c * float(sg.deg_w.sum()) / k)
-    vl = sg.v_per_dev
-    degree_weighted = cfg.migration_weighting == "edges"
+def device_shards(graph: Graph, ndev: int
+                  ) -> Tuple[ShardedGraph, Tuple[jax.Array, ...]]:
+    """(layout, uploaded (src_local, dst, weight, deg_w)) per (graph, ndev).
 
-    def step_local(labels_l, src_l, dst, w, deg_l, loads, key):
-        # labels_l: (1, vl) this device's block; gather the full vector
-        labels_full = jax.lax.all_gather(labels_l[0], axis).reshape(-1)
-        me = jax.lax.axis_index(axis)
-        nbr = labels_full[dst[0]]
-        scores = jnp.zeros((vl, k), jnp.float32).at[src_l[0], nbr].add(w[0])
-        norm = scores / jnp.maximum(deg_l[0], 1.0)[:, None]
-        total = norm - (loads / C)[None, :]
+    Cached with the same weakref guard as the engine's other per-graph
+    caches: runner variants (different cfg sweeping one graph on one mesh
+    size) share a single O(E) shard copy.
+    """
+    def build():
+        sg = shard_graph(graph, ndev)
+        args = tuple(map(jnp.asarray, (sg.src_local, sg.dst, sg.weight,
+                                       sg.deg_w)))
+        return sg, args
 
-        key = jax.random.fold_in(key, me)
-        k_noise, k_mig = jax.random.split(key)
-        noise = jax.random.uniform(k_noise, (vl, k), jnp.float32, 0.0,
-                                   cfg.tie_noise)
-        labels_mine = labels_l[0]
-        bonus = cfg.current_bonus * jax.nn.one_hot(labels_mine, k,
-                                                   dtype=jnp.float32)
-        best = jnp.argmax(total + noise + bonus, axis=1).astype(jnp.int32)
-        want = best != labels_mine
+    return engine._graph_cached(_SHARD_CACHE, graph, (ndev,), build)
 
-        measure = deg_l[0] if degree_weighted else jnp.ones_like(deg_l[0])
-        M_part = jnp.zeros((k,), jnp.float32).at[best].add(
-            jnp.where(want, measure, 0.0))
-        M = jax.lax.psum(M_part, axis)                    # aggregator
-        R = jnp.maximum(C - loads, 0.0)
-        p = jnp.clip(R / jnp.maximum(M, 1e-9), 0.0, 1.0)
-        u = jax.random.uniform(k_mig, (vl,), jnp.float32)
-        migrate = want & (u < p[best])
 
-        new_labels = jnp.where(migrate, best, labels_mine)
-        mig_deg = jnp.where(migrate, deg_l[0], 0.0)
-        delta = (jnp.zeros((k,), jnp.float32).at[best].add(mig_deg)
-                 .at[labels_mine].add(-mig_deg))
-        new_loads = loads + jax.lax.psum(delta, axis)     # aggregator
-        sel = jnp.take_along_axis(total, new_labels[:, None], axis=1)[:, 0]
-        score_part = jnp.sum(sel)
-        score_g = jax.lax.psum(score_part, axis)          # aggregator
-        n_mig = jax.lax.psum(jnp.sum(migrate), axis)
-        return (new_labels[None], new_loads, score_g, n_mig)
+def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig) -> dict:
+    """Per-iteration communication volume of the sharded engine.
 
-    sharded = shard_map(
-        step_local, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(), P()),
-        out_specs=(P(axis), P(), P(), P()),
-        check_rep=False)
-    return jax.jit(sharded)
+    One tiled all-gather of the int32 label vector (the aggregate of
+    Pregel's label-change messages) plus the psum'd (k,) aggregators
+    (M(l), load delta, score/migration scalars) -- the quantities
+    Figure 5 scales with workers.
+    """
+    return {
+        "message_bytes_per_iter": int(sg.num_vertices * 4 * sg.ndev),
+        "aggregator_bytes_per_iter": int(3 * cfg.k * 4 * sg.ndev),
+        "edge_shard_sizes": [int((sg.weight[p] > 0).sum())
+                             for p in range(sg.ndev)],
+    }
+
+
+def make_sharded_step(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
+                      axis: str = "data"):
+    """One LPA iteration as a single jitted ``shard_map`` dispatch.
+
+    ``step(state) -> state`` over the engine's ``SpinnerState`` (padded
+    labels).  This is the engine's sharded step_fn without the surrounding
+    ``while_loop`` -- the building block of ``run_sharded_hostloop``.
+    Cached per (graph, cfg, mesh, axis) like the engine's runners, so the
+    hostloop driver's repeat calls pay dispatch, not retrace/recompile.
+    """
+    def build():
+        sg, edge_args = device_shards(graph, mesh.shape[axis])
+        step_fn = engine.make_sharded_step_fn(graph, sg, cfg, axis)
+        spec = engine.state_partition_spec(axis)
+
+        def step_local(state, src_l, dst, w, deg_l):
+            return step_fn(state, src_l[0], dst[0], w[0], deg_l[0])
+
+        step = jax.jit(shard_map(
+            step_local, mesh=mesh,
+            in_specs=(spec,) + engine._sharded_edge_specs(axis),
+            out_specs=spec, check_rep=False))
+
+        def run_step(state: engine.SpinnerState) -> engine.SpinnerState:
+            return step(state, *edge_args)
+
+        return run_step
+
+    return engine._graph_cached(
+        _STEP_CACHE, graph, (engine._cache_cfg(cfg), mesh, axis), build)
+
+
+def run_sharded_hostloop(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
+                         axis: str = "data",
+                         init: Optional[np.ndarray] = None
+                         ) -> engine.SpinnerState:
+    """Drive the sharded step from the host, one dispatch per iteration.
+
+    The pre-PR-2 driving mode, preserved as the dispatch-overhead baseline:
+    identical math and identical on-device ``_halting_update`` as
+    ``partition(engine="sharded")`` (so labels and iteration counts match
+    bit for bit), but the loop pays a host sync on ``state.halted`` every
+    iteration instead of running as one fused ``while_loop``.
+    """
+    from .spinner import prepare_init
+    labels, loads, key = prepare_init(graph, cfg, init)
+    ndev = mesh.shape[axis]
+    v_pad = -(-graph.num_vertices // ndev) * ndev
+    step = make_sharded_step(graph, cfg, mesh, axis)
+    state = engine.init_state(engine.pad_labels(labels, v_pad), loads, key)
+    for _ in range(cfg.max_iters):
+        state = step(state)
+        if bool(state.halted):      # the per-iteration host round-trip
+            break
+    return state
 
 
 def partition_distributed(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
                           axis: str = "data",
                           init: Optional[np.ndarray] = None,
                           ) -> Tuple[np.ndarray, dict]:
-    """Run distributed Spinner to the halting criterion; returns labels.
+    """Run sharded Spinner to the halting criterion; returns (labels, stats).
 
-    Also returns comm stats: per-iteration message volume (the label
-    all-gather) and aggregator volume, the quantities Figure 5 scales.
+    Back-compat wrapper: the run itself is
+    ``partition(graph, cfg, engine="sharded", mesh=mesh)`` -- one
+    ``while_loop`` dispatch across the mesh, halting unified on
+    ``engine._halting_update`` with every other engine.  Stats carry the
+    per-iteration communication volume (see ``comm_stats``).
     """
-    ndev = mesh.shape[axis]
-    sg = shard_graph(graph, ndev)
-    key = jax.random.PRNGKey(cfg.seed)
-    key, k0 = jax.random.split(key)
-    if init is None:
-        labels = jax.random.randint(k0, (sg.num_vertices,), 0, cfg.k,
-                                    dtype=jnp.int32)
-    else:
-        pad = sg.num_vertices - init.shape[0]
-        labels = jnp.asarray(np.pad(np.asarray(init, np.int32), (0, pad)))
-    deg_flat = jnp.asarray(sg.deg_w.reshape(-1))
-    loads = jnp.zeros((cfg.k,), jnp.float32).at[labels].add(deg_flat)
-
-    step = make_distributed_step(sg, cfg, mesh, axis)
-    labels = labels.reshape(ndev, sg.v_per_dev)
-    args = tuple(map(jnp.asarray, (sg.src_local, sg.dst, sg.weight,
-                                   sg.deg_w)))
-    best, stall, it, halted = -np.inf, 0, 0, False
-    for it in range(1, cfg.max_iters + 1):
-        key, k_it = jax.random.split(key)
-        labels, loads, score_g, n_mig = step(labels, *args, loads, k_it)
-        score_g = float(score_g)
-        tol = cfg.eps * max(1.0, abs(best))
-        if score_g > best + tol:
-            best, stall = max(best, score_g), 0
-        else:
-            best = max(best, score_g)
-            stall += 1
-            if stall >= cfg.halt_window:
-                halted = True
-                break
-    out = np.asarray(labels).reshape(-1)[: sg.num_real_vertices]
-    stats = {
-        "iterations": it,
-        "halted": halted,
-        "message_bytes_per_iter": int(sg.num_vertices * 4 * ndev),
-        "aggregator_bytes_per_iter": int(3 * cfg.k * 4 * ndev),
-        "edge_shard_sizes": [int((sg.weight[p] > 0).sum())
-                             for p in range(ndev)],
-    }
-    return out, stats
-
-
-def _selftest() -> None:
-    """Run under XLA_FLAGS=--xla_force_host_platform_device_count=8."""
-    from . import generators, metrics
-    g = generators.watts_strogatz(4000, 12, 0.2, seed=3)
-    cfg = SpinnerConfig(k=8, seed=1, max_iters=120)
-    ndev = len(jax.devices())
-    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("data",))
-    labels, stats = partition_distributed(g, cfg, mesh)
-    phi = metrics.phi(g, labels)
-    rho = metrics.rho(g, labels, cfg.k)
-    print(f"devices={ndev} iters={stats['iterations']} "
-          f"phi={phi:.3f} rho={rho:.3f} "
-          f"shards={stats['edge_shard_sizes']}")
-    assert phi > 0.3, "distributed LPA failed to find locality"
-    assert rho < cfg.c + 0.05, "distributed LPA failed balance"
-    print("DISTRIBUTED SELFTEST OK")
-
-
-if __name__ == "__main__":
-    _selftest()
+    from .spinner import partition
+    res = partition(graph, cfg, init=init, record_history=False,
+                    engine="sharded", mesh=mesh, axis=axis)
+    sg, _ = device_shards(graph, mesh.shape[axis])
+    stats = dict(comm_stats(sg, cfg), iterations=res.iterations,
+                 halted=res.halted)
+    return res.labels, stats

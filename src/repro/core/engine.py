@@ -26,11 +26,23 @@ the ComputeScores kernel.  This module keeps the whole run on device:
     (score / migrations / message mass / phi / rho per iteration) for
     callers that need per-iteration traces; the host only syncs once per
     chunk to check the halting flag.
+  * ``run_sharded`` -- the fused loop over a DEVICE MESH: labels and every
+    other per-vertex array are sharded over the vertex axis via
+    ``shard_map``, the (k,) load / migration aggregates and the Eq. 9
+    halting scalars are ``psum``-reduced inside the step so every device
+    sees the same halting decision, and the whole run is ONE
+    ``lax.while_loop`` dispatch across all devices -- the Giraph-cluster
+    analogue of Section 4 with zero per-iteration host round-trips.  The
+    per-vertex math is ``make_vertex_update``, shared verbatim with the
+    single-device iteration, which is what makes a 1-device mesh a
+    bit-compatible oracle of ``run_fused`` (same labels, same iteration
+    counts for the same seed).  Edge layout/padding lives in
+    ``repro.core.distributed`` (``shard_graph``).
 
 ``spinner.partition`` selects between these runners and the legacy host
 loop via its ``engine`` argument; ``incremental.adapt`` / ``resize`` ride on
 the same entry point, so incremental and elastic restarts are a single
-device call as well.
+device call as well -- on whichever mesh the caller passes.
 """
 from __future__ import annotations
 
@@ -40,6 +52,8 @@ from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec
 
 from .graph import Graph
 
@@ -53,6 +67,7 @@ DEFAULT_CHUNK = 32
 # per-use suffix, with a weakref guard so entries die with their graph and
 # a recycled id() can never alias.
 _RUNNER_CACHE: dict = {}      # (kind, cfg, chunk_size, record) -> runner
+                              # sharded kind keys on (cfg, mesh, axis)
 _STEP_CACHE: dict = {}        # (cfg,) -> jitted iterate (host loop's step)
 _SCORE_FN_CACHE: dict = {}    # (backend, k) -> score closure
 _EDGE_UPLOAD_CACHE: dict = {} # () -> (src, dst, weight, deg_w) on device
@@ -168,6 +183,66 @@ def make_score_fn(graph: Graph, cfg) -> Callable[[jax.Array], jax.Array]:
     return _graph_cached(_SCORE_FN_CACHE, graph, (name, cfg.k), build)
 
 
+def make_vertex_update(cfg, C: jnp.float32) -> Callable:
+    """The per-vertex two-phase update (Eqs. 7-8, 11-12) as a pure function.
+
+    Shared verbatim by the single-device iteration (``make_iteration``) and
+    the per-shard sharded iteration (``make_sharded_step_fn``), which is
+    what makes every engine an oracle of the others.  The caller supplies
+    whatever slice of the vertex set it owns plus the matching noise/u
+    draws; every (k,) or scalar aggregate (M(l), the load delta, score(G),
+    migration counts) goes through ``reduce_`` -- identity on a single
+    device, ``lax.psum`` over the vertex axis under ``shard_map``, i.e. the
+    Giraph sharded aggregators as one collective each.
+
+    ``valid`` masks padding vertices introduced by the sharded layout
+    (``None`` statically skips the masking ops so the unpadded path is
+    bit-identical to the pre-sharding engine).
+    """
+    k = cfg.k
+    degree_weighted = cfg.migration_weighting == "edges"
+
+    def update(scores, labels, deg_w, loads, noise, u, valid, reduce_):
+        # ---- ComputeScores (Eq. 8) -------------------------------------
+        norm = scores / jnp.maximum(deg_w, 1.0)[:, None]
+        penalty = loads / C                                # pi(l) (Eq. 7)
+        total = norm - penalty[None, :]
+        bonus = cfg.current_bonus * jax.nn.one_hot(labels, k,
+                                                   dtype=jnp.float32)
+        best = jnp.argmax(total + noise + bonus, axis=1).astype(jnp.int32)
+        want = best != labels
+        if valid is not None:
+            want = want & valid
+
+        # ---- ComputeMigrations (Eq. 11-12) -----------------------------
+        measure = deg_w if degree_weighted else jnp.ones_like(deg_w)
+        M = reduce_(jnp.zeros((k,), jnp.float32).at[best].add(
+            jnp.where(want, measure, 0.0)))                # aggregator
+        R = jnp.maximum(C - loads, 0.0)                    # Eq. 11
+        p = jnp.clip(R / jnp.maximum(M, 1e-9), 0.0, 1.0)   # Eq. 12
+        migrate = want & (u < p[best])
+
+        new_labels = jnp.where(migrate, best, labels)
+        mig_deg = jnp.where(migrate, deg_w, 0.0)
+        delta = (jnp.zeros((k,), jnp.float32)
+                 .at[best].add(mig_deg)
+                 .at[labels].add(-mig_deg))
+        new_loads = loads + reduce_(delta)                 # aggregator
+
+        # ---- halting aggregate: score(G) at the new assignment (Eq. 9) --
+        sel = jnp.take_along_axis(total, new_labels[:, None], axis=1)[:, 0]
+        if valid is not None:
+            sel = jnp.where(valid, sel, 0.0)
+        score_g = reduce_(jnp.sum(sel))                    # aggregator
+        # migration mass = sum of migrant degrees = Pregel messages sent
+        # (each migrating vertex notifies all neighbors, Section 4.1.3)
+        n_mig = reduce_(jnp.sum(migrate).astype(jnp.int32))
+        mig_mass = reduce_(jnp.sum(mig_deg))
+        return new_labels, new_loads, score_g, n_mig, mig_mass
+
+    return update
+
+
 def make_iteration(graph: Graph, cfg,
                    score_fn: Optional[Callable] = None) -> Callable:
     """One LPA iteration (ComputeScores + ComputeMigrations) as a pure fn.
@@ -175,52 +250,23 @@ def make_iteration(graph: Graph, cfg,
     Returns ``iterate(labels, loads, key) -> (labels, loads, score_g,
     n_migrations, migration_mass)``.  Both the legacy host loop and the
     fused runners call exactly this function, which is what makes them
-    oracles of each other.
+    oracles of each other; the math itself lives in ``make_vertex_update``
+    and is also what the sharded engine executes per shard.
     """
     if score_fn is None:
         score_fn = make_score_fn(graph, cfg)
     deg_w = device_edges(graph)[3]
     V, k = graph.num_vertices, cfg.k
-    C = jnp.float32(cfg.capacity(graph))
-    degree_weighted = cfg.migration_weighting == "edges"
+    update = make_vertex_update(cfg, jnp.float32(cfg.capacity(graph)))
 
     def iterate(labels: jax.Array, loads: jax.Array, key: jax.Array):
-        # ---- ComputeScores (Eq. 8) -------------------------------------
         scores = score_fn(labels)                          # (V, k) f32
-        norm = scores / jnp.maximum(deg_w, 1.0)[:, None]
-        penalty = loads / C                                # pi(l) (Eq. 7)
-        total = norm - penalty[None, :]
-
         k_noise, k_mig = jax.random.split(key)
         noise = jax.random.uniform(k_noise, (V, k), jnp.float32,
                                    0.0, cfg.tie_noise)
-        bonus = cfg.current_bonus * jax.nn.one_hot(labels, k,
-                                                   dtype=jnp.float32)
-        best = jnp.argmax(total + noise + bonus, axis=1).astype(jnp.int32)
-        want = best != labels
-
-        # ---- ComputeMigrations (Eq. 11-12) -----------------------------
-        measure = deg_w if degree_weighted else jnp.ones_like(deg_w)
-        M = jnp.zeros((k,), jnp.float32).at[best].add(
-            jnp.where(want, measure, 0.0))
-        R = jnp.maximum(C - loads, 0.0)                    # Eq. 11
-        p = jnp.clip(R / jnp.maximum(M, 1e-9), 0.0, 1.0)   # Eq. 12
         u = jax.random.uniform(k_mig, (V,), jnp.float32)
-        migrate = want & (u < p[best])
-
-        new_labels = jnp.where(migrate, best, labels)
-        mig_deg = jnp.where(migrate, deg_w, 0.0)
-        new_loads = (loads
-                     .at[best].add(mig_deg)
-                     .at[labels].add(-mig_deg))
-
-        # ---- halting aggregate: score(G) at the new assignment (Eq. 9) --
-        sel = jnp.take_along_axis(total, new_labels[:, None], axis=1)[:, 0]
-        score_g = jnp.sum(sel)
-        # migration mass = sum of migrant degrees = Pregel messages sent
-        # (each migrating vertex notifies all neighbors, Section 4.1.3)
-        return (new_labels, new_loads, score_g,
-                jnp.sum(migrate).astype(jnp.int32), jnp.sum(mig_deg))
+        return update(scores, labels, deg_w, loads, noise, u,
+                      None, lambda x: x)
 
     return iterate
 
@@ -392,3 +438,175 @@ def run_chunked(graph: Graph, cfg, labels, loads, key,
                 jax.device_get(state.halted)):
             break
     return state, history
+
+
+# ---------------------------------------------------------------------------
+# Sharded runner: one lax.while_loop dispatch across the whole device mesh
+# ---------------------------------------------------------------------------
+
+def state_partition_spec(axis: str) -> SpinnerState:
+    """``shard_map`` specs for a ``SpinnerState``: labels sharded over the
+    vertex ``axis``, every aggregate (loads, key, halting scalars)
+    replicated -- they are psum-consistent across devices by construction."""
+    rep = PartitionSpec()
+    return SpinnerState(
+        labels=PartitionSpec(axis), loads=rep, key=rep, best_score=rep,
+        stall=rep, iteration=rep, halted=rep, total_messages=rep,
+        score=rep, migrations=rep, message_mass=rep)
+
+
+def _default_partition_mesh() -> Mesh:
+    """1-D mesh over all local devices (cached so cache keys stay stable)."""
+    global _DEFAULT_MESH
+    if _DEFAULT_MESH is None:
+        from repro.launch.mesh import make_partition_mesh
+        _DEFAULT_MESH = make_partition_mesh()
+    return _DEFAULT_MESH
+
+
+_DEFAULT_MESH: Optional[Mesh] = None
+
+
+def make_sharded_step_fn(graph: Graph, sg, cfg, axis: str,
+                         score_fn: Optional[Callable] = None) -> Callable:
+    """Per-device jittable ``SpinnerState -> SpinnerState`` transition.
+
+    Runs INSIDE ``shard_map`` over ``axis``: ``state.labels`` arrives as
+    this device's ``(v_per_dev,)`` shard, the edge arrays as this device's
+    shard of the ``ShardedGraph`` layout, scalars replicated.  One tiled
+    ``all_gather`` of the int32 label vector is the aggregate of Pregel's
+    label-change messages; the (k,) and scalar aggregates inside
+    ``make_vertex_update`` are psum-reduced, so every device computes the
+    same ``_halting_update`` decision and a surrounding ``while_loop``
+    stays in lockstep with no host involvement.
+
+    PRNG: noise/u are drawn over the full padded vertex set from the
+    replicated key and sliced to the local shard.  On a 1-device mesh the
+    padded set IS the vertex set, so draws (and therefore labels and
+    iteration counts) are bit-identical to the single-device engine; the
+    replicated O(V * k) draw is a determinism-over-scalability trade
+    documented in EXPERIMENTS.md.
+    """
+    if score_fn is None:
+        from repro.kernels import ops as kernel_ops   # lazy: no import cycle
+        backend = kernel_ops.get_score_backend(cfg.resolved_score_backend())
+        build_sharded = getattr(backend, "build_sharded", None)
+        if build_sharded is None:
+            raise NotImplementedError(
+                f"score backend {backend.name!r} has no sharded "
+                "implementation (build_sharded)")
+        score_fn = build_sharded(sg, cfg.k)
+    k = cfg.k
+    v_pad, vl = sg.num_vertices, sg.v_per_dev
+    num_real = sg.num_real_vertices
+    update = make_vertex_update(cfg, jnp.float32(cfg.capacity(graph)))
+    eps = jnp.float32(cfg.eps)
+    halt_window = cfg.halt_window
+
+    def psum(x):
+        return jax.lax.psum(x, axis)
+
+    def step_fn(state: SpinnerState, src_l, dst, w, deg_l) -> SpinnerState:
+        key, k_it = jax.random.split(state.key)
+        k_noise, k_mig = jax.random.split(k_it)
+        # Pregel messages: ONE tiled all-gather of the label vector.
+        labels_full = jax.lax.all_gather(state.labels, axis, tiled=True)
+        scores = score_fn(labels_full, src_l, dst, w)      # (vl, k) local
+        noise_full = jax.random.uniform(k_noise, (v_pad, k), jnp.float32,
+                                        0.0, cfg.tie_noise)
+        u_full = jax.random.uniform(k_mig, (v_pad,), jnp.float32)
+        off = jax.lax.axis_index(axis) * vl
+        noise = jax.lax.dynamic_slice_in_dim(noise_full, off, vl, 0)
+        u = jax.lax.dynamic_slice_in_dim(u_full, off, vl, 0)
+        if num_real == v_pad:
+            valid = None         # no padding: bit-identical unpadded math
+        else:
+            valid = off + jnp.arange(vl, dtype=jnp.int32) < num_real
+        labels, loads, score_g, n_mig, mig_mass = update(
+            scores, state.labels, deg_l, state.loads, noise, u, valid, psum)
+        best, stall, halted = _halting_update(
+            state.best_score, state.stall, score_g, eps, halt_window)
+        return SpinnerState(
+            labels=labels, loads=loads, key=key,
+            best_score=best, stall=stall,
+            iteration=state.iteration + 1, halted=halted,
+            total_messages=state.total_messages + mig_mass,
+            score=score_g, migrations=n_mig, message_mass=mig_mass)
+
+    return step_fn
+
+
+def _sharded_edge_specs(axis: str):
+    ax = PartitionSpec(axis)
+    return (ax, ax, ax, ax)    # src_local, dst, weight, deg_w: (ndev, ...)
+
+
+def make_sharded_runner(graph: Graph, cfg, mesh: Mesh, axis: str = "data",
+                        score_fn: Optional[Callable] = None) -> Callable:
+    """Compile the full sharded run into ONE device dispatch.
+
+    Returns ``runner(state) -> state`` where ``state.labels`` is the padded
+    (ndev * v_per_dev,) vector; the ``lax.while_loop`` lives INSIDE the
+    ``shard_map``, so all devices iterate in lockstep driven purely by the
+    psum-reduced halting scalars -- no per-iteration host sync exists even
+    in principle.
+    """
+    from .distributed import device_shards    # layout layer
+    sg, edge_args = device_shards(graph, mesh.shape[axis])
+    step_fn = make_sharded_step_fn(graph, sg, cfg, axis, score_fn)
+    max_iters = cfg.max_iters
+
+    def cond_fn(s: SpinnerState):
+        return jnp.logical_and(jnp.logical_not(s.halted),
+                               s.iteration < max_iters)
+
+    def run_local(state, src_l, dst, w, deg_l):
+        # per-device blocks arrive (1, E_shard) / (1, v_per_dev)
+        def body(s):
+            return step_fn(s, src_l[0], dst[0], w[0], deg_l[0])
+        return jax.lax.while_loop(cond_fn, body, state)
+
+    spec = state_partition_spec(axis)
+    run = jax.jit(shard_map(
+        run_local, mesh=mesh,
+        in_specs=(spec,) + _sharded_edge_specs(axis),
+        out_specs=spec, check_rep=False))
+
+    def runner(state: SpinnerState) -> SpinnerState:
+        return run(state, *edge_args)
+
+    return runner
+
+
+def pad_labels(labels: jax.Array, v_pad: int) -> jax.Array:
+    """Extend labels to the sharded layout's padded vertex count."""
+    labels = jnp.asarray(labels, jnp.int32)
+    pad = v_pad - labels.shape[0]
+    if pad:
+        labels = jnp.concatenate([labels, jnp.zeros((pad,), jnp.int32)])
+    return labels
+
+
+def run_sharded(graph: Graph, cfg, labels, loads, key,
+                mesh: Optional[Mesh] = None, axis: str = "data",
+                score_fn: Optional[Callable] = None) -> SpinnerState:
+    """Run to the stable state in one ``while_loop`` dispatch over ``mesh``.
+
+    ``mesh=None`` uses a 1-D mesh over all local devices
+    (``repro.launch.mesh.make_partition_mesh``).  The returned state
+    carries PADDED labels (length ndev * ceil(V / ndev)); callers slice
+    ``[:graph.num_vertices]``.  Compiled runners are cached per
+    (graph, cfg, mesh, axis) -- meshes compare by value, so rebuilding an
+    identical mesh reuses the compilation.
+    """
+    if mesh is None:
+        mesh = _default_partition_mesh()
+    ndev = mesh.shape[axis]
+    if score_fn is not None:
+        runner = make_sharded_runner(graph, cfg, mesh, axis, score_fn)
+    else:
+        runner = _graph_cached(
+            _RUNNER_CACHE, graph, ("sharded", _cache_cfg(cfg), mesh, axis),
+            lambda: make_sharded_runner(graph, cfg, mesh, axis))
+    v_pad = -(-graph.num_vertices // ndev) * ndev
+    return runner(init_state(pad_labels(labels, v_pad), loads, key))

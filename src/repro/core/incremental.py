@@ -10,8 +10,11 @@ device-resident engine (``repro.core.engine``): with
 executes as a single fused ``lax.while_loop`` device call, which is what
 near-real-time reaction to graph changes (xDGP/SDP-style) needs.  The
 default keeps per-iteration history via the chunked runner; pass
-``engine="host"`` (or "chunked"/"fused") through ``**kw`` to pick a
-specific runner.
+``engine="host"`` (or "chunked"/"fused"/"sharded") through ``**kw`` to
+pick a specific runner -- ``engine="sharded", mesh=...`` restarts the
+whole adapted/resized run as one ``while_loop`` dispatch across a device
+mesh, so incremental repartitioning scales with the cluster exactly like
+a from-scratch run.
 """
 from __future__ import annotations
 

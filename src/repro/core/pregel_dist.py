@@ -158,32 +158,3 @@ def pagerank_distributed(graph: Graph, labels: np.ndarray, mesh: Mesh,
         "iters": iters,
     }
     return values, stats
-
-
-def _selftest() -> None:
-    """Run under XLA_FLAGS=--xla_force_host_platform_device_count=8."""
-    from . import generators, metrics, pregel
-    from .spinner import SpinnerConfig, partition
-
-    g = generators.watts_strogatz(4000, 12, 0.2, seed=3)
-    ndev = len(jax.devices())
-    mesh = Mesh(np.array(jax.devices()), ("data",))
-    cfg = SpinnerConfig(k=ndev, seed=1)
-    res = partition(g, cfg, record_history=False)
-    hash_labels = (np.arange(g.num_vertices) * 2654435761 % ndev
-                   ).astype(np.int32)
-
-    ref = pregel.pagerank(g, res.labels, ndev, iters=10).values
-    pr_sp, st_sp = pagerank_distributed(g, res.labels, mesh, iters=10)
-    pr_h, st_h = pagerank_distributed(g, hash_labels, mesh, iters=10)
-    np.testing.assert_allclose(pr_sp, ref, rtol=1e-4, atol=1e-9)
-    np.testing.assert_allclose(pr_h, ref, rtol=1e-4, atol=1e-9)
-    red = 1 - st_sp["halo_true_bytes_per_step"] / st_h["halo_true_bytes_per_step"]
-    print(f"devices={ndev} halo spinner={st_sp['halo_true_bytes_per_step']}B "
-          f"hash={st_h['halo_true_bytes_per_step']}B reduction={red:.1%}")
-    assert red > 0.3, "spinner should reduce halo traffic"
-    print("PREGEL_DIST SELFTEST OK")
-
-
-if __name__ == "__main__":
-    _selftest()

@@ -27,9 +27,15 @@ Engine layering (see ``repro.core.engine`` for the device-resident side):
           numerator comes from a pluggable score backend
           (``repro.kernels.ops.get_score_backend``): XLA scatter-add or the
           Pallas tiled kernel, chosen once at trace time.
-  runner  three interchangeable drivers share that step:
+  runner  four interchangeable drivers share that step:
             * ``engine="fused"``   -- the whole run is ONE device dispatch
               (``lax.while_loop`` with the halting criterion in the carry);
+            * ``engine="sharded"`` -- the fused loop sharded over a device
+              mesh (labels split over the vertex axis via ``shard_map``,
+              aggregates psum-reduced in the step): one ``while_loop``
+              dispatch drives ALL devices, with no per-iteration host
+              sync.  On a 1-device mesh this is a bit-compatible oracle
+              of "fused";
             * ``engine="chunked"`` -- ``lax.scan`` over ``chunk_size``
               iterations per dispatch with fixed-size on-device history
               (phi / rho / score / migration traces), one host sync per
@@ -37,7 +43,8 @@ Engine layering (see ``repro.core.engine`` for the device-resident side):
             * ``engine="host"``    -- the legacy per-iteration host loop,
               kept as the bit-compatible oracle for the fused paths.
           ``engine="auto"`` (default) picks "chunked" when history or a
-          callback is requested and "fused" otherwise.
+          callback is requested and "fused" otherwise.  All four share
+          ``engine._halting_update``, so iteration counts agree exactly.
 
 ``incremental.adapt`` and ``incremental.resize`` rebase on the same
 ``partition`` entry point, so dynamic and elastic restarts also execute as
@@ -217,17 +224,21 @@ def partition(graph: Graph,
               callback: Optional[Callable[[int, dict], None]] = None,
               engine: str = "auto",
               chunk_size: Optional[int] = None,
+              mesh: Optional[jax.sharding.Mesh] = None,
+              axis: str = "data",
               ) -> PartitionResult:
     """Run Spinner to a stable state (Sections 3.3, 4.1).
 
     ``engine`` selects the runner (see module docstring): "fused" executes
     the whole run as one ``lax.while_loop`` device dispatch (and therefore
     returns an empty ``history`` -- there is no per-iteration host
-    visibility inside the loop), "chunked" runs ``chunk_size`` iterations
-    per dispatch recording on-device history, "host" is the legacy
-    per-iteration loop, and "auto" picks "chunked" when
-    ``record_history``/``callback`` need per-iteration traces and "fused"
-    otherwise.
+    visibility inside the loop), "sharded" is the same single dispatch
+    sharded over a device ``mesh`` (``None`` = a 1-D mesh over all local
+    devices; ``axis`` names the vertex-sharding mesh axis), "chunked" runs
+    ``chunk_size`` iterations per dispatch recording on-device history,
+    "host" is the legacy per-iteration loop, and "auto" picks "chunked"
+    when ``record_history``/``callback`` need per-iteration traces and
+    "fused" otherwise.
 
     ``record_history=None`` (default) means "record where the engine can":
     True for host/chunked, False for fused.  Explicitly requesting
@@ -236,22 +247,39 @@ def partition(graph: Graph,
     """
     labels, loads, key = prepare_init(graph, cfg, init)
     if engine == "auto":
-        engine = "fused" if (record_history is False and callback is None) \
-            else "chunked"
+        if mesh is not None:
+            engine = "sharded"   # an explicit mesh implies the sharded runner
+        else:
+            engine = "fused" if (record_history is False and callback is None) \
+                else "chunked"
+    if mesh is not None and engine != "sharded":
+        raise ValueError(
+            f"mesh= is only meaningful for engine='sharded', got {engine!r}")
     if engine == "host":
         return _partition_host(graph, cfg, labels, loads, key,
                                record_history is not False, callback)
 
-    if engine == "fused":
+    if engine in ("fused", "sharded"):
+        # "chunked" is single-device only, so on a mesh there is no
+        # per-iteration visibility at all -- say so instead of pointing at
+        # an option the mesh check forbids.
+        remedy = ("per-iteration history/callbacks are not available on a "
+                  "device mesh; run engine='chunked' without mesh= for "
+                  "traces" if engine == "sharded"
+                  else "use engine='chunked' (or 'auto') instead")
         if callback is not None:
             raise ValueError(
-                "engine='fused' cannot invoke a per-iteration callback; "
-                "use engine='chunked' (or 'auto') instead")
+                f"engine={engine!r} cannot invoke a per-iteration "
+                f"callback; {remedy}")
         if record_history is True:
             raise ValueError(
-                "engine='fused' cannot record per-iteration history; "
-                "use engine='chunked' (or 'auto') instead")
-        state = _engine.run_fused(graph, cfg, labels, loads, key)
+                f"engine={engine!r} cannot record per-iteration history; "
+                f"{remedy}")
+        if engine == "sharded":
+            state = _engine.run_sharded(graph, cfg, labels, loads, key,
+                                        mesh=mesh, axis=axis)
+        else:
+            state = _engine.run_fused(graph, cfg, labels, loads, key)
         history: List[dict] = []
     elif engine == "chunked":
         record = record_history is not False
@@ -264,9 +292,11 @@ def partition(graph: Graph,
     else:
         raise ValueError(
             f"unknown engine {engine!r}; "
-            "available: auto, fused, chunked, host")
+            "available: auto, fused, sharded, chunked, host")
 
-    return PartitionResult(labels=np.asarray(state.labels),
+    # sharded labels come back padded to a multiple of the mesh size
+    labels_np = np.asarray(state.labels)[: graph.num_vertices]
+    return PartitionResult(labels=labels_np,
                            loads=np.asarray(state.loads),
                            iterations=int(state.iteration),
                            halted=bool(state.halted), history=history,

@@ -79,12 +79,24 @@ class ScoreBackend(Protocol):
     (tiling, padding, device upload) happens there, and the returned
     closure must be pure and jit-traceable so runners can inline it into
     ``lax.while_loop`` / ``lax.scan`` bodies.
+
+    ``build_sharded`` is the mesh-parallel counterpart: given the
+    ``ShardedGraph`` layout (see ``repro.core.distributed``) it returns
+    ``scores(labels_full, src_local, dst, weight) -> (v_per_dev, k)``
+    computing the numerator for THIS device's vertex range from this
+    device's edge shard, for use inside ``shard_map``.  ``labels_full``
+    is the all-gathered label vector; the edge arrays are the local
+    shard rows.  Backends without a sharded path raise
+    ``NotImplementedError`` at build time (a clear trace-time failure,
+    not a silent fallback).
     """
 
     name: str
 
     def build(self, graph: Graph, k: int
               ) -> Callable[[jax.Array], jax.Array]: ...
+
+    def build_sharded(self, sg, k: int) -> Callable[..., jax.Array]: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -103,6 +115,24 @@ class XlaScatterBackend:
 
         return scores
 
+    def build_sharded(self, sg, k: int) -> Callable[..., jax.Array]:
+        """Local scatter-add over this device's edge shard.
+
+        Row-for-row ``spinner_scores_ref`` restricted to the local vertex
+        range (zero-weight padding rows add 0 to row 0 and change
+        nothing), so on a 1-device mesh -- where the shard is the whole
+        CSR-ordered edge list -- the result is bit-identical to
+        ``build``'s unsharded path.
+        """
+        vl = sg.v_per_dev
+
+        def scores(labels_full: jax.Array, src_local: jax.Array,
+                   dst: jax.Array, w: jax.Array) -> jax.Array:
+            nbr = labels_full[dst]
+            return jnp.zeros((vl, k), jnp.float32).at[src_local, nbr].add(w)
+
+        return scores
+
 
 @dataclasses.dataclass(frozen=True)
 class PallasTiledBackend:
@@ -117,6 +147,14 @@ class PallasTiledBackend:
         tiled = build_tiled_csr(graph, tile_v=self.tile_v, tile_e=self.tile_e)
         return functools.partial(spinner_scores_tiled, tiled=tiled, k=k,
                                  interpret=self.interpret)
+
+    def build_sharded(self, sg, k: int) -> Callable[..., jax.Array]:
+        raise NotImplementedError(
+            "score backend 'pallas' has no sharded implementation yet: the "
+            "tiled CSR would need to be rebuilt per edge shard and the "
+            "kernel launched inside shard_map. Use score_backend='xla' "
+            "with engine='sharded' (the backends are interchangeable "
+            "oracles on the unsharded engines).")
 
 
 SCORE_BACKENDS = {

@@ -26,6 +26,26 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
 
 
+def make_partition_mesh(num_devices: int | None = None,
+                        axis: str = "data") -> jax.sharding.Mesh:
+    """1-D vertex-sharding mesh for the sharded LPA engine.
+
+    ``partition(g, cfg, engine="sharded", mesh=make_partition_mesh())``
+    shards the fused loop over the first ``num_devices`` local devices
+    (all of them by default).  Run under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to exercise
+    multi-device semantics on CPU.
+    """
+    import numpy as np
+    devices = jax.devices()
+    n = len(devices) if num_devices is None else num_devices
+    if n > len(devices):    # not an assert: must survive python -O
+        raise ValueError(
+            f"need {n} devices, have {len(devices)}; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
+    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
+
+
 def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:
     """Small mesh over whatever devices exist (tests / CPU examples)."""
     import numpy as np

@@ -83,7 +83,11 @@ class TestPlacement:
     def test_incremental_replacement_is_stable(self):
         choices = self._choices(seed=0)
         labels, _ = place_experts(choices, 64, 8, seed=0)
-        drift = self._choices(seed=1, noise=0.35)
+        # Drift = same underlying topic->expert structure, more routing
+        # noise.  (A different seed would re-permute the expert groups --
+        # a brand-new problem where wholesale movement is the CORRECT
+        # response, not an instability.)
+        drift = self._choices(seed=0, noise=0.35)
         labels2, stats2 = place_experts(drift, 64, 8, seed=1, prev=labels)
         assert stats2["moved_from_prev"] < 0.5
         assert stats2["cross_after"] <= stats2["cross_before"] + 0.02
