@@ -15,18 +15,96 @@ identical sharded step once per iteration with a host sync on
 is pure dispatch/sync cost -- the overhead this PR removes from the
 distributed path.  (In-process this runs on a 1-device mesh; see
 EXPERIMENTS.md for the multi-device workers sweep.)
+
+The exchange-mode matrix (subprocess, 8 forced host devices, clustered
+graph) compares the three label-exchange plans -- allgather / halo /
+delta, identical trajectories by construction -- on per-iteration bytes
+on the wire next to wall-clock: the Section 3.3 / Figure 7 claim that
+converging LPA needs ever less communication, measured on device.  The
+``sharded_pallas`` row times the per-shard tiled MXU kernel inside
+``shard_map`` (interpret mode off-TPU, so it is a correctness/coverage
+row there, not a speed claim).
 """
 from __future__ import annotations
 
+import dataclasses
+import os
+import subprocess
+import sys
 import time
 
 import jax
 
-from repro.core import SpinnerConfig, engine, partition, prepare_init
+from repro.core import SpinnerConfig, engine, generators, partition, \
+    prepare_init
 from repro.core.distributed import run_sharded_hostloop
 from repro.launch.mesh import make_partition_mesh
 
 from .common import emit, get_graph
+
+EXCHANGE_MATRIX_CODE = """
+import dataclasses, time
+from repro.core import SpinnerConfig, generators, partition
+from repro.launch.mesh import make_partition_mesh
+
+g = generators.clustered_graph(8, {n_per}, 0.02, 0.5, seed=5)
+cfg = SpinnerConfig(k=8, seed=1, max_iters={max_iters})
+mesh = make_partition_mesh()
+for mode in ("allgather", "halo", "delta"):
+    cfg_m = dataclasses.replace(cfg, label_exchange=mode)
+    kw = dict(record_history=False, engine="sharded", mesh=mesh)
+    partition(g, cfg_m, **kw)                     # warm-up/compile
+    t0 = time.time()
+    res = partition(g, cfg_m, **kw)
+    dt = time.time() - t0
+    bpi = res.exchanged_bytes / max(1, res.iterations)
+    print(f"MODE {{mode}} ndev={{mesh.size}} iters={{res.iterations}} "
+          f"total_s={{dt:.3f}} bytes_per_iter={{bpi:.0f}}")
+"""
+
+
+def _exchange_matrix_rows(quick: bool) -> list:
+    """allgather/halo/delta wire bytes + wall-clock on an 8-device mesh."""
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(here, "src"))
+    code = EXCHANGE_MATRIX_CODE.format(n_per=250 if quick else 500,
+                                       max_iters=60 if quick else 120)
+    try:
+        r = subprocess.run([sys.executable, "-c", code],
+                           env=env, cwd=here, capture_output=True,
+                           text=True, timeout=900)
+        stdout, err = r.stdout, ("" if r.returncode == 0 else
+                                 f"rc={r.returncode}: {r.stderr.strip()}")
+    except subprocess.TimeoutExpired as e:
+        stdout, err = "", f"timeout after {e.timeout}s"
+    rows = []
+    parsed = {}
+    if not err:
+        for line in stdout.splitlines():
+            if not line.startswith("MODE "):
+                continue
+            fields = dict(f.split("=") for f in line.split()[2:])
+            parsed[line.split()[1]] = fields
+    ag_bytes = float(parsed.get("allgather", {}).get("bytes_per_iter", 0))
+    for mode, f in parsed.items():
+        bpi = float(f["bytes_per_iter"])
+        red = 1 - bpi / ag_bytes if ag_bytes and mode != "allgather" else 0.0
+        iters = int(f["iters"])
+        rows.append({
+            "name": f"engine/exchange_{mode}",
+            "us_per_call": float(f["total_s"]) / max(1, iters) * 1e6,
+            "derived": f"ndev={f['ndev']};iters={iters};"
+                       f"bytes_per_iter={bpi:.0f}"
+                       + (f";vs_allgather=-{red:.1%}" if mode != "allgather"
+                          else ""),
+            "bytes_per_iter": bpi,
+        })
+    if not rows:
+        rows.append({"name": "engine/exchange_matrix", "us_per_call": 0.0,
+                     "derived": "FAILED: " + (err or "no MODE lines")[-200:]})
+    return rows
 
 
 def _time_engine(graph, cfg, eng, chunk_size=None):
@@ -124,6 +202,62 @@ def run(quick: bool = False) -> list:
         "us_per_call": (per_hloop - per_sharded) * 1e6,
         "derived": f"hostloop_per_iter_us={per_hloop * 1e6:.1f};"
                    f"sharded_per_iter_us={per_sharded * 1e6:.1f}",
+    })
+
+    # exchange-mode matrix: bytes on the wire per iteration per plan,
+    # measured on a real 8-device mesh (subprocess, forced host devices)
+    rows.extend(_exchange_matrix_rows(quick))
+
+    # Figure 7 traffic decay: the delta plan ships one (index, label) pair
+    # per migration to each peer, so the per-iteration wire volume is the
+    # migration curve -- run a clustered graph to convergence and read the
+    # decay from the chunked history
+    g_cl = generators.clustered_graph(8, 250 if quick else 500, 0.02, 0.5,
+                                      seed=5)
+    hist = partition(g_cl, SpinnerConfig(k=8, seed=1,
+                                         max_iters=60 if quick else 120),
+                     engine="chunked").history
+    if hist:
+        ndev_hypo = 8
+        decay = [h["migrations"] * 8 * (ndev_hypo - 1) for h in hist]
+        picks = {i: decay[i] for i in (0, len(decay) // 4, len(decay) // 2,
+                                       len(decay) - 1)}
+        allgather_bpi = (ndev_hypo - 1) * g_cl.num_vertices * 4
+        rows.append({
+            "name": "engine/delta_traffic_decay",
+            "us_per_call": 0.0,
+            "derived": ";".join(f"iter{i + 1}={b}B"
+                                for i, b in sorted(picks.items()))
+                       + f";allgather={allgather_bpi}B/iter(ndev=8)",
+        })
+
+    # sharded Pallas score backend inside shard_map (interpret off-TPU):
+    # a small fixed-iteration run -- interpret mode emulates the MXU
+    # kernel op-by-op, so this row tracks coverage/cost, not TPU speed
+    g_pal = generators.watts_strogatz(1000 if quick else 2000, 10, 0.2,
+                                      seed=9)
+    cfg_pal = SpinnerConfig(k=16, seed=0, max_iters=4 if quick else 6,
+                            score_backend="pallas")
+    mesh1 = make_partition_mesh(1)
+    kw = {"record_history": False, "engine": "sharded", "mesh": mesh1}
+    partition(g_pal, cfg_pal, **kw)              # warm-up/compile
+    t0 = time.time()
+    res_p = partition(g_pal, cfg_pal, **kw)
+    t_pal = time.time() - t0
+    cfg_xla = dataclasses.replace(cfg_pal, score_backend="xla")
+    partition(g_pal, cfg_xla, **kw)              # warm-up/compile
+    t0 = time.time()
+    res_x = partition(g_pal, cfg_xla, **kw)
+    t_xla = time.time() - t0
+    parity_p = ("ok" if (res_p.labels == res_x.labels).all()
+                else "DIVERGED")
+    rows.append({
+        "name": "engine/sharded_pallas",
+        "us_per_call": t_pal / max(1, res_p.iterations) * 1e6,
+        "derived": f"iters={res_p.iterations};total_s={t_pal:.3f};"
+                   f"interpret={jax.default_backend() != 'tpu'};"
+                   f"xla_total_s={t_xla:.3f};parity={parity_p}",
+        "iterations": res_p.iterations, "total_s": t_pal,
     })
 
     # compile cost of the single-dispatch path (first call - steady state)

@@ -1,5 +1,5 @@
 """Spinner core: the paper's contribution as a composable JAX module."""
-from . import engine, generators, graph, incremental, metrics
+from . import comm, engine, generators, graph, incremental, metrics
 from .engine import (SpinnerState, make_fused_runner, make_chunked_runner,
                      make_iteration, make_sharded_runner, make_step_fn,
                      make_vertex_update, run_chunked, run_fused, run_sharded)
@@ -18,6 +18,6 @@ __all__ = [
     "make_sharded_runner", "run_fused", "run_chunked", "run_sharded",
     "init_labels", "compute_loads", "adapt", "resize", "elastic_relabel",
     "extend_labels", "phi", "phi_weighted", "rho", "score_global",
-    "partitioning_difference", "summarize", "engine", "generators", "graph",
-    "metrics", "incremental",
+    "partitioning_difference", "summarize", "comm", "engine", "generators",
+    "graph", "metrics", "incremental",
 ]

@@ -1,0 +1,337 @@
+"""Communication plans for the sharded engines (Section 3.3 / Figure 7).
+
+Spinner's Pregel design wins because per-superstep traffic SHRINKS as
+labels converge: a vertex only messages its neighbors when it migrates, so
+"messages sent" decays by orders of magnitude over a run (Figure 7).  This
+module makes that communication structure an explicit, pluggable layer,
+shared by the sharded LPA engine (``repro.core.engine``) and the
+distributed Pregel applications (``repro.core.pregel_dist``):
+
+  * ``build_halo_index`` -- the generic halo-plan construction: given which
+    device owns each edge and the placed id of the edge's remote endpoint,
+    compute (a) the per-pair send lists each owner must push and (b) a
+    remapped per-edge index into ``[local values | received halo]``.  This
+    is the machinery that used to live privately in ``pregel_dist``; both
+    PageRank-over-placement and the LPA engine now share this one copy.
+  * ``halo_exchange`` -- the matching traced collective: gather the send
+    rows, one ``all_to_all``, concatenate local + halo into the lookup
+    array the remapped indices address.
+  * ``ExchangePlan`` implementations for the LPA engine's per-iteration
+    label exchange, selected by ``SpinnerConfig.label_exchange``:
+
+      - ``allgather`` -- ship the full int32 label vector every iteration
+        (the bit-compatible oracle; O(V) bytes per iteration);
+      - ``halo``      -- ship only the boundary labels other devices'
+        edge shards actually reference (O(cut) bytes, static);
+      - ``delta``     -- ship only labels that CHANGED last iteration
+        (O(migrations) bytes, decaying like Figure 7 as the partitioning
+        converges).
+
+    All three plans produce bit-identical label trajectories -- they are
+    pure communication strategies; parity is enforced by
+    ``tests/test_sharded_engine.py``.
+
+Accounting: every plan reports ``exchanged_bytes`` per iteration -- the
+bytes a message-passing runtime would put on the wire under that plan
+(changed labels broadcast for delta, true boundary values for halo, the
+whole vector for allgather).  The XLA lowering itself moves static-shape
+buffers (padded halo rows, a capped delta buffer with an all-gather
+fallback); the static buffer sizes are reported separately by
+``repro.core.distributed.comm_stats``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
+
+
+# ---------------------------------------------------------------------------
+# Generic halo-plan construction (shared by pregel_dist and the LPA engine)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HaloIndex:
+    """Send lists + remapped per-edge indices for a halo exchange.
+
+    ``ext_idx[e]`` addresses ``concatenate([local_values, halo])`` where
+    ``halo`` is the ``(ndev, H)`` result of ``all_to_all`` over the rows of
+    ``send_idx[this_device]`` -- i.e. slot ``v_per_dev + p * H + s`` holds
+    the ``s``-th value owner ``p`` sent to this device.
+    """
+
+    ndev: int
+    v_per_dev: int
+    halo_size: int             # H: max per-pair halo entries (padding unit)
+    true_halo: int             # sum of real (unpadded) halo entries
+    send_idx: np.ndarray       # (ndev, ndev, H) int32 local ids owner->needer
+    ext_idx: np.ndarray        # (E,) int64 per-edge index into [local | halo]
+
+
+def build_halo_index(edge_owner: np.ndarray, remote_ids: np.ndarray,
+                     ndev: int, v_per_dev: int) -> HaloIndex:
+    """Build the halo plan for edges referencing remote vertex values.
+
+    Args:
+      edge_owner: (E,) device owning each edge (where its computation runs).
+      remote_ids: (E,) placed id of each edge's remote endpoint -- the
+        vertex whose value the edge must read.  Placement is contiguous
+        range partitioning: device p owns ``[p*v_per_dev, (p+1)*v_per_dev)``.
+    """
+    edge_owner = np.asarray(edge_owner)
+    remote_ids = np.asarray(remote_ids)
+    remote_owner = remote_ids // v_per_dev
+
+    need = {}                  # (needer q, owner p) -> sorted unique ids
+    H = 1
+    true_halo = 0
+    for q in range(ndev):
+        qe = edge_owner == q
+        for p in range(ndev):
+            if p == q:
+                continue
+            ids = np.unique(remote_ids[qe & (remote_owner == p)])
+            need[(q, p)] = ids
+            true_halo += ids.size
+            H = max(H, int(ids.size))
+
+    send_idx = np.zeros((ndev, ndev, H), np.int32)   # [owner p][needer q]
+    for (q, p), ids in need.items():
+        send_idx[p, q, : ids.size] = (ids - p * v_per_dev).astype(np.int32)
+
+    ext_idx = np.empty(edge_owner.shape[0], np.int64)
+    local = remote_owner == edge_owner
+    ext_idx[local] = remote_ids[local] - edge_owner[local] * v_per_dev
+    for (q, p), ids in need.items():
+        sel = (edge_owner == q) & (remote_owner == p)
+        if not sel.any():
+            continue
+        ext_idx[sel] = v_per_dev + p * H + np.searchsorted(ids,
+                                                           remote_ids[sel])
+    return HaloIndex(ndev=ndev, v_per_dev=v_per_dev, halo_size=H,
+                     true_halo=true_halo, send_idx=send_idx, ext_idx=ext_idx)
+
+
+def halo_exchange(values_local: jax.Array, send_idx_dev: jax.Array,
+                  axis: str) -> jax.Array:
+    """One halo exchange (traced, inside ``shard_map``).
+
+    ``values_local`` is this device's ``(v_per_dev,)`` value shard;
+    ``send_idx_dev`` its ``(ndev, H)`` send rows.  Returns the
+    ``(v_per_dev + ndev * H,)`` lookup array addressed by
+    ``HaloIndex.ext_idx``.
+    """
+    outbox = values_local[send_idx_dev]                     # (ndev, H)
+    halo = jax.lax.all_to_all(outbox, axis, split_axis=0, concat_axis=0)
+    return jnp.concatenate([values_local, halo.reshape(-1)])
+
+
+# ---------------------------------------------------------------------------
+# Exchange plans for the sharded LPA engine
+# ---------------------------------------------------------------------------
+
+class ExchangePlan:
+    """How the sharded LPA step turns local label shards into the lookup
+    array its edge shard reads.
+
+    Host-side products (built once per (graph layout, plan)):
+      * ``dst_index`` -- the (ndev, E_shard) per-edge index each score
+        backend uses against the plan's lookup array (global vertex ids
+        for allgather/delta, halo-remapped ids for halo);
+      * ``device_args()`` / ``arg_specs(axis)`` -- extra arrays threaded
+        through ``shard_map`` (e.g. halo send lists), leading dim = ndev.
+
+    Traced methods (called inside ``shard_map``):
+      * ``init_aux(labels_local, axis, *args)`` -- the plan's loop-carried
+        auxiliary state (e.g. delta's replicated label mirror);
+      * ``exchange(labels_local, aux, axis, *args)`` -- one exchange,
+        returning ``(lookup, new_aux, wire_bytes)`` where ``wire_bytes``
+        is the f32 per-iteration message volume accumulated into
+        ``SpinnerState.exchanged_bytes``.
+    """
+
+    name: str
+    dst_index: np.ndarray
+
+    def device_args(self) -> Tuple[jax.Array, ...]:
+        return ()
+
+    def arg_specs(self, axis: str) -> Tuple[PartitionSpec, ...]:
+        return ()
+
+    def wire_bytes_per_iter(self) -> Optional[int]:
+        """Static per-iteration message bytes; None = measured on device."""
+        raise NotImplementedError
+
+    def init_aux(self, labels_local: jax.Array, axis: str, *args):
+        return ()
+
+    def exchange(self, labels_local: jax.Array, aux, axis: str, *args):
+        raise NotImplementedError
+
+
+class AllGatherPlan(ExchangePlan):
+    """Full label vector every iteration -- the bit-compatible oracle."""
+
+    name = "allgather"
+
+    def __init__(self, sg):
+        self.ndev = sg.ndev
+        self.v_pad = sg.num_vertices
+        self.dst_index = sg.dst
+
+    def wire_bytes_per_iter(self) -> int:
+        # every device receives the (v_pad - v_per_dev) labels it lacks
+        return (self.ndev - 1) * self.v_pad * 4
+
+    def exchange(self, labels_local, aux, axis, *args):
+        lookup = jax.lax.all_gather(labels_local, axis, tiled=True)
+        return lookup, aux, jnp.float32(self.wire_bytes_per_iter())
+
+
+class HaloPlan(ExchangePlan):
+    """Boundary labels only: each device receives exactly the remote
+    vertices its edge shard references (O(cut) instead of O(V))."""
+
+    name = "halo"
+
+    def __init__(self, sg):
+        self.ndev = sg.ndev
+        self.v_per_dev = sg.v_per_dev
+        real = sg.weight.reshape(-1) > 0                 # drop layout padding
+        owner = np.repeat(np.arange(sg.ndev), sg.dst.shape[1])[real]
+        remote = sg.dst.reshape(-1)[real]
+        hidx = build_halo_index(owner, remote, sg.ndev, sg.v_per_dev)
+        self.halo_size = hidx.halo_size
+        self.true_halo = hidx.true_halo
+        self._send_idx = hidx.send_idx
+        # regroup the remapped indices into the (ndev, E_shard) edge layout;
+        # padding edges (weight 0) read slot 0 and contribute nothing
+        dst_index = np.zeros(sg.dst.shape, np.int32)
+        dst_index.reshape(-1)[real] = hidx.ext_idx.astype(np.int32)
+        self.dst_index = dst_index
+        self._send_idx_dev = None
+
+    def device_args(self):
+        # uploaded once per plan (plans are cached per layout)
+        if self._send_idx_dev is None:
+            self._send_idx_dev = (jnp.asarray(self._send_idx),)
+        return self._send_idx_dev
+
+    def arg_specs(self, axis):
+        return (PartitionSpec(axis),)
+
+    def wire_bytes_per_iter(self) -> int:
+        return self.true_halo * 4
+
+    def padded_wire_bytes_per_iter(self) -> int:
+        """What the static-shape all_to_all physically moves."""
+        return self.ndev * (self.ndev - 1) * self.halo_size * 4
+
+    def exchange(self, labels_local, aux, axis, send_idx_dev):
+        lookup = halo_exchange(labels_local, send_idx_dev, axis)
+        return lookup, aux, jnp.float32(self.wire_bytes_per_iter())
+
+
+class DeltaPlan(ExchangePlan):
+    """Changed labels only: reproduce the Figure 7 traffic decay.
+
+    Each device mirrors the full label vector (the aux carry) and, per
+    iteration, broadcasts only the (index, label) pairs of its vertices
+    that migrated since the last exchange.  On device this uses a
+    static-shape capped compact buffer (``cap`` entries per device, as an
+    all-gather) and falls back to a full label all-gather on iterations
+    where any device exceeds the cap -- both branches produce an identical
+    mirror, so the trajectory is bit-identical to ``allgather``.
+
+    ``exchanged_bytes`` counts the message-runtime volume: 8 bytes per
+    changed label (index + value) to each of the other ``ndev - 1``
+    devices.  That is exactly the decaying "messages sent" curve of
+    Figure 7, measured on device.
+    """
+
+    name = "delta"
+
+    def __init__(self, sg, cap: Optional[int] = None):
+        self.ndev = sg.ndev
+        self.v_pad = sg.num_vertices
+        self.v_per_dev = sg.v_per_dev
+        self.dst_index = sg.dst
+        if cap is None:
+            cap = max(1, sg.v_per_dev // 4)
+        elif cap < 1:
+            raise ValueError(f"delta_cap must be >= 1, got {cap}")
+        self.cap = min(int(cap), sg.v_per_dev)
+
+    def wire_bytes_per_iter(self) -> Optional[int]:
+        return None            # measured: depends on per-iteration migrations
+
+    def init_aux(self, labels_local, axis, *args):
+        return jax.lax.all_gather(labels_local, axis, tiled=True)
+
+    def exchange(self, labels_local, aux, axis, *args):
+        vl, v_pad, cap = self.v_per_dev, self.v_pad, self.cap
+        off = jax.lax.axis_index(axis) * vl
+        prev = jax.lax.dynamic_slice_in_dim(aux, off, vl, 0)
+        changed = labels_local != prev
+        n_local = jnp.sum(changed.astype(jnp.int32))
+        wire = (jax.lax.psum(n_local, axis).astype(jnp.float32)
+                * jnp.float32(8 * (self.ndev - 1)))
+
+        def compact(_):
+            # changed entries first (stable, so in ascending index order)
+            order = jnp.argsort(jnp.where(changed, 0, 1), stable=True)
+            idx_l = order[:cap]
+            is_ch = changed[idx_l]
+            # invalid slots point past the mirror and are dropped
+            idx_g = jnp.where(is_ch, idx_l + off, v_pad)
+            val = labels_local[idx_l]
+            g_idx = jax.lax.all_gather(idx_g, axis, tiled=True)
+            g_val = jax.lax.all_gather(val, axis, tiled=True)
+            return aux.at[g_idx].set(g_val, mode="drop")
+
+        def full(_):
+            return jax.lax.all_gather(labels_local, axis, tiled=True)
+
+        # the predicate is a psum/pmax-style replicated value, so every
+        # device takes the same branch and the collectives stay aligned
+        lookup = jax.lax.cond(jax.lax.pmax(n_local, axis) <= cap,
+                              compact, full, None)
+        return lookup, lookup, wire
+
+
+# The one registry of plan names: SpinnerConfig.resolved_label_exchange
+# validates against its keys, so adding a plan here is the whole job.
+EXCHANGE_PLANS = {
+    "allgather": AllGatherPlan,
+    "halo": HaloPlan,
+    "delta": DeltaPlan,
+}
+
+_PLAN_CACHE: dict = {}   # per ShardedGraph: (name[, delta_cap]) -> plan
+
+
+def make_exchange_plan(name: str, sg, delta_cap: Optional[int] = None
+                       ) -> ExchangePlan:
+    """Build (or fetch cached) the named plan for a ``ShardedGraph``.
+
+    Cached per layout via the engine's weakref-guarded memoization: the
+    halo construction is an O(ndev^2) pass over the edge set, and both
+    the runner build and ``comm_stats`` ask for the same plan.
+    ``delta_cap`` only shapes the delta plan, so it stays out of the
+    other plans' keys (a cap sweep never rebuilds the halo pass).
+    """
+    from .engine import _graph_cached        # lazy: engine imports us too
+
+    if name not in EXCHANGE_PLANS:
+        raise ValueError(f"unknown label exchange {name!r}; "
+                         f"available: {', '.join(sorted(EXCHANGE_PLANS))}")
+    if name == "delta":
+        key, build = (name, delta_cap), lambda: DeltaPlan(sg, cap=delta_cap)
+    else:
+        key, build = (name, None), lambda: EXCHANGE_PLANS[name](sg)
+    return _graph_cached(_PLAN_CACHE, sg, key, build)

@@ -14,8 +14,9 @@ floor for adaptive repartitioning to pay off.  The sharded engine in
     vertices range-partitioned across devices (ceil(V/ndev) contiguous
     ids, tail padded with degree-0 vertices), edges living on their source
     vertex's owner (zero-weight rows pad the shards square);
-  * ``device_shards`` -- the layout plus its device upload, cached per
-    (graph, ndev) so mesh sweeps over one graph share a single copy;
+  * ``shard_layout`` / ``device_upload`` -- the cached layout per
+    (graph, ndev) and one cached device upload per (layout, array), so
+    mesh sweeps over one graph share a single copy of each;
   * ``make_sharded_step`` -- ONE iteration as a jitted ``shard_map``
     dispatch (the engine's step_fn under a per-call ``shard_map``), kept
     for the dispatch-overhead benchmark;
@@ -44,7 +45,8 @@ from . import engine
 from .graph import Graph
 from .spinner import SpinnerConfig
 
-_SHARD_CACHE: dict = {}   # (ndev,) -> (ShardedGraph, device edge arrays)
+_SHARD_CACHE: dict = {}   # per graph: (ndev,) -> ShardedGraph
+_UPLOAD_CACHE: dict = {}  # per ShardedGraph: () -> device edge arrays
 _STEP_CACHE: dict = {}    # (cfg, mesh, axis) -> jitted per-iteration step
 
 
@@ -95,37 +97,57 @@ def shard_graph(graph: Graph, ndev: int) -> ShardedGraph:
                         weight=w, deg_w=deg.reshape(ndev, v_per_dev))
 
 
-def device_shards(graph: Graph, ndev: int
-                  ) -> Tuple[ShardedGraph, Tuple[jax.Array, ...]]:
-    """(layout, uploaded (src_local, dst, weight, deg_w)) per (graph, ndev).
+def shard_layout(graph: Graph, ndev: int) -> ShardedGraph:
+    """The cached ``ShardedGraph`` layout for a (graph, ndev) pair."""
+    return engine._graph_cached(_SHARD_CACHE, graph, (ndev,),
+                                lambda: shard_graph(graph, ndev))
 
-    Cached with the same weakref guard as the engine's other per-graph
-    caches: runner variants (different cfg sweeping one graph on one mesh
-    size) share a single O(E) shard copy.
+
+def device_upload(sg: ShardedGraph, field: str) -> jax.Array:
+    """One uploaded shard array (``src_local``/``dst``/``weight``/``deg_w``),
+    cached per (layout, field).
+
+    Keyed on the ShardedGraph identity (itself cached per (graph, ndev))
+    and lazy per array, so runner variants -- different cfg / exchange
+    plan / score backend sweeping one graph on one mesh size -- share a
+    single O(E) device copy of each array they actually use (the Pallas
+    backend, for instance, only ever touches ``deg_w`` here).
     """
-    def build():
-        sg = shard_graph(graph, ndev)
-        args = tuple(map(jnp.asarray, (sg.src_local, sg.dst, sg.weight,
-                                       sg.deg_w)))
-        return sg, args
-
-    return engine._graph_cached(_SHARD_CACHE, graph, (ndev,), build)
+    return engine._graph_cached(_UPLOAD_CACHE, sg, (field,),
+                                lambda: jnp.asarray(getattr(sg, field)))
 
 
 def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig) -> dict:
     """Per-iteration communication volume of the sharded engine.
 
-    One tiled all-gather of the int32 label vector (the aggregate of
-    Pregel's label-change messages) plus the psum'd (k,) aggregators
-    (M(l), load delta, score/migration scalars) -- the quantities
-    Figure 5 scales with workers.
+    The label exchange (plan selected by ``cfg.label_exchange``, see
+    ``repro.core.comm``) plus the psum'd (k,) aggregators (M(l), load
+    delta, score/migration scalars) -- the quantities Figure 5 scales
+    with workers and Figure 7 shows decaying.  ``message_bytes_per_iter``
+    is the plan's static message volume; None for the delta plan, whose
+    volume is measured on device (``PartitionResult.exchanged_bytes``).
     """
-    return {
-        "message_bytes_per_iter": int(sg.num_vertices * 4 * sg.ndev),
+    from . import comm
+    name = cfg.resolved_label_exchange(sg.ndev)
+    plan = comm.make_exchange_plan(name, sg, delta_cap=cfg.delta_cap)
+    wire = plan.wire_bytes_per_iter()
+    stats = {
+        "label_exchange": name,
+        "message_bytes_per_iter": None if wire is None else int(wire),
+        "allgather_bytes_per_iter": int(comm.make_exchange_plan(
+            "allgather", sg).wire_bytes_per_iter()),
         "aggregator_bytes_per_iter": int(3 * cfg.k * 4 * sg.ndev),
         "edge_shard_sizes": [int((sg.weight[p] > 0).sum())
                              for p in range(sg.ndev)],
     }
+    if name == "halo":
+        # message_bytes_per_iter above is the TRUE halo volume; this is
+        # what the static-shape all_to_all physically moves
+        stats["halo_padded_bytes_per_iter"] = \
+            plan.padded_wire_bytes_per_iter()
+    if name == "delta":
+        stats["delta_cap"] = plan.cap
+    return stats
 
 
 def make_sharded_step(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
@@ -138,21 +160,30 @@ def make_sharded_step(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
     Cached per (graph, cfg, mesh, axis) like the engine's runners, so the
     hostloop driver's repeat calls pay dispatch, not retrace/recompile.
     """
+    # Forced onto the all-gather oracle plan: it carries no loop state
+    # (delta's label mirror would have to round-trip between dispatches),
+    # so each dispatch is self-contained -- and every plan walks the same
+    # trajectory anyway, so parity with engine="sharded" is unaffected.
+    cfg = dataclasses.replace(cfg, label_exchange="allgather")
+
     def build():
-        sg, edge_args = device_shards(graph, mesh.shape[axis])
-        step_fn = engine.make_sharded_step_fn(graph, sg, cfg, axis)
+        _, plan, step_fn, args, arg_specs, n_score = engine._sharded_parts(
+            graph, cfg, mesh, axis)
         spec = engine.state_partition_spec(axis)
 
-        def step_local(state, src_l, dst, w, deg_l):
-            return step_fn(state, src_l[0], dst[0], w[0], deg_l[0])
+        def step_local(state, deg_l, *rest):
+            blocks = tuple(r[0] for r in rest)
+            aux = plan.init_aux(state.labels, axis, *blocks[n_score:])
+            new_state, _ = step_fn(state, aux, deg_l[0], blocks[:n_score],
+                                   blocks[n_score:])
+            return new_state
 
         step = jax.jit(shard_map(
-            step_local, mesh=mesh,
-            in_specs=(spec,) + engine._sharded_edge_specs(axis),
+            step_local, mesh=mesh, in_specs=(spec,) + arg_specs,
             out_specs=spec, check_rep=False))
 
         def run_step(state: engine.SpinnerState) -> engine.SpinnerState:
-            return step(state, *edge_args)
+            return step(state, *args)
 
         return run_step
 
@@ -200,7 +231,8 @@ def partition_distributed(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
     from .spinner import partition
     res = partition(graph, cfg, init=init, record_history=False,
                     engine="sharded", mesh=mesh, axis=axis)
-    sg, _ = device_shards(graph, mesh.shape[axis])
+    sg = shard_layout(graph, mesh.shape[axis])
     stats = dict(comm_stats(sg, cfg), iterations=res.iterations,
-                 halted=res.halted)
+                 halted=res.halted,
+                 exchanged_bytes=res.exchanged_bytes)
     return res.labels, stats

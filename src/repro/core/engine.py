@@ -37,7 +37,12 @@ the ComputeScores kernel.  This module keeps the whole run on device:
     single-device iteration, which is what makes a 1-device mesh a
     bit-compatible oracle of ``run_fused`` (same labels, same iteration
     counts for the same seed).  Edge layout/padding lives in
-    ``repro.core.distributed`` (``shard_graph``).
+    ``repro.core.distributed`` (``shard_graph``); the per-iteration label
+    exchange is a pluggable plan from ``repro.core.comm``
+    (``cfg.label_exchange``: the full all-gather oracle, a boundary-only
+    halo exchange, or a changed-labels-only delta exchange that
+    reproduces the Figure 7 traffic decay), with wire bytes accumulated
+    on device in ``SpinnerState.exchanged_bytes``.
 
 ``spinner.partition`` selects between these runners and the legacy host
 loop via its ``engine`` argument; ``incremental.adapt`` / ``resize`` ride on
@@ -133,6 +138,8 @@ class SpinnerState(NamedTuple):
     score: jax.Array           # f32, score(G) after the last iteration
     migrations: jax.Array      # int32, migrating vertices last iteration
     message_mass: jax.Array    # f32, migrant degree mass last iteration
+    exchanged_bytes: jax.Array # f32, cumulative label-exchange wire bytes
+                               # (0 off the sharded engine; see core.comm)
 
 
 def init_state(labels: jax.Array, loads: jax.Array,
@@ -149,6 +156,7 @@ def init_state(labels: jax.Array, loads: jax.Array,
         score=jnp.float32(0.0),
         migrations=jnp.int32(0),
         message_mass=jnp.float32(0.0),
+        exchanged_bytes=jnp.float32(0.0),
     )
 
 
@@ -304,7 +312,8 @@ def make_step_fn(graph: Graph, cfg,
             best_score=best, stall=stall,
             iteration=state.iteration + 1, halted=halted,
             total_messages=state.total_messages + mig_mass,
-            score=score_g, migrations=n_mig, message_mass=mig_mass)
+            score=score_g, migrations=n_mig, message_mass=mig_mass,
+            exchanged_bytes=state.exchanged_bytes)
 
     return step_fn
 
@@ -446,13 +455,14 @@ def run_chunked(graph: Graph, cfg, labels, loads, key,
 
 def state_partition_spec(axis: str) -> SpinnerState:
     """``shard_map`` specs for a ``SpinnerState``: labels sharded over the
-    vertex ``axis``, every aggregate (loads, key, halting scalars)
-    replicated -- they are psum-consistent across devices by construction."""
+    vertex ``axis``, every aggregate (loads, key, halting scalars, the
+    exchange-byte counter) replicated -- they are psum-consistent across
+    devices by construction, whichever exchange plan is active."""
     rep = PartitionSpec()
     return SpinnerState(
         labels=PartitionSpec(axis), loads=rep, key=rep, best_score=rep,
         stall=rep, iteration=rep, halted=rep, total_messages=rep,
-        score=rep, migrations=rep, message_mass=rep)
+        score=rep, migrations=rep, message_mass=rep, exchanged_bytes=rep)
 
 
 def _default_partition_mesh() -> Mesh:
@@ -467,26 +477,108 @@ def _default_partition_mesh() -> Mesh:
 _DEFAULT_MESH: Optional[Mesh] = None
 
 
-def make_sharded_step_fn(graph: Graph, sg, cfg, axis: str,
-                         score_fn: Optional[Callable] = None) -> Callable:
-    """Per-device jittable ``SpinnerState -> SpinnerState`` transition.
+def make_sharded_step_fn(graph: Graph, sg, cfg, axis: str, plan,
+                         scores: Callable) -> Callable:
+    """Per-device jittable sharded transition, parameterized by the plan.
 
     Runs INSIDE ``shard_map`` over ``axis``: ``state.labels`` arrives as
-    this device's ``(v_per_dev,)`` shard, the edge arrays as this device's
-    shard of the ``ShardedGraph`` layout, scalars replicated.  One tiled
-    ``all_gather`` of the int32 label vector is the aggregate of Pregel's
-    label-change messages; the (k,) and scalar aggregates inside
+    this device's ``(v_per_dev,)`` shard, the edge blocks as this device's
+    rows of the score backend's layout, scalars replicated.  The label
+    exchange is delegated to ``plan`` (``repro.core.comm.ExchangePlan``):
+    the all-gather oracle, the boundary-only halo exchange, or the
+    changed-labels-only delta exchange -- all bit-compatible, differing
+    only in bytes on the wire (accumulated into
+    ``state.exchanged_bytes``).  The (k,) and scalar aggregates inside
     ``make_vertex_update`` are psum-reduced, so every device computes the
     same ``_halting_update`` decision and a surrounding ``while_loop``
     stays in lockstep with no host involvement.
 
-    PRNG: noise/u are drawn over the full padded vertex set from the
-    replicated key and sliced to the local shard.  On a 1-device mesh the
-    padded set IS the vertex set, so draws (and therefore labels and
-    iteration counts) are bit-identical to the single-device engine; the
-    replicated O(V * k) draw is a determinism-over-scalability trade
-    documented in EXPERIMENTS.md.
+    Returns ``step(state, aux, deg_l, score_blocks, plan_blocks) ->
+    (state, aux)`` where ``aux`` is the plan's loop-carried state (e.g.
+    delta's replicated label mirror; ``()`` for stateless plans).
+
+    PRNG (``cfg.sharded_noise``): with ``"replicated"`` (default) noise/u
+    are drawn over the full padded vertex set from the replicated key and
+    sliced to the local shard -- on a 1-device mesh the padded set IS the
+    vertex set, so draws (and therefore labels and iteration counts) are
+    bit-identical to the single-device engine.  With ``"folded"`` each
+    device folds its axis index into the key and draws only its local
+    (v_per_dev, k) block -- O(V/ndev) instead of O(V) noise memory for
+    very large V, at the cost of a different (still deterministic) stream.
     """
+    k = cfg.k
+    v_pad, vl = sg.num_vertices, sg.v_per_dev
+    num_real = sg.num_real_vertices
+    update = make_vertex_update(cfg, jnp.float32(cfg.capacity(graph)))
+    eps = jnp.float32(cfg.eps)
+    halt_window = cfg.halt_window
+    noise_mode = cfg.resolved_sharded_noise()
+
+    def psum(x):
+        return jax.lax.psum(x, axis)
+
+    def step_fn(state: SpinnerState, aux, deg_l, score_blocks, plan_blocks):
+        key, k_it = jax.random.split(state.key)
+        # Pregel messages: one plan-defined label exchange.
+        lookup, aux, xbytes = plan.exchange(state.labels, aux, axis,
+                                            *plan_blocks)
+        scores_v = scores(lookup, *score_blocks)           # (vl, k) local
+        off = jax.lax.axis_index(axis) * vl
+        if noise_mode == "folded":
+            k_dev = jax.random.fold_in(k_it, jax.lax.axis_index(axis))
+            k_noise, k_mig = jax.random.split(k_dev)
+            noise = jax.random.uniform(k_noise, (vl, k), jnp.float32,
+                                       0.0, cfg.tie_noise)
+            u = jax.random.uniform(k_mig, (vl,), jnp.float32)
+        else:
+            k_noise, k_mig = jax.random.split(k_it)
+            noise_full = jax.random.uniform(k_noise, (v_pad, k), jnp.float32,
+                                            0.0, cfg.tie_noise)
+            u_full = jax.random.uniform(k_mig, (v_pad,), jnp.float32)
+            noise = jax.lax.dynamic_slice_in_dim(noise_full, off, vl, 0)
+            u = jax.lax.dynamic_slice_in_dim(u_full, off, vl, 0)
+        if num_real == v_pad:
+            valid = None         # no padding: bit-identical unpadded math
+        else:
+            valid = off + jnp.arange(vl, dtype=jnp.int32) < num_real
+        labels, loads, score_g, n_mig, mig_mass = update(
+            scores_v, state.labels, deg_l, state.loads, noise, u, valid,
+            psum)
+        best, stall, halted = _halting_update(
+            state.best_score, state.stall, score_g, eps, halt_window)
+        return SpinnerState(
+            labels=labels, loads=loads, key=key,
+            best_score=best, stall=stall,
+            iteration=state.iteration + 1, halted=halted,
+            total_messages=state.total_messages + mig_mass,
+            score=score_g, migrations=n_mig, message_mass=mig_mass,
+            exchanged_bytes=state.exchanged_bytes + xbytes), aux
+
+    return step_fn
+
+
+def _sharded_parts(graph: Graph, cfg, mesh: Mesh, axis: str,
+                   score_fn: Optional[Callable] = None):
+    """Everything the sharded runner and one-step dispatcher share.
+
+    Resolves the exchange plan from ``cfg.label_exchange``, builds the
+    score backend's sharded layout against the plan's ``dst_index``, and
+    assembles the per-device step plus the full ``shard_map`` argument
+    list.  Returns ``(sg, plan, step_fn, args, arg_specs, n_score_args)``
+    where ``args``/``arg_specs`` cover ``(deg_w, *score_args,
+    *plan_args)`` -- every array with leading dimension ndev, sharded
+    over ``axis``.
+
+    A custom ``score_fn`` closure gets the XLA-layout edge blocks
+    ``(src_local, dst_index, weight)``, matching the signature the XLA
+    backend's sharded scorer uses.
+    """
+    from . import comm                                    # sibling, no cycle
+    from .distributed import device_upload, shard_layout  # layout layer
+    ndev = mesh.shape[axis]
+    sg = shard_layout(graph, ndev)
+    plan = comm.make_exchange_plan(cfg.resolved_label_exchange(ndev), sg,
+                                   delta_cap=cfg.delta_cap)
     if score_fn is None:
         from repro.kernels import ops as kernel_ops   # lazy: no import cycle
         backend = kernel_ops.get_score_backend(cfg.resolved_score_backend())
@@ -495,50 +587,29 @@ def make_sharded_step_fn(graph: Graph, sg, cfg, axis: str,
             raise NotImplementedError(
                 f"score backend {backend.name!r} has no sharded "
                 "implementation (build_sharded)")
-        score_fn = build_sharded(sg, cfg.k)
-    k = cfg.k
-    v_pad, vl = sg.num_vertices, sg.v_per_dev
-    num_real = sg.num_real_vertices
-    update = make_vertex_update(cfg, jnp.float32(cfg.capacity(graph)))
-    eps = jnp.float32(cfg.eps)
-    halt_window = cfg.halt_window
-
-    def psum(x):
-        return jax.lax.psum(x, axis)
-
-    def step_fn(state: SpinnerState, src_l, dst, w, deg_l) -> SpinnerState:
-        key, k_it = jax.random.split(state.key)
-        k_noise, k_mig = jax.random.split(k_it)
-        # Pregel messages: ONE tiled all-gather of the label vector.
-        labels_full = jax.lax.all_gather(state.labels, axis, tiled=True)
-        scores = score_fn(labels_full, src_l, dst, w)      # (vl, k) local
-        noise_full = jax.random.uniform(k_noise, (v_pad, k), jnp.float32,
-                                        0.0, cfg.tie_noise)
-        u_full = jax.random.uniform(k_mig, (v_pad,), jnp.float32)
-        off = jax.lax.axis_index(axis) * vl
-        noise = jax.lax.dynamic_slice_in_dim(noise_full, off, vl, 0)
-        u = jax.lax.dynamic_slice_in_dim(u_full, off, vl, 0)
-        if num_real == v_pad:
-            valid = None         # no padding: bit-identical unpadded math
-        else:
-            valid = off + jnp.arange(vl, dtype=jnp.int32) < num_real
-        labels, loads, score_g, n_mig, mig_mass = update(
-            scores, state.labels, deg_l, state.loads, noise, u, valid, psum)
-        best, stall, halted = _halting_update(
-            state.best_score, state.stall, score_g, eps, halt_window)
-        return SpinnerState(
-            labels=labels, loads=loads, key=key,
-            best_score=best, stall=stall,
-            iteration=state.iteration + 1, halted=halted,
-            total_messages=state.total_messages + mig_mass,
-            score=score_g, migrations=n_mig, message_mass=mig_mass)
-
-    return step_fn
-
-
-def _sharded_edge_specs(axis: str):
-    ax = PartitionSpec(axis)
-    return (ax, ax, ax, ax)    # src_local, dst, weight, deg_w: (ndev, ...)
+        # cached like make_score_fn: the build retiles/uploads O(E) arrays
+        # (for pallas, a host retile per shard) and depends only on the
+        # layout, the backend, k, and the plan's dst_index -- so a cfg
+        # sweep (eps/seed/max_iters/...) over one graph shares one build,
+        # and so do the allgather/delta plans (both index with sg.dst)
+        dst_layout = "halo" if plan.dst_index is not sg.dst else "global"
+        score_args, scores = _graph_cached(
+            _SCORE_FN_CACHE, graph,
+            ("sharded", backend.name, cfg.k, ndev, dst_layout),
+            lambda: build_sharded(sg, cfg.k, plan.dst_index))
+    else:
+        # custom closures get the XLA backend's edge layout (same arrays,
+        # same normalization), just a different scores fn
+        from repro.kernels import ops as kernel_ops
+        score_args, _ = kernel_ops.get_score_backend("xla").build_sharded(
+            sg, cfg.k, plan.dst_index)
+        scores = score_fn
+    step_fn = make_sharded_step_fn(graph, sg, cfg, axis, plan, scores)
+    args = (device_upload(sg, "deg_w"),) + tuple(score_args) \
+        + tuple(plan.device_args())
+    arg_specs = (PartitionSpec(axis),) * (1 + len(score_args)) \
+        + tuple(plan.arg_specs(axis))
+    return sg, plan, step_fn, args, arg_specs, len(score_args)
 
 
 def make_sharded_runner(graph: Graph, cfg, mesh: Mesh, axis: str = "data",
@@ -549,31 +620,40 @@ def make_sharded_runner(graph: Graph, cfg, mesh: Mesh, axis: str = "data",
     (ndev * v_per_dev,) vector; the ``lax.while_loop`` lives INSIDE the
     ``shard_map``, so all devices iterate in lockstep driven purely by the
     psum-reduced halting scalars -- no per-iteration host sync exists even
-    in principle.
+    in principle.  The while_loop carry is ``(state, plan aux)``: the
+    exchange plan's auxiliary state (e.g. delta's label mirror) never
+    leaves the device either.
     """
-    from .distributed import device_shards    # layout layer
-    sg, edge_args = device_shards(graph, mesh.shape[axis])
-    step_fn = make_sharded_step_fn(graph, sg, cfg, axis, score_fn)
+    sg, plan, step_fn, args, arg_specs, n_score = _sharded_parts(
+        graph, cfg, mesh, axis, score_fn)
     max_iters = cfg.max_iters
 
-    def cond_fn(s: SpinnerState):
+    def cond_fn(carry):
+        s = carry[0]
         return jnp.logical_and(jnp.logical_not(s.halted),
                                s.iteration < max_iters)
 
-    def run_local(state, src_l, dst, w, deg_l):
-        # per-device blocks arrive (1, E_shard) / (1, v_per_dev)
-        def body(s):
-            return step_fn(s, src_l[0], dst[0], w[0], deg_l[0])
-        return jax.lax.while_loop(cond_fn, body, state)
+    def run_local(state, deg_l, *rest):
+        # per-device blocks arrive with a leading length-1 shard dim
+        blocks = tuple(r[0] for r in rest)
+        score_blocks, plan_blocks = blocks[:n_score], blocks[n_score:]
+        dl = deg_l[0]
+        aux0 = plan.init_aux(state.labels, axis, *plan_blocks)
+
+        def body(carry):
+            s, aux = carry
+            return step_fn(s, aux, dl, score_blocks, plan_blocks)
+
+        state, _ = jax.lax.while_loop(cond_fn, body, (state, aux0))
+        return state
 
     spec = state_partition_spec(axis)
     run = jax.jit(shard_map(
-        run_local, mesh=mesh,
-        in_specs=(spec,) + _sharded_edge_specs(axis),
+        run_local, mesh=mesh, in_specs=(spec,) + arg_specs,
         out_specs=spec, check_rep=False))
 
     def runner(state: SpinnerState) -> SpinnerState:
-        return run(state, *edge_args)
+        return run(state, *args)
 
     return runner
 

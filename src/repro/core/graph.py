@@ -171,14 +171,30 @@ class TiledCSR:
 
 def build_tiled_csr(graph: Graph, tile_v: int = 128, tile_e: int = 128,
                     balance_by_degree: bool = True) -> TiledCSR:
-    V = graph.num_vertices
+    return _tile_edge_arrays(graph.num_vertices, graph.src, graph.dst,
+                             graph.weight, graph.deg_w, tile_v=tile_v,
+                             tile_e=tile_e,
+                             balance_by_degree=balance_by_degree)
+
+
+def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
+                      weight: np.ndarray, deg_w: np.ndarray, *,
+                      tile_v: int, tile_e: int,
+                      balance_by_degree: bool) -> TiledCSR:
+    """Tile a raw (src, dst, weight) edge list over ``V`` source rows.
+
+    The core of ``build_tiled_csr``, shared with the per-shard tiling
+    (``build_sharded_tiled_csr``), where ``dst`` carries exchange-plan
+    lookup indices rather than vertex ids and therefore cannot live in a
+    ``Graph`` (whose invariants demand symmetric edges with dst < V).
+    """
     num_tiles = max(1, -(-V // tile_v))
     padded_v = num_tiles * tile_v
 
     if balance_by_degree and V > tile_v:
         # Round-robin vertices (sorted by degree, desc) across tiles so hub
         # vertices spread out and per-tile edge counts even up.
-        rank = np.argsort(-graph.deg_w, kind="stable")
+        rank = np.argsort(-deg_w, kind="stable")
         # rank[i] is the vertex with i-th largest degree; place it at row
         # (i % num_tiles) * tile_v + (i // num_tiles): round-robin across
         # tiles.  i // num_tiles <= (V-1) // num_tiles < tile_v, so no tile
@@ -193,11 +209,11 @@ def build_tiled_csr(graph: Graph, tile_v: int = 128, tile_e: int = 128,
     inv_perm = np.full(padded_v, -1, dtype=np.int32)
     inv_perm[perm] = np.arange(V, dtype=np.int32)
 
-    new_src = perm[graph.src]
+    new_src = perm[src]
     order = np.argsort(new_src, kind="stable")
     s = new_src[order]
-    d = graph.dst[order]          # dst stays in ORIGINAL ids (labels indexed)
-    w = graph.weight[order]
+    d = dst[order]                # dst stays in ORIGINAL ids (labels indexed)
+    w = weight[order]
 
     tile_of = s // tile_v
     counts = np.bincount(tile_of, minlength=num_tiles)
@@ -227,3 +243,66 @@ def build_tiled_csr(graph: Graph, tile_v: int = 128, tile_e: int = 128,
     return TiledCSR(tile_v=tile_v, tile_e=tile_e, num_tiles=num_tiles,
                     max_chunks=max_chunks, src_local=src_local, dst=dstA,
                     weight=wA, perm=perm, inv_perm=inv_perm, padded_v=padded_v)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedTiledCSR:
+    """Per-edge-shard tilings, stacked for ``shard_map`` (leading dim ndev).
+
+    The sharded counterpart of ``TiledCSR``: each device's edge shard (see
+    ``repro.core.distributed.ShardedGraph``) is tiled independently over
+    its LOCAL vertex range, then padded to common (num_tiles, max_chunks)
+    so the stacked arrays shard evenly over the mesh.  ``dst`` carries
+    whatever index the exchange plan's lookup array expects (global vertex
+    ids for all-gather/delta, halo-remapped slots for halo); pad entries
+    have weight 0 and contribute nothing.
+    """
+
+    ndev: int
+    tile_v: int
+    tile_e: int
+    num_tiles: int          # per shard (max across shards)
+    max_chunks: int         # max across shards
+    src_local: np.ndarray   # int32 (ndev, num_tiles, max_chunks, tile_e)
+    dst: np.ndarray         # int32 (ndev, num_tiles, max_chunks, tile_e)
+    weight: np.ndarray      # float32 (ndev, num_tiles, max_chunks, tile_e)
+    perm: np.ndarray        # int32 (ndev, v_per_dev) local vertex -> tiled row
+
+
+def build_sharded_tiled_csr(sg, dst_index: Optional[np.ndarray] = None,
+                            tile_v: int = 128, tile_e: int = 128,
+                            balance_by_degree: bool = True
+                            ) -> ShardedTiledCSR:
+    """Retile a ``ShardedGraph``'s edge shards for the Pallas kernel.
+
+    ``dst_index`` overrides the global destination ids (e.g. with an
+    exchange plan's halo-remapped indices).  Each shard is tiled by
+    ``build_tiled_csr`` over a per-shard view (local source ids, the
+    shard's slice of the weighted degrees), so the kernel launched inside
+    ``shard_map`` sees exactly the layout the single-device kernel does.
+    """
+    ndev, vl = sg.ndev, sg.v_per_dev
+    dsts = sg.dst if dst_index is None else np.asarray(dst_index)
+    tiles = []
+    for p in range(ndev):
+        real = sg.weight[p] > 0
+        tiles.append(_tile_edge_arrays(
+            vl, sg.src_local[p][real].astype(np.int32),
+            dsts[p][real].astype(np.int32),
+            sg.weight[p][real].astype(np.float32), sg.deg_w[p],
+            tile_v=tile_v, tile_e=tile_e,
+            balance_by_degree=balance_by_degree))
+    T = max(t.num_tiles for t in tiles)
+    C = max(t.max_chunks for t in tiles)
+    src_local = np.zeros((ndev, T, C, tile_e), np.int32)
+    dstA = np.zeros((ndev, T, C, tile_e), np.int32)
+    wA = np.zeros((ndev, T, C, tile_e), np.float32)
+    perm = np.zeros((ndev, vl), np.int32)
+    for p, t in enumerate(tiles):
+        src_local[p, : t.num_tiles, : t.max_chunks] = t.src_local
+        dstA[p, : t.num_tiles, : t.max_chunks] = t.dst
+        wA[p, : t.num_tiles, : t.max_chunks] = t.weight
+        perm[p] = t.perm
+    return ShardedTiledCSR(ndev=ndev, tile_v=tile_v, tile_e=tile_e,
+                           num_tiles=T, max_chunks=C, src_local=src_local,
+                           dst=dstA, weight=wA, perm=perm)

@@ -8,6 +8,11 @@ precomputed index lists.  A better partitioning (Spinner vs hash) directly
 shrinks the halo, i.e. the bytes on the wire, which is exactly the
 mechanism behind the paper's 2x application speedup.
 
+The halo-plan construction itself (send lists + remapped edge indices)
+lives in ``repro.core.comm`` (``build_halo_index`` / ``halo_exchange``),
+shared with the sharded LPA engine's ``label_exchange="halo"`` plan; this
+module only adds the label-driven placement and the PageRank superstep.
+
 PageRank is implemented end-to-end; halo construction is generic.
 """
 from __future__ import annotations
@@ -22,6 +27,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
+from . import comm
 from .graph import Graph
 
 
@@ -49,7 +55,6 @@ def build_halo_plan(graph: Graph, labels: np.ndarray, ndev: int) -> HaloPlan:
     counts = np.bincount(labels, minlength=ndev)
     v_per_dev = int(counts.max())
     perm = np.empty(V, np.int64)
-    placed = []
     off = 0
     for p in range(ndev):
         mine = order[off: off + counts[p]]
@@ -57,31 +62,15 @@ def build_halo_plan(graph: Graph, labels: np.ndarray, ndev: int) -> HaloPlan:
         off += counts[p]
     src_p = perm[graph.src]
     dst_p = perm[graph.dst]
-    owner_src = src_p // v_per_dev
     owner_dst = dst_p // v_per_dev
 
-    # halo: for each (needer q, owner p != q) the unique src vertices
-    need = {}
-    H = 1
-    true_halo = 0
-    for q in range(ndev):
-        qe = owner_dst == q
-        for p in range(ndev):
-            if p == q:
-                continue
-            ids = np.unique(src_p[qe & (owner_src == p)])
-            need[(q, p)] = ids
-            true_halo += ids.size
-            H = max(H, ids.size)
+    # edges live at their dst owner and read their src's value: the shared
+    # halo machinery computes the send lists and the per-edge remap into
+    # [local values | halo]
+    hidx = comm.build_halo_index(owner_dst, src_p, ndev, v_per_dev)
+    H = hidx.halo_size
 
-    send_idx = np.zeros((ndev, ndev, H), np.int64)  # [owner p][needer q]
-    recv_pos = {}                                    # (q, p) -> slot base
-    for (q, p), ids in need.items():
-        local = ids - p * v_per_dev
-        send_idx[p, q, : local.size] = local
-        recv_pos[(q, p)] = ids
-
-    # remap edge srcs: local -> [0, v_per_dev); remote -> v_per_dev + p*H + slot
+    # group the remapped edges by owning device, padded square
     e_per = np.bincount(owner_dst, minlength=ndev)
     E = int(e_per.max()) if e_per.size else 1
     src_ext = np.zeros((ndev, E), np.int64)
@@ -89,29 +78,16 @@ def build_halo_plan(graph: Graph, labels: np.ndarray, ndev: int) -> HaloPlan:
     valid = np.zeros((ndev, E), bool)
     for q in range(ndev):
         qe = np.where(owner_dst == q)[0]
-        s, d = src_p[qe], dst_p[qe]
-        so = owner_src[qe]
-        ext = np.empty(s.size, np.int64)
-        local = so == q
-        ext[local] = s[local] - q * v_per_dev
-        for p in range(ndev):
-            if p == q:
-                continue
-            sel = so == p
-            if not sel.any():
-                continue
-            ids = recv_pos[(q, p)]
-            slot = np.searchsorted(ids, s[sel])
-            ext[sel] = v_per_dev + p * H + slot
-        src_ext[q, : s.size] = ext
-        dst_local[q, : s.size] = d - q * v_per_dev
-        valid[q, : s.size] = True
+        src_ext[q, : qe.size] = hidx.ext_idx[qe]
+        dst_local[q, : qe.size] = dst_p[qe] - q * v_per_dev
+        valid[q, : qe.size] = True
 
     out_deg = np.zeros(ndev * v_per_dev, np.float32)
     np.add.at(out_deg, src_p, 1.0)
     return HaloPlan(ndev=ndev, v_per_dev=v_per_dev, perm=perm,
-                    send_idx=send_idx, halo_size=H, true_halo=true_halo,
-                    src_ext=src_ext, dst_local=dst_local, edge_valid=valid,
+                    send_idx=hidx.send_idx, halo_size=H,
+                    true_halo=hidx.true_halo, src_ext=src_ext,
+                    dst_local=dst_local, edge_valid=valid,
                     out_deg=out_deg.reshape(ndev, v_per_dev))
 
 
@@ -131,10 +107,8 @@ def pagerank_distributed(graph: Graph, labels: np.ndarray, mesh: Mesh,
 
     def superstep(pr_l, send_l, src_l, dst_l, wv_l, deg_l):
         share = (pr_l[0] / jnp.maximum(deg_l[0], 1.0)).astype(jnp.float32)
-        # prepare per-destination buffers and swap: (ndev, H)
-        outbox = share[send_l[0]]                           # (ndev, H)
-        halo = jax.lax.all_to_all(outbox, axis, split_axis=0, concat_axis=0)
-        ext = jnp.concatenate([share, halo.reshape(-1)])
+        # boundary-only exchange, shared with the LPA engine's halo plan
+        ext = comm.halo_exchange(share, send_l[0], axis)
         contrib = jnp.zeros((vl,), jnp.float32).at[dst_l[0]].add(
             ext[src_l[0]] * wv_l[0])
         pr_new = (1 - damping) / V + damping * contrib

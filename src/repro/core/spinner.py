@@ -35,7 +35,10 @@ Engine layering (see ``repro.core.engine`` for the device-resident side):
               aggregates psum-reduced in the step): one ``while_loop``
               dispatch drives ALL devices, with no per-iteration host
               sync.  On a 1-device mesh this is a bit-compatible oracle
-              of "fused";
+              of "fused".  The per-iteration label exchange is pluggable
+              (``cfg.label_exchange``, see ``repro.core.comm``): full
+              all-gather, boundary-only halo, or changed-labels-only
+              delta -- identical trajectories, decreasing wire bytes;
             * ``engine="chunked"`` -- ``lax.scan`` over ``chunk_size``
               iterations per dispatch with fixed-size on-device history
               (phi / rho / score / migration traces), one host sync per
@@ -84,6 +87,23 @@ class SpinnerConfig:
     score_backend: Optional[str] = None
     tie_noise: float = 1e-7            # random tie-break amplitude
     current_bonus: float = 1e-6        # prefer the current label on ties
+    # Sharded-engine label exchange (see repro.core.comm): "allgather"
+    # ships the full label vector per iteration (the bit-compatible
+    # oracle), "halo" only the boundary labels other devices reference,
+    # "delta" only labels that changed last iteration (the Figure 7
+    # traffic decay).  All three walk identical trajectories; "auto"
+    # picks allgather on 1 device and delta on a real mesh.
+    label_exchange: str = "auto"
+    # Per-device compact-buffer capacity of the delta exchange (entries);
+    # None = v_per_dev // 4.  Iterations where any device changes more
+    # labels than this fall back to a full all-gather (still bit-equal).
+    delta_cap: Optional[int] = None
+    # Sharded tie-break noise: "replicated" draws over the full padded
+    # vertex set from the replicated key (1-device mesh bit-parity with
+    # the fused engine); "folded" folds the device index into the key and
+    # draws only the local shard -- O(V/ndev) noise memory for very large
+    # V, different (still deterministic) stream.
+    sharded_noise: str = "replicated"
 
     def capacity(self, graph: Graph) -> float:
         """C per Eq. (5), in weighted-degree units (see metrics module)."""
@@ -93,6 +113,24 @@ class SpinnerConfig:
         if self.score_backend is not None:
             return self.score_backend
         return "pallas" if self.use_kernel else "xla"
+
+    def resolved_label_exchange(self, ndev: int) -> str:
+        """Exchange plan for an ndev-device mesh (see repro.core.comm)."""
+        from .comm import EXCHANGE_PLANS     # the one plan registry
+        if self.label_exchange == "auto":
+            return "allgather" if ndev == 1 else "delta"
+        if self.label_exchange not in EXCHANGE_PLANS:
+            raise ValueError(
+                f"unknown label_exchange {self.label_exchange!r}; "
+                f"available: auto, {', '.join(sorted(EXCHANGE_PLANS))}")
+        return self.label_exchange
+
+    def resolved_sharded_noise(self) -> str:
+        if self.sharded_noise not in ("replicated", "folded"):
+            raise ValueError(
+                f"unknown sharded_noise {self.sharded_noise!r}; "
+                "available: replicated, folded")
+        return self.sharded_noise
 
 
 @dataclasses.dataclass
@@ -104,6 +142,8 @@ class PartitionResult:
     history: List[dict]                 # per-iteration phi/rho/score/migrations
     total_messages: float = 0.0         # sum of migrant degrees (network load)
     engine: str = "host"                # which runner produced this result
+    exchanged_bytes: float = 0.0        # cumulative label-exchange wire bytes
+                                        # (sharded engine only; see core.comm)
 
 
 def init_labels(graph: Graph, cfg: SpinnerConfig, key: jax.Array) -> jax.Array:
@@ -301,4 +341,5 @@ def partition(graph: Graph,
                            iterations=int(state.iteration),
                            halted=bool(state.halted), history=history,
                            total_messages=float(state.total_messages),
-                           engine=engine)
+                           engine=engine,
+                           exchanged_bytes=float(state.exchanged_bytes))

@@ -21,10 +21,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.graph import Graph, TiledCSR, build_tiled_csr
+from repro.core.graph import (Graph, TiledCSR, build_sharded_tiled_csr,
+                              build_tiled_csr)
 
 from . import ref
-from .spinner_scores import spinner_scores_pallas
+from .spinner_scores import scores_from_tiles, spinner_scores_pallas
 
 
 def _default_interpret() -> bool:
@@ -36,15 +37,13 @@ def round_up(x: int, m: int) -> int:
 
 
 @functools.partial(jax.jit, static_argnames=("tile_v", "k_pad", "k",
-                                             "num_vertices", "interpret"))
+                                             "interpret"))
 def _scores_from_tiles(labels, src_local, dst, w, perm, *, tile_v: int,
-                       k_pad: int, k: int, num_vertices: int,
-                       interpret: bool):
-    dst_label = labels[dst]                      # gather (T, C, TILE_E)
-    scores_pad = spinner_scores_pallas(src_local, dst_label, w,
-                                       tile_v=tile_v, k_pad=k_pad,
-                                       interpret=interpret)
-    return scores_pad[perm, :k]                  # back to original vertex order
+                       k_pad: int, k: int, interpret: bool):
+    # jitted entry so standalone spinner_scores_tiled() calls cache their
+    # compilation; engine traces inline scores_from_tiles directly
+    return scores_from_tiles(labels, src_local, dst, w, perm, tile_v=tile_v,
+                             k_pad=k_pad, k=k, interpret=interpret)
 
 
 def spinner_scores_tiled(labels: jax.Array, *, tiled: TiledCSR, k: int,
@@ -56,8 +55,7 @@ def spinner_scores_tiled(labels: jax.Array, *, tiled: TiledCSR, k: int,
     return _scores_from_tiles(
         labels, jnp.asarray(tiled.src_local), jnp.asarray(tiled.dst),
         jnp.asarray(tiled.weight), jnp.asarray(tiled.perm),
-        tile_v=tiled.tile_v, k_pad=k_pad, k=k,
-        num_vertices=int(tiled.perm.shape[0]), interpret=interpret)
+        tile_v=tiled.tile_v, k_pad=k_pad, k=k, interpret=interpret)
 
 
 def spinner_scores(labels: jax.Array, graph: Graph, k: int,
@@ -81,14 +79,17 @@ class ScoreBackend(Protocol):
     ``lax.while_loop`` / ``lax.scan`` bodies.
 
     ``build_sharded`` is the mesh-parallel counterpart: given the
-    ``ShardedGraph`` layout (see ``repro.core.distributed``) it returns
-    ``scores(labels_full, src_local, dst, weight) -> (v_per_dev, k)``
-    computing the numerator for THIS device's vertex range from this
-    device's edge shard, for use inside ``shard_map``.  ``labels_full``
-    is the all-gathered label vector; the edge arrays are the local
-    shard rows.  Backends without a sharded path raise
-    ``NotImplementedError`` at build time (a clear trace-time failure,
-    not a silent fallback).
+    ``ShardedGraph`` layout (see ``repro.core.distributed``) and the
+    exchange plan's per-edge ``dst_index`` (global vertex ids for
+    all-gather/delta, halo-remapped slots for halo), it returns
+    ``(edge_arrays, scores_fn)``.  ``edge_arrays`` are device arrays with
+    leading dimension ndev, threaded through ``shard_map`` with
+    ``PartitionSpec(axis)`` on that dimension; ``scores_fn(lookup,
+    *edge_blocks) -> (v_per_dev, k)`` computes the numerator for THIS
+    device's vertex range from its edge blocks (leading dim stripped),
+    indexing the plan's ``lookup`` array with the (blocked) ``dst_index``.
+    Backends without a sharded path raise ``NotImplementedError`` at
+    build time (a clear trace-time failure, not a silent fallback).
     """
 
     name: str
@@ -96,7 +97,8 @@ class ScoreBackend(Protocol):
     def build(self, graph: Graph, k: int
               ) -> Callable[[jax.Array], jax.Array]: ...
 
-    def build_sharded(self, sg, k: int) -> Callable[..., jax.Array]: ...
+    def build_sharded(self, sg, k: int, dst_index: np.ndarray
+                      ) -> tuple: ...
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,7 +117,7 @@ class XlaScatterBackend:
 
         return scores
 
-    def build_sharded(self, sg, k: int) -> Callable[..., jax.Array]:
+    def build_sharded(self, sg, k: int, dst_index: np.ndarray) -> tuple:
         """Local scatter-add over this device's edge shard.
 
         Row-for-row ``spinner_scores_ref`` restricted to the local vertex
@@ -124,14 +126,22 @@ class XlaScatterBackend:
         CSR-ordered edge list -- the result is bit-identical to
         ``build``'s unsharded path.
         """
+        from repro.core.distributed import device_upload   # lazy: no cycle
         vl = sg.v_per_dev
+        # the allgather/delta plans index with the global dst ids verbatim
+        # (dst_index IS sg.dst), so reuse the cached upload; halo's
+        # remapped slots are a genuinely different array
+        dst = (device_upload(sg, "dst") if dst_index is sg.dst
+               else jnp.asarray(np.asarray(dst_index, np.int32)))
+        args = (device_upload(sg, "src_local"), dst,
+                device_upload(sg, "weight"))
 
-        def scores(labels_full: jax.Array, src_local: jax.Array,
-                   dst: jax.Array, w: jax.Array) -> jax.Array:
-            nbr = labels_full[dst]
+        def scores(lookup: jax.Array, src_local: jax.Array,
+                   dst_idx: jax.Array, w: jax.Array) -> jax.Array:
+            nbr = lookup[dst_idx]
             return jnp.zeros((vl, k), jnp.float32).at[src_local, nbr].add(w)
 
-        return scores
+        return args, scores
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,13 +158,31 @@ class PallasTiledBackend:
         return functools.partial(spinner_scores_tiled, tiled=tiled, k=k,
                                  interpret=self.interpret)
 
-    def build_sharded(self, sg, k: int) -> Callable[..., jax.Array]:
-        raise NotImplementedError(
-            "score backend 'pallas' has no sharded implementation yet: the "
-            "tiled CSR would need to be rebuilt per edge shard and the "
-            "kernel launched inside shard_map. Use score_backend='xla' "
-            "with engine='sharded' (the backends are interchangeable "
-            "oracles on the unsharded engines).")
+    def build_sharded(self, sg, k: int, dst_index: np.ndarray) -> tuple:
+        """Per-shard retiled CSR + the kernel launched inside shard_map.
+
+        Each device's edge shard is retiled over its local vertex range
+        (``build_sharded_tiled_csr``) and the same tiled one-hot-matmul
+        kernel runs per device against the exchange plan's lookup array.
+        Edge weights are small integers ({1, 2}, Eq. 3), so the f32 MXU
+        accumulation is exact and the result is bit-identical to the XLA
+        scatter-add backend regardless of summation order.
+        """
+        st = build_sharded_tiled_csr(sg, dst_index, tile_v=self.tile_v,
+                                     tile_e=self.tile_e)
+        interpret = (self.interpret if self.interpret is not None
+                     else _default_interpret())
+        k_pad = round_up(max(k, 1), 128)
+        args = tuple(map(jnp.asarray, (st.src_local, st.dst, st.weight,
+                                       st.perm)))
+
+        def scores(lookup: jax.Array, src_local: jax.Array, dst: jax.Array,
+                   w: jax.Array, perm: jax.Array) -> jax.Array:
+            return scores_from_tiles(lookup, src_local, dst, w, perm,
+                                     tile_v=st.tile_v, k_pad=k_pad, k=k,
+                                     interpret=interpret)
+
+        return args, scores
 
 
 SCORE_BACKENDS = {

@@ -49,6 +49,26 @@ def _kernel(src_local_ref, dst_label_ref, w_ref, out_ref, *, tile_v: int,
         preferred_element_type=jnp.float32)
 
 
+def scores_from_tiles(labels_lookup: jax.Array, src_local: jax.Array,
+                      dst: jax.Array, w: jax.Array, perm: jax.Array, *,
+                      tile_v: int, k_pad: int, k: int,
+                      interpret: bool = False) -> jax.Array:
+    """Gather destination labels, run the kernel, un-permute the rows.
+
+    The full ComputeScores pipeline for one tiling: ``dst`` indexes
+    ``labels_lookup`` (the whole label vector on a single device; an
+    exchange plan's ``[local | halo]`` lookup inside ``shard_map``), the
+    kernel accumulates the (padded_v, k_pad) block, and ``perm`` maps the
+    tiled rows back to vertex order.  Pure and trace-friendly, so it
+    inlines into ``lax.while_loop`` bodies on either path.
+    """
+    dst_label = labels_lookup[dst]               # gather (T, C, TILE_E)
+    scores_pad = spinner_scores_pallas(src_local, dst_label, w,
+                                       tile_v=tile_v, k_pad=k_pad,
+                                       interpret=interpret)
+    return scores_pad[perm, :k]
+
+
 def spinner_scores_pallas(src_local: jax.Array, dst_label: jax.Array,
                           w: jax.Array, *, tile_v: int, k_pad: int,
                           interpret: bool = False) -> jax.Array:

@@ -32,7 +32,12 @@ def make_partition_mesh(num_devices: int | None = None,
 
     ``partition(g, cfg, engine="sharded", mesh=make_partition_mesh())``
     shards the fused loop over the first ``num_devices`` local devices
-    (all of them by default).  Run under
+    (all of them by default).  On a multi-device mesh the per-iteration
+    label exchange defaults to the changed-labels-only delta plan
+    (``cfg.label_exchange="auto"``; see ``repro.core.comm`` for the
+    allgather / halo / delta matrix -- identical trajectories, decreasing
+    wire bytes), and both score backends ("xla" and "pallas") run
+    sharded.  Run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to exercise
     multi-device semantics on CPU.
     """

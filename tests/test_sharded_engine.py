@@ -1,5 +1,8 @@
 """Sharded engine coverage: 1-device bit parity with the fused engine,
 multi-device balance/dispatch semantics (subprocess, 8 host devices),
+exchange-plan parity (allgather / halo / delta walk identical
+trajectories, with halo/delta strictly fewer bytes on the wire), the
+sharded Pallas score backend (bit-identical to the XLA scatter-add),
 mesh-keyed runner caches, and adapt()/resize() on the sharded path.
 
 The 1-device parity tests are the backbone of the sharded refactor: a
@@ -8,6 +11,8 @@ identity, so ``engine="sharded"`` must reproduce ``engine="fused"``
 BIT FOR BIT -- labels, loads, iteration counts, halting flags.  Any
 drift means the shared ``make_vertex_update`` math forked.
 """
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -108,10 +113,87 @@ class TestShardedApi:
             partition(ws_graph, cfg, record_history=False, engine="fused",
                       mesh=mesh1)
 
-    def test_pallas_backend_not_implemented(self, ws_graph, mesh1):
+    def test_pallas_backend_matches_xla_sharded(self, ws_graph, mesh1):
+        """The per-shard tiled Pallas kernel is bit-identical to the XLA
+        scatter-add on the sharded engine (integer edge weights make the
+        f32 sums exact regardless of accumulation order)."""
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
+        xla = partition(ws_graph, cfg, record_history=False,
+                        engine="sharded", mesh=mesh1)
+        cfg_p = dataclasses.replace(cfg, score_backend="pallas")
+        pal = partition(ws_graph, cfg_p, record_history=False,
+                        engine="sharded", mesh=mesh1)
+        np.testing.assert_array_equal(xla.labels, pal.labels)
+        np.testing.assert_array_equal(xla.loads, pal.loads)
+        assert xla.iterations == pal.iterations
+
+    def test_pallas_backend_rides_every_exchange_plan(self, pl_graph,
+                                                      mesh1):
+        cfg = SpinnerConfig(k=4, seed=3, max_iters=40)
+        base = partition(pl_graph, cfg, record_history=False,
+                         engine="sharded", mesh=mesh1)
+        for mode in ("halo", "delta"):
+            cfg_m = dataclasses.replace(cfg, score_backend="pallas",
+                                        label_exchange=mode)
+            res = partition(pl_graph, cfg_m, record_history=False,
+                            engine="sharded", mesh=mesh1)
+            np.testing.assert_array_equal(base.labels, res.labels)
+            assert base.iterations == res.iterations
+
+
+class TestExchangeModes:
+    """halo / delta are pure communication strategies: trajectories must
+    be bit-identical to the allgather oracle (1-device here; 2/4/8-device
+    parity in the subprocess tests below)."""
+
+    def test_all_modes_bit_identical(self, ws_graph, mesh1):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
+        results = {}
+        for mode in ("allgather", "halo", "delta"):
+            cfg_m = dataclasses.replace(cfg, label_exchange=mode)
+            results[mode] = partition(ws_graph, cfg_m, record_history=False,
+                                      engine="sharded", mesh=mesh1)
+        for mode in ("halo", "delta"):
+            np.testing.assert_array_equal(results["allgather"].labels,
+                                          results[mode].labels)
+            np.testing.assert_array_equal(results["allgather"].loads,
+                                          results[mode].loads)
+            assert results["allgather"].iterations == \
+                results[mode].iterations
+            assert results["allgather"].halted == results[mode].halted
+
+    def test_single_device_exchanges_zero_bytes(self, ws_graph, mesh1):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
+        for mode in ("allgather", "halo", "delta"):
+            cfg_m = dataclasses.replace(cfg, label_exchange=mode)
+            res = partition(ws_graph, cfg_m, record_history=False,
+                            engine="sharded", mesh=mesh1)
+            assert res.exchanged_bytes == 0.0, mode
+
+    def test_unknown_mode_rejected(self, ws_graph, mesh1):
         cfg = SpinnerConfig(k=4, seed=0, max_iters=5,
-                            score_backend="pallas")
-        with pytest.raises(NotImplementedError, match="sharded"):
+                            label_exchange="bogus")
+        with pytest.raises(ValueError, match="label_exchange"):
+            partition(ws_graph, cfg, record_history=False, engine="sharded",
+                      mesh=mesh1)
+
+    def test_folded_noise_runs_and_balances(self, ws_graph, mesh1):
+        """The O(V/ndev) folded noise stream is a different (still
+        deterministic) draw: no bit parity, but quality must hold."""
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=80,
+                            sharded_noise="folded")
+        res = partition(ws_graph, cfg, record_history=False,
+                        engine="sharded", mesh=mesh1)
+        res2 = partition(ws_graph, cfg, record_history=False,
+                         engine="sharded", mesh=mesh1)
+        np.testing.assert_array_equal(res.labels, res2.labels)
+        assert res.halted
+        assert metrics.rho(ws_graph, res.labels, cfg.k) < cfg.c + 0.1
+
+    def test_bad_noise_mode_rejected(self, ws_graph, mesh1):
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=5,
+                            sharded_noise="bogus")
+        with pytest.raises(ValueError, match="sharded_noise"):
             partition(ws_graph, cfg, record_history=False, engine="sharded",
                       mesh=mesh1)
 
@@ -272,6 +354,84 @@ print("SINGLE DISPATCH OK")
 """
 
 
+EXCHANGE_PARITY_MULTIDEV = """
+import dataclasses
+import numpy as np
+from repro.core import SpinnerConfig, generators, partition
+from repro.launch.mesh import make_partition_mesh
+
+# clustered graph with contiguous communities: the range partition keeps
+# most neighbors local, so the halo is a small boundary set
+g = generators.clustered_graph(8, 500, 0.02, 0.5, seed=5)
+cfg = SpinnerConfig(k=8, seed=1, max_iters=120)
+for ndev in (2, 4, 8):
+    mesh = make_partition_mesh(ndev)
+    base = partition(g, dataclasses.replace(cfg, label_exchange="allgather"),
+                     record_history=False, engine="sharded", mesh=mesh)
+    ag_bpi = base.exchanged_bytes / max(1, base.iterations)
+    for mode in ("halo", "delta"):
+        res = partition(g, dataclasses.replace(cfg, label_exchange=mode),
+                        record_history=False, engine="sharded", mesh=mesh)
+        np.testing.assert_array_equal(base.labels, res.labels)
+        np.testing.assert_array_equal(base.loads, res.loads)
+        assert res.iterations == base.iterations, (mode, ndev)
+        assert res.halted == base.halted, (mode, ndev)
+        bpi = res.exchanged_bytes / max(1, res.iterations)
+        assert 0 < bpi < ag_bpi, (mode, ndev, bpi, ag_bpi)
+        print(f"ndev={ndev} {mode}: {bpi:.0f} B/iter vs allgather "
+              f"{ag_bpi:.0f} B/iter")
+# "auto" on a multi-device mesh resolves to delta -- same trajectory
+mesh = make_partition_mesh(8)
+base = partition(g, dataclasses.replace(cfg, label_exchange="allgather"),
+                 record_history=False, engine="sharded", mesh=mesh)
+auto = partition(g, cfg, record_history=False, engine="sharded", mesh=mesh)
+np.testing.assert_array_equal(base.labels, auto.labels)
+assert auto.exchanged_bytes < base.exchanged_bytes
+print("EXCHANGE PARITY OK")
+"""
+
+
+PALLAS_SHARDED_MULTIDEV = """
+import dataclasses
+import numpy as np
+from repro.core import SpinnerConfig, generators, partition
+from repro.launch.mesh import make_partition_mesh
+
+g = generators.watts_strogatz(801, 8, 0.2, seed=7)   # 801: padding on 8 dev
+cfg = SpinnerConfig(k=8, seed=3, max_iters=40)
+mesh = make_partition_mesh()
+assert mesh.size == 8
+xla = partition(g, cfg, record_history=False, engine="sharded", mesh=mesh)
+# halo included: its remapped [local | halo] dst slots feed the per-shard
+# tiled CSR, a layout the 1-device tests can never produce (true_halo=0)
+for mode in ("allgather", "halo", "delta"):
+    cfg_p = dataclasses.replace(cfg, score_backend="pallas",
+                                label_exchange=mode)
+    pal = partition(g, cfg_p, record_history=False, engine="sharded",
+                    mesh=mesh)
+    np.testing.assert_array_equal(xla.labels, pal.labels)
+    np.testing.assert_array_equal(xla.loads, pal.loads)
+    assert xla.iterations == pal.iterations, mode
+print("PALLAS SHARDED OK")
+"""
+
+
+FOLDED_NOISE_MULTIDEV = """
+import numpy as np
+from repro.core import SpinnerConfig, generators, metrics, partition
+from repro.launch.mesh import make_partition_mesh
+
+g = generators.watts_strogatz(4001, 12, 0.2, seed=3)
+cfg = SpinnerConfig(k=8, seed=1, max_iters=120, sharded_noise="folded")
+mesh = make_partition_mesh()
+res = partition(g, cfg, record_history=False, engine="sharded", mesh=mesh)
+assert res.halted
+assert metrics.phi(g, res.labels) > 0.3
+assert metrics.rho(g, res.labels, cfg.k) < cfg.c + 0.05
+print("FOLDED NOISE OK")
+"""
+
+
 @pytest.mark.slow
 def test_multidev_balance_2_4_8():
     r = run_devices_subprocess(MULTIDEV_BALANCE)
@@ -282,3 +442,21 @@ def test_multidev_balance_2_4_8():
 def test_single_while_loop_dispatch_8dev():
     r = run_devices_subprocess(SINGLE_DISPATCH_8DEV)
     assert "SINGLE DISPATCH OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_exchange_parity_2_4_8dev():
+    r = run_devices_subprocess(EXCHANGE_PARITY_MULTIDEV)
+    assert "EXCHANGE PARITY OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_pallas_sharded_8dev():
+    r = run_devices_subprocess(PALLAS_SHARDED_MULTIDEV)
+    assert "PALLAS SHARDED OK" in r.stdout, r.stdout + r.stderr
+
+
+@pytest.mark.slow
+def test_folded_noise_8dev():
+    r = run_devices_subprocess(FOLDED_NOISE_MULTIDEV)
+    assert "FOLDED NOISE OK" in r.stdout, r.stdout + r.stderr
