@@ -27,7 +27,6 @@ row there, not a speed claim).
 """
 from __future__ import annotations
 
-import dataclasses
 import os
 import subprocess
 import sys
@@ -35,27 +34,30 @@ import time
 
 import jax
 
-from repro.core import SpinnerConfig, engine, generators, partition, \
-    prepare_init
+import numpy as np
+
+from repro.core import EngineOptions, SpinnerConfig, adapt, engine, \
+    generators, open_session, partition, prepare_init
+from repro.core.graph import add_edges
 from repro.core.distributed import run_sharded_hostloop
 from repro.launch.mesh import make_partition_mesh
 
 from .common import emit, get_graph
 
 EXCHANGE_MATRIX_CODE = """
-import dataclasses, time
-from repro.core import SpinnerConfig, generators, partition
+import time
+from repro.core import EngineOptions, SpinnerConfig, generators, partition
 from repro.launch.mesh import make_partition_mesh
 
 g = generators.clustered_graph(8, {n_per}, 0.02, 0.5, seed=5)
 cfg = SpinnerConfig(k=8, seed=1, max_iters={max_iters})
 mesh = make_partition_mesh()
 for mode in ("allgather", "halo", "delta"):
-    cfg_m = dataclasses.replace(cfg, label_exchange=mode)
-    kw = dict(record_history=False, engine="sharded", mesh=mesh)
-    partition(g, cfg_m, **kw)                     # warm-up/compile
+    kw = dict(record_history=False, engine="sharded", mesh=mesh,
+              options=EngineOptions(label_exchange=mode))
+    partition(g, cfg, **kw)                       # warm-up/compile
     t0 = time.time()
-    res = partition(g, cfg_m, **kw)
+    res = partition(g, cfg, **kw)
     dt = time.time() - t0
     bpi = res.exchanged_bytes / max(1, res.iterations)
     print(f"MODE {{mode}} ndev={{mesh.size}} iters={{res.iterations}} "
@@ -236,18 +238,18 @@ def run(quick: bool = False) -> list:
     # kernel op-by-op, so this row tracks coverage/cost, not TPU speed
     g_pal = generators.watts_strogatz(1000 if quick else 2000, 10, 0.2,
                                       seed=9)
-    cfg_pal = SpinnerConfig(k=16, seed=0, max_iters=4 if quick else 6,
-                            score_backend="pallas")
+    cfg_pal = SpinnerConfig(k=16, seed=0, max_iters=4 if quick else 6)
     mesh1 = make_partition_mesh(1)
-    kw = {"record_history": False, "engine": "sharded", "mesh": mesh1}
+    kw = {"record_history": False, "engine": "sharded", "mesh": mesh1,
+          "options": EngineOptions(score_backend="pallas")}
     partition(g_pal, cfg_pal, **kw)              # warm-up/compile
     t0 = time.time()
     res_p = partition(g_pal, cfg_pal, **kw)
     t_pal = time.time() - t0
-    cfg_xla = dataclasses.replace(cfg_pal, score_backend="xla")
-    partition(g_pal, cfg_xla, **kw)              # warm-up/compile
+    kw["options"] = EngineOptions(score_backend="xla")
+    partition(g_pal, cfg_pal, **kw)              # warm-up/compile
     t0 = time.time()
-    res_x = partition(g_pal, cfg_xla, **kw)
+    res_x = partition(g_pal, cfg_pal, **kw)
     t_xla = time.time() - t0
     parity_p = ("ok" if (res_p.labels == res_x.labels).all()
                 else "DIVERGED")
@@ -259,6 +261,50 @@ def run(quick: bool = False) -> list:
                    f"xla_total_s={t_xla:.3f};parity={parity_p}",
         "iterations": res_p.iterations, "total_s": t_pal,
     })
+
+    # session amortization (PR 4): a long-lived PartitionSession compiles
+    # its fused runner against the graph's (V, E) shape bucket, so a warm
+    # adapt() on a grown same-bucket graph pays upload + dispatch only.
+    # Cold = one-shot adapt with fresh cfg statics (nothing pre-compiled:
+    # full trace + XLA compile on the critical path); warm = the live
+    # session (zero new compiles, asserted).
+    g_s = generators.watts_strogatz(3000 if quick else 10_000, 10, 0.2,
+                                    seed=13)
+    v_s = g_s.num_vertices
+    rng = np.random.default_rng(5)
+    sess_cfg = SpinnerConfig(k=16, seed=0, max_iters=41)
+    sess = open_session(g_s, sess_cfg, EngineOptions(engine="fused"))
+    res0 = sess.partition(record_history=False)
+    g_grown = add_edges(g_s, rng.integers(0, v_s, 200),
+                        rng.integers(0, v_s, 200), num_vertices=v_s + 10)
+    cold_cfg = SpinnerConfig(k=16, seed=0, max_iters=43)   # fresh statics
+    t0 = time.time()
+    res_cold = adapt(g_grown, res0.labels, cold_cfg, record_history=False)
+    t_cold_adapt = time.time() - t0
+    compiles_before = sess.compiles
+    t0 = time.time()
+    res_warm = sess.adapt(g_grown, record_history=False)
+    t_warm_adapt = time.time() - t0
+    warm_compiles = sess.compiles - compiles_before
+    parity_s = ("ok" if (res_cold.labels == res_warm.labels).all()
+                else "DIVERGED")
+    rows.append({
+        "name": "engine/session_cold_adapt",
+        "us_per_call": t_cold_adapt * 1e6,
+        "derived": f"iters={res_cold.iterations};"
+                   f"total_s={t_cold_adapt:.3f};compile_on_path=1",
+    })
+    rows.append({
+        "name": "engine/session_warm_adapt",
+        "us_per_call": t_warm_adapt * 1e6,
+        "derived": f"iters={res_warm.iterations};"
+                   f"total_s={t_warm_adapt:.3f};"
+                   f"new_compiles={warm_compiles};"
+                   f"speedup_vs_cold="
+                   f"{t_cold_adapt / max(t_warm_adapt, 1e-12):.1f}x;"
+                   f"bucket={sess.stats()['bucket']};parity={parity_s}",
+    })
+    sess.close()
 
     # compile cost of the single-dispatch path (first call - steady state)
     labels, loads, key = prepare_init(g, cfg)

@@ -57,15 +57,16 @@ def run(quick: bool = False) -> list:
     # end-to-end: both score backends driven by the fused on-device engine
     # (interpret-mode Pallas is host-speed; the row validates the plumbing
     # and gives the XLA-backend steady-state number)
-    from repro.core import SpinnerConfig, partition
+    from repro.core import EngineOptions, SpinnerConfig, partition
     g_small = generators.powerlaw_ba(1000 if quick else 3000, 6, seed=1)
     for backend in ("xla",) if quick else ("xla", "pallas"):
-        cfg = SpinnerConfig(k=16, seed=0, max_iters=30,
-                            score_backend=backend)
+        cfg = SpinnerConfig(k=16, seed=0, max_iters=30)
+        opts = EngineOptions(score_backend=backend)
         partition(g_small, cfg, record_history=False,
-                  engine="fused")                     # compile
+                  engine="fused", options=opts)       # compile
         t0 = time.time()
-        res = partition(g_small, cfg, record_history=False, engine="fused")
+        res = partition(g_small, cfg, record_history=False, engine="fused",
+                        options=opts)
         dt = time.time() - t0
         rows.append({
             "name": f"kernel/fused_engine/{backend}",

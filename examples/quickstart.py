@@ -4,7 +4,9 @@
 """
 import numpy as np
 
-from repro.core import SpinnerConfig, generators, metrics, partition
+from repro.core import (SpinnerConfig, generators, metrics, open_session,
+                        partition)
+from repro.core.graph import add_edges
 
 # a small-world graph (the paper's synthetic workload family)
 graph = generators.watts_strogatz(n=20_000, k_nbrs=20, beta=0.3, seed=1)
@@ -32,3 +34,25 @@ print("per-iteration trace (first 5):")
 for h in result.history[:5]:
     print(f"  iter {h['iteration']:3d}  phi={h['phi']:.3f} "
           f"rho={h['rho']:.3f} migrations={h['migrations']}")
+
+# --- continuous partitioning: the session API (Sections 3.4-3.5) ----------
+# A long-lived service holds a PartitionSession: the graph upload and the
+# compiled runner live on device, and adapt()/resize() are cheap repeat
+# calls -- a grown graph that stays inside its (V, E) shape bucket reuses
+# the SAME compiled executable (session.stats()["compiles"] stays flat).
+rng = np.random.default_rng(0)
+with open_session(graph, cfg) as session:
+    base = session.partition(record_history=False)
+    grown = add_edges(graph, rng.integers(0, graph.num_vertices, 500),
+                      rng.integers(0, graph.num_vertices, 500))
+    adapted = session.adapt(grown, record_history=False)    # warm: 0 compiles
+    resized = session.resize(cfg.k + 4, record_history=False)
+    st = session.stats()
+    moved = metrics.partitioning_difference(base.labels, adapted.labels)
+    print(f"session: bucket={st['bucket']} runs={st['runs']} "
+          f"compiles={st['compiles']}")
+    print(f"adapt after 500 new edges: {adapted.iterations} iterations, "
+          f"{moved:.1%} of vertices moved (vs ~{1 - 1 / cfg.k:.0%} from "
+          f"scratch)")
+    print(f"resize {cfg.k} -> {cfg.k + 4}: rho = "
+          f"{metrics.rho(grown, resized.labels, cfg.k + 4):.3f}")

@@ -1,23 +1,30 @@
 """Spinner core: the paper's contribution as a composable JAX module."""
-from . import comm, engine, generators, graph, incremental, metrics
-from .engine import (SpinnerState, make_fused_runner, make_chunked_runner,
-                     make_iteration, make_sharded_runner, make_step_fn,
-                     make_vertex_update, run_chunked, run_fused, run_sharded)
-from .graph import Graph, TiledCSR, add_edges, build_tiled_csr, from_edges
+from . import comm, engine, generators, graph, incremental, metrics, session
+from .engine import (EngineOptions, SpinnerState, make_fused_runner,
+                     make_chunked_runner, make_iteration, make_sharded_runner,
+                     make_step_fn, make_vertex_update, run_chunked, run_fused,
+                     run_sharded)
+from .graph import (Graph, TiledCSR, add_edges, build_tiled_csr, from_edges,
+                    pad_graph, shape_bucket)
 from .incremental import adapt, elastic_relabel, extend_labels, resize
 from .metrics import (partitioning_difference, phi, phi_weighted, rho,
                       score_global, summarize)
-from .spinner import (PartitionResult, SpinnerConfig, compute_loads,
-                      init_labels, make_step, partition, prepare_init)
+from .session import PartitionSession, open_session
+from .spinner import (PartitionResult, SpinnerConfig,
+                      SpinnerDeprecationWarning, compute_loads, init_labels,
+                      make_step, partition, prepare_init, resolve_options)
 
 __all__ = [
     "Graph", "TiledCSR", "from_edges", "add_edges", "build_tiled_csr",
-    "SpinnerConfig", "PartitionResult", "SpinnerState", "partition",
-    "prepare_init", "make_step", "make_step_fn", "make_iteration",
-    "make_vertex_update", "make_fused_runner", "make_chunked_runner",
-    "make_sharded_runner", "run_fused", "run_chunked", "run_sharded",
-    "init_labels", "compute_loads", "adapt", "resize", "elastic_relabel",
-    "extend_labels", "phi", "phi_weighted", "rho", "score_global",
+    "pad_graph", "shape_bucket",
+    "SpinnerConfig", "SpinnerDeprecationWarning", "EngineOptions",
+    "PartitionResult", "PartitionSession", "open_session", "SpinnerState",
+    "partition", "prepare_init", "resolve_options", "make_step",
+    "make_step_fn", "make_iteration", "make_vertex_update",
+    "make_fused_runner", "make_chunked_runner", "make_sharded_runner",
+    "run_fused", "run_chunked", "run_sharded", "init_labels",
+    "compute_loads", "adapt", "resize", "elastic_relabel", "extend_labels",
+    "phi", "phi_weighted", "rho", "score_global",
     "partitioning_difference", "summarize", "comm", "engine", "generators",
-    "graph", "metrics", "incremental",
+    "graph", "metrics", "incremental", "session",
 ]

@@ -73,7 +73,8 @@ class HaloIndex:
 
 
 def build_halo_index(edge_owner: np.ndarray, remote_ids: np.ndarray,
-                     ndev: int, v_per_dev: int) -> HaloIndex:
+                     ndev: int, v_per_dev: int,
+                     pad_halo: bool = False) -> HaloIndex:
     """Build the halo plan for edges referencing remote vertex values.
 
     Args:
@@ -81,6 +82,10 @@ def build_halo_index(edge_owner: np.ndarray, remote_ids: np.ndarray,
       remote_ids: (E,) placed id of each edge's remote endpoint -- the
         vertex whose value the edge must read.  Placement is contiguous
         range partitioning: device p owns ``[p*v_per_dev, (p+1)*v_per_dev)``.
+      pad_halo: bucket the per-pair halo size H (power-of-two-ish) so the
+        all_to_all compile shape survives boundary-set drift when a
+        session rebinds a grown graph; pad slots send vertex 0's value
+        redundantly and no edge ever reads them.
     """
     edge_owner = np.asarray(edge_owner)
     remote_ids = np.asarray(remote_ids)
@@ -98,6 +103,9 @@ def build_halo_index(edge_owner: np.ndarray, remote_ids: np.ndarray,
             need[(q, p)] = ids
             true_halo += ids.size
             H = max(H, int(ids.size))
+    if pad_halo:
+        from .graph import shape_bucket
+        H = shape_bucket(H, floor=8)
 
     send_idx = np.zeros((ndev, ndev, H), np.int32)   # [owner p][needer q]
     for (q, p), ids in need.items():
@@ -152,10 +160,27 @@ class ExchangePlan:
         returning ``(lookup, new_aux, wire_bytes)`` where ``wire_bytes``
         is the f32 per-iteration message volume accumulated into
         ``SpinnerState.exchanged_bytes``.
+
+    Static identity (``signature()`` / ``from_signature``): the traced
+    methods only read python-int shape parameters off ``self``, so a plan
+    is fully described -- for compile purposes -- by its signature tuple.
+    The engine's global program cache keys on that signature and traces
+    against a ``from_signature`` view, which lets two different graphs
+    whose layouts share the same shape bucket share one compiled sharded
+    runner (see ``repro.core.session``).
     """
 
     name: str
     dst_index: np.ndarray
+
+    def signature(self) -> tuple:
+        """Static ints the traced methods close over (program cache key)."""
+        raise NotImplementedError
+
+    @classmethod
+    def from_signature(cls, sig: tuple) -> "ExchangePlan":
+        """Array-free trace view reconstructed from ``signature()``."""
+        raise NotImplementedError
 
     def device_args(self) -> Tuple[jax.Array, ...]:
         return ()
@@ -184,6 +209,16 @@ class AllGatherPlan(ExchangePlan):
         self.v_pad = sg.num_vertices
         self.dst_index = sg.dst
 
+    def signature(self) -> tuple:
+        return (self.name, self.ndev, self.v_pad)
+
+    @classmethod
+    def from_signature(cls, sig):
+        plan = cls.__new__(cls)
+        _, plan.ndev, plan.v_pad = sig
+        plan.dst_index = None
+        return plan
+
     def wire_bytes_per_iter(self) -> int:
         # every device receives the (v_pad - v_per_dev) labels it lacks
         return (self.ndev - 1) * self.v_pad * 4
@@ -199,13 +234,14 @@ class HaloPlan(ExchangePlan):
 
     name = "halo"
 
-    def __init__(self, sg):
+    def __init__(self, sg, pad: bool = False):
         self.ndev = sg.ndev
         self.v_per_dev = sg.v_per_dev
         real = sg.weight.reshape(-1) > 0                 # drop layout padding
         owner = np.repeat(np.arange(sg.ndev), sg.dst.shape[1])[real]
         remote = sg.dst.reshape(-1)[real]
-        hidx = build_halo_index(owner, remote, sg.ndev, sg.v_per_dev)
+        hidx = build_halo_index(owner, remote, sg.ndev, sg.v_per_dev,
+                                pad_halo=pad)
         self.halo_size = hidx.halo_size
         self.true_halo = hidx.true_halo
         self._send_idx = hidx.send_idx
@@ -216,14 +252,28 @@ class HaloPlan(ExchangePlan):
         self.dst_index = dst_index
         self._send_idx_dev = None
 
+    def signature(self) -> tuple:
+        return (self.name, self.ndev, self.v_per_dev, self.halo_size)
+
+    @classmethod
+    def from_signature(cls, sig):
+        plan = cls.__new__(cls)
+        _, plan.ndev, plan.v_per_dev, plan.halo_size = sig
+        plan.true_halo = None          # graph-dependent: wire bytes arrive
+        plan.dst_index = None          # as a traced device arg instead
+        return plan
+
     def device_args(self):
-        # uploaded once per plan (plans are cached per layout)
+        # uploaded once per plan (plans are cached per layout); the true
+        # (unpadded) wire volume rides along as a replicated scalar so the
+        # compiled program stays correct for every graph in the bucket
         if self._send_idx_dev is None:
-            self._send_idx_dev = (jnp.asarray(self._send_idx),)
+            self._send_idx_dev = (jnp.asarray(self._send_idx),
+                                  jnp.float32(self.true_halo * 4))
         return self._send_idx_dev
 
     def arg_specs(self, axis):
-        return (PartitionSpec(axis),)
+        return (PartitionSpec(axis), PartitionSpec())
 
     def wire_bytes_per_iter(self) -> int:
         return self.true_halo * 4
@@ -232,9 +282,9 @@ class HaloPlan(ExchangePlan):
         """What the static-shape all_to_all physically moves."""
         return self.ndev * (self.ndev - 1) * self.halo_size * 4
 
-    def exchange(self, labels_local, aux, axis, send_idx_dev):
+    def exchange(self, labels_local, aux, axis, send_idx_dev, wire_bytes):
         lookup = halo_exchange(labels_local, send_idx_dev, axis)
-        return lookup, aux, jnp.float32(self.wire_bytes_per_iter())
+        return lookup, aux, wire_bytes
 
 
 class DeltaPlan(ExchangePlan):
@@ -266,6 +316,16 @@ class DeltaPlan(ExchangePlan):
         elif cap < 1:
             raise ValueError(f"delta_cap must be >= 1, got {cap}")
         self.cap = min(int(cap), sg.v_per_dev)
+
+    def signature(self) -> tuple:
+        return (self.name, self.ndev, self.v_per_dev, self.v_pad, self.cap)
+
+    @classmethod
+    def from_signature(cls, sig):
+        plan = cls.__new__(cls)
+        _, plan.ndev, plan.v_per_dev, plan.v_pad, plan.cap = sig
+        plan.dst_index = None
+        return plan
 
     def wire_bytes_per_iter(self) -> Optional[int]:
         return None            # measured: depends on per-iteration migrations
@@ -304,7 +364,7 @@ class DeltaPlan(ExchangePlan):
         return lookup, lookup, wire
 
 
-# The one registry of plan names: SpinnerConfig.resolved_label_exchange
+# The one registry of plan names: EngineOptions.resolved_label_exchange
 # validates against its keys, so adding a plan here is the whole job.
 EXCHANGE_PLANS = {
     "allgather": AllGatherPlan,
@@ -312,11 +372,11 @@ EXCHANGE_PLANS = {
     "delta": DeltaPlan,
 }
 
-_PLAN_CACHE: dict = {}   # per ShardedGraph: (name[, delta_cap]) -> plan
+_PLAN_CACHE: dict = {}   # per ShardedGraph: (name[, delta_cap], pad) -> plan
 
 
-def make_exchange_plan(name: str, sg, delta_cap: Optional[int] = None
-                       ) -> ExchangePlan:
+def make_exchange_plan(name: str, sg, delta_cap: Optional[int] = None,
+                       pad: bool = False) -> ExchangePlan:
     """Build (or fetch cached) the named plan for a ``ShardedGraph``.
 
     Cached per layout via the engine's weakref-guarded memoization: the
@@ -324,6 +384,7 @@ def make_exchange_plan(name: str, sg, delta_cap: Optional[int] = None
     the runner build and ``comm_stats`` ask for the same plan.
     ``delta_cap`` only shapes the delta plan, so it stays out of the
     other plans' keys (a cap sweep never rebuilds the halo pass).
+    ``pad`` buckets the halo size for session compile reuse.
     """
     from .engine import _graph_cached        # lazy: engine imports us too
 
@@ -331,7 +392,15 @@ def make_exchange_plan(name: str, sg, delta_cap: Optional[int] = None
         raise ValueError(f"unknown label exchange {name!r}; "
                          f"available: {', '.join(sorted(EXCHANGE_PLANS))}")
     if name == "delta":
-        key, build = (name, delta_cap), lambda: DeltaPlan(sg, cap=delta_cap)
+        key, build = ((name, delta_cap, pad),
+                      lambda: DeltaPlan(sg, cap=delta_cap))
+    elif name == "halo":
+        key, build = (name, None, pad), lambda: HaloPlan(sg, pad=pad)
     else:
-        key, build = (name, None), lambda: EXCHANGE_PLANS[name](sg)
+        key, build = (name, None, pad), lambda: EXCHANGE_PLANS[name](sg)
     return _graph_cached(_PLAN_CACHE, sg, key, build)
+
+
+def plan_from_signature(sig: tuple) -> ExchangePlan:
+    """Array-free plan view for tracing (see ``ExchangePlan.signature``)."""
+    return EXCHANGE_PLANS[sig[0]].from_signature(sig)

@@ -38,16 +38,14 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 
 from . import engine
 from .graph import Graph
 from .spinner import SpinnerConfig
 
-_SHARD_CACHE: dict = {}   # per graph: (ndev,) -> ShardedGraph
+_SHARD_CACHE: dict = {}   # per graph: (ndev, pad) -> ShardedGraph
 _UPLOAD_CACHE: dict = {}  # per ShardedGraph: () -> device edge arrays
-_STEP_CACHE: dict = {}    # (cfg, mesh, axis) -> jitted per-iteration step
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,19 +61,24 @@ class ShardedGraph:
     deg_w: np.ndarray          # (ndev, v_per_dev) f32
 
 
-def shard_graph(graph: Graph, ndev: int) -> ShardedGraph:
+def shard_graph(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
     """Range-partition vertices and edges into per-device shards.
 
     Pure layout: contiguous blocks of ceil(V/ndev) vertex ids per device,
     every edge stored with its source's owner (the CSR order inside a
     shard is preserved, so on 1 device the shard IS the graph's edge list
     and the sharded scatter-add is bit-identical to the unsharded one).
+    ``pad`` buckets the per-device edge width (power-of-two-ish) so a
+    session rebinding a slightly grown graph keeps the compile shape.
     """
+    from .graph import shape_bucket
     v_per_dev = -(-graph.num_vertices // ndev)
     v_pad = v_per_dev * ndev
     owner = graph.src // v_per_dev
     counts = np.bincount(owner, minlength=ndev)
     e_shard = int(counts.max()) if counts.size else 1
+    if pad:
+        e_shard = shape_bucket(e_shard, floor=128)
     src_l = np.zeros((ndev, e_shard), np.int32)
     dst = np.zeros((ndev, e_shard), np.int32)
     w = np.zeros((ndev, e_shard), np.float32)
@@ -97,10 +100,10 @@ def shard_graph(graph: Graph, ndev: int) -> ShardedGraph:
                         weight=w, deg_w=deg.reshape(ndev, v_per_dev))
 
 
-def shard_layout(graph: Graph, ndev: int) -> ShardedGraph:
-    """The cached ``ShardedGraph`` layout for a (graph, ndev) pair."""
-    return engine._graph_cached(_SHARD_CACHE, graph, (ndev,),
-                                lambda: shard_graph(graph, ndev))
+def shard_layout(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
+    """The cached ``ShardedGraph`` layout for a (graph, ndev, pad) tuple."""
+    return engine._graph_cached(_SHARD_CACHE, graph, (ndev, pad),
+                                lambda: shard_graph(graph, ndev, pad=pad))
 
 
 def device_upload(sg: ShardedGraph, field: str) -> jax.Array:
@@ -117,10 +120,11 @@ def device_upload(sg: ShardedGraph, field: str) -> jax.Array:
                                 lambda: jnp.asarray(getattr(sg, field)))
 
 
-def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig) -> dict:
+def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig,
+               options: Optional[engine.EngineOptions] = None) -> dict:
     """Per-iteration communication volume of the sharded engine.
 
-    The label exchange (plan selected by ``cfg.label_exchange``, see
+    The label exchange (plan selected by ``options.label_exchange``, see
     ``repro.core.comm``) plus the psum'd (k,) aggregators (M(l), load
     delta, score/migration scalars) -- the quantities Figure 5 scales
     with workers and Figure 7 shows decaying.  ``message_bytes_per_iter``
@@ -128,14 +132,20 @@ def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig) -> dict:
     volume is measured on device (``PartitionResult.exchanged_bytes``).
     """
     from . import comm
-    name = cfg.resolved_label_exchange(sg.ndev)
-    plan = comm.make_exchange_plan(name, sg, delta_cap=cfg.delta_cap)
+    opts = options if options is not None else engine.EngineOptions()
+    name = opts.resolved_label_exchange(sg.ndev)
+    # same pad flag as the runner's plan (engine._sharded_parts), so this
+    # hits the cached plan and halo's padded volume matches what the
+    # compiled all_to_all physically moves
+    pad = opts.pad == "bucket"
+    plan = comm.make_exchange_plan(name, sg, delta_cap=opts.delta_cap,
+                                   pad=pad)
     wire = plan.wire_bytes_per_iter()
     stats = {
         "label_exchange": name,
         "message_bytes_per_iter": None if wire is None else int(wire),
         "allgather_bytes_per_iter": int(comm.make_exchange_plan(
-            "allgather", sg).wire_bytes_per_iter()),
+            "allgather", sg, pad=pad).wire_bytes_per_iter()),
         "aggregator_bytes_per_iter": int(3 * cfg.k * 4 * sg.ndev),
         "edge_shard_sizes": [int((sg.weight[p] > 0).sum())
                              for p in range(sg.ndev)],
@@ -151,63 +161,51 @@ def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig) -> dict:
 
 
 def make_sharded_step(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
-                      axis: str = "data"):
+                      axis: str = "data",
+                      options: Optional[engine.EngineOptions] = None):
     """One LPA iteration as a single jitted ``shard_map`` dispatch.
 
     ``step(state) -> state`` over the engine's ``SpinnerState`` (padded
     labels).  This is the engine's sharded step_fn without the surrounding
     ``while_loop`` -- the building block of ``run_sharded_hostloop``.
-    Cached per (graph, cfg, mesh, axis) like the engine's runners, so the
-    hostloop driver's repeat calls pay dispatch, not retrace/recompile.
+    The compiled program is cached globally like the engine's runners, so
+    the hostloop driver's repeat calls pay dispatch, not retrace/recompile.
     """
     # Forced onto the all-gather oracle plan: it carries no loop state
     # (delta's label mirror would have to round-trip between dispatches),
     # so each dispatch is self-contained -- and every plan walks the same
     # trajectory anyway, so parity with engine="sharded" is unaffected.
-    cfg = dataclasses.replace(cfg, label_exchange="allgather")
+    opts = options if options is not None else engine.EngineOptions()
+    opts = dataclasses.replace(opts, label_exchange="allgather")
+    _, _, prog, args = engine._sharded_parts(graph, cfg, opts, mesh, axis,
+                                             single_step=True)
 
-    def build():
-        _, plan, step_fn, args, arg_specs, n_score = engine._sharded_parts(
-            graph, cfg, mesh, axis)
-        spec = engine.state_partition_spec(axis)
+    def run_step(state: engine.SpinnerState) -> engine.SpinnerState:
+        return prog.run(state, *args)
 
-        def step_local(state, deg_l, *rest):
-            blocks = tuple(r[0] for r in rest)
-            aux = plan.init_aux(state.labels, axis, *blocks[n_score:])
-            new_state, _ = step_fn(state, aux, deg_l[0], blocks[:n_score],
-                                   blocks[n_score:])
-            return new_state
-
-        step = jax.jit(shard_map(
-            step_local, mesh=mesh, in_specs=(spec,) + arg_specs,
-            out_specs=spec, check_rep=False))
-
-        def run_step(state: engine.SpinnerState) -> engine.SpinnerState:
-            return step(state, *args)
-
-        return run_step
-
-    return engine._graph_cached(
-        _STEP_CACHE, graph, (engine._cache_cfg(cfg), mesh, axis), build)
+    run_step.program = prog
+    return run_step
 
 
 def run_sharded_hostloop(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
                          axis: str = "data",
-                         init: Optional[np.ndarray] = None
+                         init: Optional[np.ndarray] = None,
+                         options: Optional[engine.EngineOptions] = None
                          ) -> engine.SpinnerState:
     """Drive the sharded step from the host, one dispatch per iteration.
 
     The pre-PR-2 driving mode, preserved as the dispatch-overhead baseline:
     identical math and identical on-device ``_halting_update`` as
     ``partition(engine="sharded")`` (so labels and iteration counts match
-    bit for bit), but the loop pays a host sync on ``state.halted`` every
-    iteration instead of running as one fused ``while_loop``.
+    bit for bit -- both run the same shape-bucketed padded layout), but
+    the loop pays a host sync on ``state.halted`` every iteration instead
+    of running as one fused ``while_loop``.
     """
-    from .spinner import prepare_init
+    from .spinner import prepare_init, resolve_options
+    cfg, opts = resolve_options(cfg, options)
     labels, loads, key = prepare_init(graph, cfg, init)
-    ndev = mesh.shape[axis]
-    v_pad = -(-graph.num_vertices // ndev) * ndev
-    step = make_sharded_step(graph, cfg, mesh, axis)
+    v_pad = engine.sharded_v_pad(graph, opts, mesh, axis)
+    step = make_sharded_step(graph, cfg, mesh, axis, opts)
     state = engine.init_state(engine.pad_labels(labels, v_pad), loads, key)
     for _ in range(cfg.max_iters):
         state = step(state)
@@ -219,6 +217,7 @@ def run_sharded_hostloop(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
 def partition_distributed(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
                           axis: str = "data",
                           init: Optional[np.ndarray] = None,
+                          options: Optional[engine.EngineOptions] = None,
                           ) -> Tuple[np.ndarray, dict]:
     """Run sharded Spinner to the halting criterion; returns (labels, stats).
 
@@ -228,11 +227,13 @@ def partition_distributed(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
     ``engine._halting_update`` with every other engine.  Stats carry the
     per-iteration communication volume (see ``comm_stats``).
     """
-    from .spinner import partition
+    from .spinner import partition, resolve_options
+    cfg, opts = resolve_options(cfg, options)
     res = partition(graph, cfg, init=init, record_history=False,
-                    engine="sharded", mesh=mesh, axis=axis)
-    sg = shard_layout(graph, mesh.shape[axis])
-    stats = dict(comm_stats(sg, cfg), iterations=res.iterations,
+                    engine="sharded", mesh=mesh, axis=axis, options=opts)
+    padded, _ = engine.padded_view(graph, opts)
+    sg = shard_layout(padded, mesh.shape[axis], pad=opts.pad == "bucket")
+    stats = dict(comm_stats(sg, cfg, opts), iterations=res.iterations,
                  halted=res.halted,
                  exchanged_bytes=res.exchanged_bytes)
     return res.labels, stats

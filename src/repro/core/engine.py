@@ -1,84 +1,85 @@
-"""Device-resident Spinner LPA engine (state / step / runner layering).
+"""Device-resident Spinner LPA engine (program / bind / runner layering).
 
 The legacy driver in ``spinner.py`` round-trips to the host every iteration
 (``float(score_g)`` sync, host PRNG splitting, per-iteration numpy history),
 so on small graphs wall-clock is dominated by dispatch latency rather than
-the ComputeScores kernel.  This module keeps the whole run on device:
+the ComputeScores kernel.  This module keeps the whole run on device, and --
+since PR 4 -- separates WHAT is compiled from WHICH graph it runs on:
 
   * ``SpinnerState`` -- a pure functional pytree carrying everything one LPA
     iteration reads or writes: labels, loads, the PRNG key, the Eq. 9
     halting aggregates (best_score / stall), iteration counter, and the
     migration statistics of the last step.
-  * ``make_iteration`` -- the two-phase ComputeScores / ComputeMigrations
-    math (Eqs. 8, 11, 12) as a pure function, shared verbatim with the
-    legacy host loop so the two engines are bit-compatible oracles of each
-    other.  The Eq. 8 numerator is delegated to a pluggable score backend
-    (``repro.kernels.ops.get_score_backend``): the XLA scatter-add path and
-    the Pallas ``spinner_scores_tiled`` kernel are interchangeable and
-    selected once at trace time.
-  * ``make_step_fn`` -- one fully-jittable state -> state transition:
-    PRNG split, iteration, and the Section 3.3 eps/halt_window stall logic
-    evaluated on device.
+  * **Programs** -- jitted executables cached GLOBALLY per static
+    configuration (``_PROGRAM_CACHE``): the paper parameters that enter
+    the trace (k, eps, halt_window, max_iters, weighting, noise
+    amplitudes), the score-backend signature, and -- for the sharded
+    runner -- the mesh, axis and exchange-plan signature.  A program
+    closes over NO graph data; every per-graph array arrives as a traced
+    argument, so two graphs with the same compile shapes share one
+    executable and a run on a new graph costs an upload, not a compile.
+  * **Binds** (``GraphBind``) -- the per-graph argument pytree: weighted
+    degrees, the Eq. 5 capacity C and the real vertex count as traced
+    scalars, the score backend's edge arrays, and (for the chunked
+    history) the raw edge list.  Padding vertices/edges introduced by the
+    shape-bucket layer (``graph.pad_graph``; see ``repro.core.session``)
+    are masked out of every migration/halting aggregate by a ``valid``
+    mask derived from the traced real-vertex count.
   * ``run_fused`` -- the entire run as a single ``jax.lax.while_loop``
-    dispatch; nothing touches the host until the final state is read back.
-  * ``run_chunked`` -- a ``jax.lax.scan`` that executes ``chunk_size``
-    iterations per dispatch and records a fixed-size on-device history
-    (score / migrations / message mass / phi / rho per iteration) for
-    callers that need per-iteration traces; the host only syncs once per
-    chunk to check the halting flag.
-  * ``run_sharded`` -- the fused loop over a DEVICE MESH: labels and every
-    other per-vertex array are sharded over the vertex axis via
-    ``shard_map``, the (k,) load / migration aggregates and the Eq. 9
-    halting scalars are ``psum``-reduced inside the step so every device
-    sees the same halting decision, and the whole run is ONE
-    ``lax.while_loop`` dispatch across all devices -- the Giraph-cluster
-    analogue of Section 4 with zero per-iteration host round-trips.  The
-    per-vertex math is ``make_vertex_update``, shared verbatim with the
-    single-device iteration, which is what makes a 1-device mesh a
-    bit-compatible oracle of ``run_fused`` (same labels, same iteration
-    counts for the same seed).  Edge layout/padding lives in
-    ``repro.core.distributed`` (``shard_graph``); the per-iteration label
-    exchange is a pluggable plan from ``repro.core.comm``
-    (``cfg.label_exchange``: the full all-gather oracle, a boundary-only
-    halo exchange, or a changed-labels-only delta exchange that
-    reproduces the Figure 7 traffic decay), with wire bytes accumulated
-    on device in ``SpinnerState.exchanged_bytes``.
+    dispatch; ``run_chunked`` -- ``chunk_size`` iterations per dispatch
+    with fixed-size on-device history; ``run_sharded`` -- the fused loop
+    over a DEVICE MESH in ONE ``shard_map(lax.while_loop)`` dispatch,
+    with (k,) aggregates psum-reduced in the step, the halting decision
+    on device, and a pluggable per-iteration label exchange
+    (``repro.core.comm``: all-gather oracle / boundary halo / Figure 7
+    delta), wire bytes accumulated in ``SpinnerState.exchanged_bytes``.
+    All runners share ``make_vertex_update`` (Eqs. 7-8, 11-12) and
+    ``_halting_update``, so for one padded layout every engine walks the
+    same trajectory bit for bit.
 
-``spinner.partition`` selects between these runners and the legacy host
-loop via its ``engine`` argument; ``incremental.adapt`` / ``resize`` ride on
-the same entry point, so incremental and elastic restarts are a single
-device call as well -- on whichever mesh the caller passes.
+``EngineOptions`` is the runtime half of the old ``SpinnerConfig``: engine
+choice, mesh/axis, score backend, exchange plan, chunking and the shape-pad
+policy.  ``repro.core.session.PartitionSession`` owns a (graph, cfg,
+options) triple and drives these programs across a stream of
+partition/adapt/resize calls; ``spinner.partition`` opens a throwaway
+session, so one-shot calls and long-lived sessions execute the exact same
+compiled programs.
 """
 from __future__ import annotations
 
 import weakref
 import dataclasses
-from typing import Callable, List, NamedTuple, Optional, Tuple
+from typing import Callable, List, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec
 
-from .graph import Graph
+from .graph import Graph, pad_graph, shape_bucket
 
 DEFAULT_CHUNK = 32
 
-# Per-Graph memoization.  partition()/adapt()/resize() are typically called
-# many times against the same Graph (benchmark sweeps, incremental
-# restarts); rebuilding closures per call would re-upload edge arrays and
-# re-trace/re-compile the jitted step or whole while_loop/scan each time,
-# wiping out the dispatch win.  Every cache below is keyed on id(graph) + a
-# per-use suffix, with a weakref guard so entries die with their graph and
-# a recycled id() can never alias.
-_RUNNER_CACHE: dict = {}      # (kind, cfg, chunk_size, record) -> runner
-                              # sharded kind keys on (cfg, mesh, axis)
-_STEP_CACHE: dict = {}        # (cfg,) -> jitted iterate (host loop's step)
-_SCORE_FN_CACHE: dict = {}    # (backend, k) -> score closure
-_EDGE_UPLOAD_CACHE: dict = {} # () -> (src, dst, weight, deg_w) on device
+# Shape-bucket floors: graphs below these sizes all share one bucket.
+V_FLOOR = 64
+E_FLOOR = 128
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+# Programs are cached globally by STATIC configuration -- they hold no graph
+# data, so entries are small (a jitted callable) and survive their graphs.
+# Everything graph-shaped lives in weakref-guarded per-graph caches keyed on
+# id(graph) + a suffix, evicted when the graph dies so a recycled id() can
+# never alias.
+
+_PROGRAM_CACHE: dict = {}     # static key -> Program
+_SCORE_ARG_CACHE: dict = {}   # per graph/layout: backend edge-array uploads
+_EDGE_UPLOAD_CACHE: dict = {} # per graph: (src, dst, weight, deg_w) on device
+_PAD_CACHE: dict = {}         # per graph: (v_bucket, e_bucket) -> padded view
 
 
-def _graph_cached(cache: dict, graph: Graph, suffix: tuple,
+def _graph_cached(cache: dict, graph, suffix: tuple,
                   build: Callable[[], object]):
     """Memoize ``build()`` per (graph, suffix); evicted when graph dies."""
     key = (id(graph),) + suffix
@@ -90,39 +91,116 @@ def _graph_cached(cache: dict, graph: Graph, suffix: tuple,
     return value
 
 
-def _cache_cfg(cfg):
-    """Cache-key view of the config: the seed never enters the traced
-    computation (it only feeds host-side PRNGKey creation in
-    ``prepare_init``), so seed sweeps must share one compiled runner."""
-    return dataclasses.replace(cfg, seed=0)
+@dataclasses.dataclass
+class Program:
+    """A compiled (shape-polymorphic) runner plus its cache identity."""
+
+    run: Callable
+    key: Optional[tuple] = None
+
+    def compiles(self) -> int:
+        """Number of traced/compiled entries behind this program."""
+        size = getattr(self.run, "_cache_size", None)
+        return int(size()) if size is not None else 0
 
 
-def _get_runner(kind: str, graph: Graph, cfg, chunk_size: Optional[int],
-                score_fn: Optional[Callable], record: bool = True) -> Callable:
-    if score_fn is not None:
-        # custom backend closure: not keyable, build fresh
-        if kind == "fused":
-            return make_fused_runner(graph, cfg, score_fn)
-        return make_chunked_runner(graph, cfg, chunk_size, score_fn,
-                                   record=record)
-    if kind == "fused":
-        build = lambda: make_fused_runner(graph, cfg)
-    else:
-        build = lambda: make_chunked_runner(graph, cfg, chunk_size,
-                                            record=record)
-    return _graph_cached(_RUNNER_CACHE, graph,
-                         (kind, _cache_cfg(cfg), chunk_size, record), build)
+# Each cached program retains its jit-compiled executables, so a config
+# sweep must not grow the cache forever: FIFO-evict past the cap (live
+# runners/sessions keep their own references; a re-request just
+# rebuilds and recompiles).
+_PROGRAM_CACHE_MAX = 128
 
 
-def cached_jit_step(graph: Graph, cfg) -> Callable:
-    """Jitted ``iterate(labels, loads, key)``, cached per (graph, cfg).
+def _program(key: tuple, build: Callable[[], Callable]) -> Program:
+    prog = _PROGRAM_CACHE.get(key)
+    if prog is None:
+        while len(_PROGRAM_CACHE) >= _PROGRAM_CACHE_MAX:
+            _PROGRAM_CACHE.pop(next(iter(_PROGRAM_CACHE)))
+        prog = _PROGRAM_CACHE[key] = Program(run=build(), key=key)
+    return prog
 
-    This is the host loop's step; caching it keeps ``engine="host"`` from
-    re-tracing on every partition() call, same as the fused runners.
+
+def _static_cfg(cfg) -> tuple:
+    """The paper parameters that enter a program's trace.
+
+    ``seed`` feeds host-side PRNGKey creation only and ``c`` only enters
+    via the traced capacity scalar, so seed/slack sweeps share programs.
     """
-    return _graph_cached(_STEP_CACHE, graph, (_cache_cfg(cfg),),
-                         lambda: jax.jit(make_iteration(graph, cfg)))
+    return (cfg.k, float(cfg.eps), cfg.halt_window, cfg.max_iters,
+            cfg.migration_weighting, float(cfg.tie_noise),
+            float(cfg.current_bonus))
 
+
+# ---------------------------------------------------------------------------
+# Engine options (the runtime half of the old SpinnerConfig)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EngineOptions:
+    """How a Spinner run executes -- everything that is NOT a paper
+    parameter: runner choice, device layout, score backend, exchange
+    plan, chunking and the compile-shape policy.  ``SpinnerConfig`` keeps
+    only the algorithm (Sections 3.1-3.5); the old config fields for
+    these knobs survive as a deprecation shim (see ``repro.core.spinner``).
+
+    ``pad="bucket"`` (default) runs every engine on a power-of-two-ish
+    padded (V, E) layout (``graph.shape_bucket``), which is what lets a
+    ``PartitionSession`` -- and the one-shot wrappers, which open
+    throwaway sessions -- reuse one compiled program across all graphs
+    in a bucket.  ``pad="none"`` keeps exact shapes (one compile per
+    graph size, marginally less memory/compute per step).
+    """
+
+    engine: str = "auto"             # auto | fused | chunked | sharded | host
+    chunk_size: Optional[int] = None
+    mesh: Optional[Mesh] = None
+    axis: str = "data"
+    # ComputeScores backend: "xla" | "pallas" or a ScoreBackend instance.
+    score_backend: Union[str, object] = "xla"
+    # Sharded label exchange (repro.core.comm): "allgather" ships the full
+    # label vector per iteration (the bit-compatible oracle), "halo" only
+    # boundary labels, "delta" only changed labels (the Figure 7 decay).
+    # All walk identical trajectories; "auto" picks allgather on 1 device
+    # and delta on a real mesh.
+    label_exchange: str = "auto"
+    # Per-device compact-buffer capacity of the delta exchange (entries);
+    # None = v_per_dev // 4.
+    delta_cap: Optional[int] = None
+    # "replicated" draws tie-break noise over the full padded vertex set
+    # (bit parity with the single-device engines); "folded" draws only
+    # the local shard from a device-folded key (O(V/ndev) memory).
+    sharded_noise: str = "replicated"
+    pad: str = "bucket"              # bucket | none
+
+    def resolved_label_exchange(self, ndev: int) -> str:
+        from .comm import EXCHANGE_PLANS     # the one plan registry
+        if self.label_exchange == "auto":
+            return "allgather" if ndev == 1 else "delta"
+        if self.label_exchange not in EXCHANGE_PLANS:
+            raise ValueError(
+                f"unknown label_exchange {self.label_exchange!r}; "
+                f"available: auto, {', '.join(sorted(EXCHANGE_PLANS))}")
+        return self.label_exchange
+
+    def resolved_sharded_noise(self) -> str:
+        if self.sharded_noise not in ("replicated", "folded"):
+            raise ValueError(
+                f"unknown sharded_noise {self.sharded_noise!r}; "
+                "available: replicated, folded")
+        return self.sharded_noise
+
+    def backend(self):
+        from repro.kernels import ops as kernel_ops   # lazy: no import cycle
+        return kernel_ops.get_score_backend(self.score_backend)
+
+
+_DEFAULT_OPTS = EngineOptions()
+_UNPADDED_OPTS = EngineOptions(pad="none")
+
+
+# ---------------------------------------------------------------------------
+# State
+# ---------------------------------------------------------------------------
 
 class SpinnerState(NamedTuple):
     """Carry of the fused LPA loop -- one pytree, fully device-resident."""
@@ -160,6 +238,48 @@ def init_state(labels: jax.Array, loads: jax.Array,
     )
 
 
+class GraphBind(NamedTuple):
+    """Per-graph traced arguments of the single-device programs.
+
+    Uploaded/derived once per (graph, backend, pad policy) and passed to
+    the program on every call -- the program itself never closes over
+    them, which is what makes compile reuse across graphs possible.
+    """
+
+    deg_w: jax.Array           # (V_pad,) f32 weighted degrees (0 on pads)
+    capacity: jax.Array        # f32 scalar C (Eq. 5) of the REAL graph
+    num_real: jax.Array        # int32 scalar: vertices < num_real are real
+    score: tuple               # score backend's edge arrays
+    hist: tuple = ()           # (src, dst, w, ideal, real_e) for history
+
+
+# ---------------------------------------------------------------------------
+# Shape-bucketed padded views
+# ---------------------------------------------------------------------------
+
+def graph_buckets(graph: Graph) -> Tuple[int, int]:
+    """(vertex bucket, edge bucket) the graph's compile shapes land in."""
+    return (shape_bucket(graph.num_vertices, V_FLOOR),
+            shape_bucket(graph.num_directed_entries, E_FLOOR))
+
+
+def padded_view(graph: Graph, opts: EngineOptions) -> Tuple[Graph, int]:
+    """(padded graph, real vertex count) under the options' pad policy.
+
+    The padded view is cached per (graph, buckets) and dies with the
+    graph; with ``pad="none"`` the graph itself is returned.
+    """
+    if opts.pad == "none":
+        return graph, graph.num_vertices
+    if opts.pad != "bucket":
+        raise ValueError(f"unknown pad policy {opts.pad!r}; "
+                         "available: bucket, none")
+    vb, eb = graph_buckets(graph)
+    padded = _graph_cached(_PAD_CACHE, graph, (vb, eb),
+                           lambda: pad_graph(graph, vb, eb))
+    return padded, graph.num_vertices
+
+
 def device_edges(graph: Graph):
     """(src, dst, weight, deg_w) as device arrays, uploaded once per Graph.
 
@@ -173,44 +293,71 @@ def device_edges(graph: Graph):
                  jnp.asarray(graph.weight), jnp.asarray(graph.deg_w)))
 
 
-def make_score_fn(graph: Graph, cfg) -> Callable[[jax.Array], jax.Array]:
-    """Build (or fetch cached) the Eq. 8 numerator fn for the backend.
-
-    Cached per (graph, backend, k): the backend build uploads the O(E)
-    edge arrays (and, for pallas, retiles the CSR on the host), none of
-    which depends on the rest of the config -- so runner variants
-    (different eps/seed/max_iters sweeping the same graph) share one
-    built backend.
-    """
-    from repro.kernels import ops as kernel_ops   # lazy: no import cycle
-    name = cfg.resolved_score_backend()
-
-    def build():
-        return kernel_ops.get_score_backend(name).build(graph, cfg.k)
-
-    return _graph_cached(_SCORE_FN_CACHE, graph, (name, cfg.k), build)
+def pad_labels(labels: jax.Array, v_pad: int) -> jax.Array:
+    """Extend labels to a padded vertex count (pads land on partition 0;
+    they are masked out of every aggregate and never migrate)."""
+    labels = jnp.asarray(labels, jnp.int32)
+    pad = v_pad - labels.shape[0]
+    if pad:
+        labels = jnp.concatenate([labels, jnp.zeros((pad,), jnp.int32)])
+    return labels
 
 
-def make_vertex_update(cfg, C: jnp.float32) -> Callable:
+def _single_bind(graph: Graph, cfg, opts: EngineOptions,
+                 hist: bool = False,
+                 score_fn: Optional[Callable] = None
+                 ) -> Tuple[GraphBind, Graph]:
+    """Build (or fetch cached pieces of) the bind for a one-device run."""
+    padded, num_real = padded_view(graph, opts)
+    deg_w = device_edges(padded)[3]
+    if score_fn is not None:
+        score_args = ()
+    else:
+        backend = opts.backend()
+        pad = opts.pad == "bucket"
+        score_args = _graph_cached(
+            _SCORE_ARG_CACHE, padded, ("single", backend.signature(), pad),
+            lambda: tuple(backend.graph_args(padded, cfg.k, pad=pad)))
+    if hist and graph.src.size:
+        src, dst, w, _ = device_edges(padded)
+        hist_args = (src, dst, w,
+                     jnp.float32(graph.total_weight / cfg.k),
+                     jnp.float32(graph.num_directed_entries))
+    else:
+        hist_args = ()
+    return GraphBind(deg_w=deg_w,
+                     capacity=jnp.float32(cfg.capacity(graph)),
+                     num_real=jnp.int32(num_real),
+                     score=score_args, hist=hist_args), padded
+
+
+# ---------------------------------------------------------------------------
+# The iteration math (shared verbatim by every engine)
+# ---------------------------------------------------------------------------
+
+def make_vertex_update(cfg) -> Callable:
     """The per-vertex two-phase update (Eqs. 7-8, 11-12) as a pure function.
 
-    Shared verbatim by the single-device iteration (``make_iteration``) and
-    the per-shard sharded iteration (``make_sharded_step_fn``), which is
-    what makes every engine an oracle of the others.  The caller supplies
-    whatever slice of the vertex set it owns plus the matching noise/u
-    draws; every (k,) or scalar aggregate (M(l), the load delta, score(G),
-    migration counts) goes through ``reduce_`` -- identity on a single
-    device, ``lax.psum`` over the vertex axis under ``shard_map``, i.e. the
+    Shared verbatim by the single-device iteration and the per-shard
+    sharded iteration, which is what makes every engine an oracle of the
+    others.  The caller supplies whatever slice of the vertex set it owns
+    plus the matching noise/u draws and the Eq. 5 capacity ``C`` (a
+    traced scalar, so graph growth never forces a recompile); every (k,)
+    or scalar aggregate (M(l), the load delta, score(G), migration
+    counts) goes through ``reduce_`` -- identity on a single device,
+    ``lax.psum`` over the vertex axis under ``shard_map``, i.e. the
     Giraph sharded aggregators as one collective each.
 
-    ``valid`` masks padding vertices introduced by the sharded layout
-    (``None`` statically skips the masking ops so the unpadded path is
-    bit-identical to the pre-sharding engine).
+    ``valid`` masks padding vertices introduced by the shape-bucket /
+    sharded layouts; pads never migrate and contribute nothing to any
+    aggregate.  (``None`` statically skips the masking ops.  Tie-break
+    noise is drawn over the padded set, so trajectories are
+    deterministic PER padded layout -- see ``graph.pad_graph``.)
     """
     k = cfg.k
     degree_weighted = cfg.migration_weighting == "edges"
 
-    def update(scores, labels, deg_w, loads, noise, u, valid, reduce_):
+    def update(scores, labels, deg_w, loads, noise, u, valid, reduce_, C):
         # ---- ComputeScores (Eq. 8) -------------------------------------
         norm = scores / jnp.maximum(deg_w, 1.0)[:, None]
         penalty = loads / C                                # pi(l) (Eq. 7)
@@ -251,34 +398,6 @@ def make_vertex_update(cfg, C: jnp.float32) -> Callable:
     return update
 
 
-def make_iteration(graph: Graph, cfg,
-                   score_fn: Optional[Callable] = None) -> Callable:
-    """One LPA iteration (ComputeScores + ComputeMigrations) as a pure fn.
-
-    Returns ``iterate(labels, loads, key) -> (labels, loads, score_g,
-    n_migrations, migration_mass)``.  Both the legacy host loop and the
-    fused runners call exactly this function, which is what makes them
-    oracles of each other; the math itself lives in ``make_vertex_update``
-    and is also what the sharded engine executes per shard.
-    """
-    if score_fn is None:
-        score_fn = make_score_fn(graph, cfg)
-    deg_w = device_edges(graph)[3]
-    V, k = graph.num_vertices, cfg.k
-    update = make_vertex_update(cfg, jnp.float32(cfg.capacity(graph)))
-
-    def iterate(labels: jax.Array, loads: jax.Array, key: jax.Array):
-        scores = score_fn(labels)                          # (V, k) f32
-        k_noise, k_mig = jax.random.split(key)
-        noise = jax.random.uniform(k_noise, (V, k), jnp.float32,
-                                   0.0, cfg.tie_noise)
-        u = jax.random.uniform(k_mig, (V,), jnp.float32)
-        return update(scores, labels, deg_w, loads, noise, u,
-                      None, lambda x: x)
-
-    return iterate
-
-
 def _halting_update(best_score, stall, score_g, eps, halt_window):
     """Section 3.3 stall logic on device, mirroring the host loop exactly.
 
@@ -294,17 +413,41 @@ def _halting_update(best_score, stall, score_g, eps, halt_window):
     return new_best, new_stall, new_stall >= halt_window
 
 
-def make_step_fn(graph: Graph, cfg,
-                 score_fn: Optional[Callable] = None) -> Callable:
-    """Jittable ``SpinnerState -> SpinnerState`` transition."""
-    iterate = make_iteration(graph, cfg, score_fn)
+def _bind_iterate(cfg, scores_fn: Callable) -> Callable:
+    """One LPA iteration in bind-argument form (graph data as arguments).
+
+    ``iterate(labels, loads, key, bind) -> (labels, loads, score_g,
+    n_migrations, migration_mass)``.  Noise/u are drawn over the padded
+    vertex set, so for a fixed padded layout the host loop, the fused
+    runner and a 1-device sharded mesh consume identical streams.
+    """
+    k, tie = cfg.k, cfg.tie_noise
+    update = make_vertex_update(cfg)
+
+    def iterate(labels, loads, key, bind: GraphBind):
+        scores = scores_fn(labels, *bind.score)            # (V_pad, k) f32
+        v_pad = labels.shape[0]
+        k_noise, k_mig = jax.random.split(key)
+        noise = jax.random.uniform(k_noise, (v_pad, k), jnp.float32,
+                                   0.0, tie)
+        u = jax.random.uniform(k_mig, (v_pad,), jnp.float32)
+        valid = jnp.arange(v_pad, dtype=jnp.int32) < bind.num_real
+        return update(scores, labels, bind.deg_w, loads, noise, u, valid,
+                      lambda x: x, bind.capacity)
+
+    return iterate
+
+
+def _bind_step(cfg, scores_fn: Callable) -> Callable:
+    """Jittable ``(SpinnerState, GraphBind) -> SpinnerState`` transition."""
+    iterate = _bind_iterate(cfg, scores_fn)
     eps = jnp.float32(cfg.eps)
     halt_window = cfg.halt_window
 
-    def step_fn(state: SpinnerState) -> SpinnerState:
+    def step_fn(state: SpinnerState, bind: GraphBind) -> SpinnerState:
         key, k_it = jax.random.split(state.key)
         labels, loads, score_g, n_mig, mig_mass = iterate(
-            state.labels, state.loads, k_it)
+            state.labels, state.loads, k_it, bind)
         best, stall, halted = _halting_update(
             state.best_score, state.stall, score_g, eps, halt_window)
         return SpinnerState(
@@ -318,46 +461,227 @@ def make_step_fn(graph: Graph, cfg,
     return step_fn
 
 
+def _scores_for(cfg, opts: EngineOptions,
+                score_fn: Optional[Callable]) -> Tuple[Callable, tuple]:
+    """(traced scores closure, static signature) for single-device runs."""
+    if score_fn is not None:
+        return (lambda labels, *unused: score_fn(labels)), ("custom",)
+    backend = opts.backend()
+    return backend.make_scores(cfg.k), backend.signature()
+
+
 # ---------------------------------------------------------------------------
-# Fused runner: the whole run is one lax.while_loop dispatch
+# Single-device programs
 # ---------------------------------------------------------------------------
 
-def make_fused_runner(graph: Graph, cfg,
-                      score_fn: Optional[Callable] = None) -> Callable:
-    """Compile the full Spinner run into a single device call."""
-    step_fn = make_step_fn(graph, cfg, score_fn)
+def _iterate_program(cfg, opts, score_fn=None) -> Program:
+    """``run(labels, loads, key, bind)`` -- the host loop's jitted step."""
+    scores_fn, sig = _scores_for(cfg, opts, score_fn)
+
+    def build():
+        return jax.jit(_bind_iterate(cfg, scores_fn))
+
+    if score_fn is not None:
+        return Program(run=build())
+    return _program(("iterate", _static_cfg(cfg), sig), build)
+
+
+def _state_step_program(cfg, opts, score_fn=None) -> Program:
+    """``run(state, bind)`` -- one state transition (make_step_fn)."""
+    scores_fn, sig = _scores_for(cfg, opts, score_fn)
+
+    def build():
+        return jax.jit(_bind_step(cfg, scores_fn))
+
+    if score_fn is not None:
+        return Program(run=build())
+    return _program(("state_step", _static_cfg(cfg), sig), build)
+
+
+def _fused_program(cfg, opts, score_fn=None) -> Program:
+    """``run(state, bind)`` -- the whole run as one while_loop dispatch."""
+    scores_fn, sig = _scores_for(cfg, opts, score_fn)
     max_iters = cfg.max_iters
 
-    def cond_fn(s: SpinnerState):
-        return jnp.logical_and(jnp.logical_not(s.halted),
-                               s.iteration < max_iters)
+    def build():
+        step_fn = _bind_step(cfg, scores_fn)
 
-    @jax.jit
-    def run(state: SpinnerState) -> SpinnerState:
-        return jax.lax.while_loop(cond_fn, step_fn, state)
+        def cond_fn(s: SpinnerState):
+            return jnp.logical_and(jnp.logical_not(s.halted),
+                                   s.iteration < max_iters)
 
-    return run
+        @jax.jit
+        def run(state: SpinnerState, bind: GraphBind) -> SpinnerState:
+            return jax.lax.while_loop(cond_fn, lambda s: step_fn(s, bind),
+                                      state)
+
+        return run
+
+    if score_fn is not None:
+        return Program(run=build())
+    return _program(("fused", _static_cfg(cfg), sig), build)
+
+
+def _chunked_program(cfg, opts, chunk_size: int, record: bool,
+                     has_edges: bool, score_fn=None) -> Program:
+    """``run(state, bind) -> (state, records)`` -- one guarded scan chunk."""
+    scores_fn, sig = _scores_for(cfg, opts, score_fn)
+    max_iters = cfg.max_iters
+
+    def build():
+        step_fn = _bind_step(cfg, scores_fn)
+
+        @jax.jit
+        def run(state: SpinnerState, bind: GraphBind):
+            def body(state, _):
+                active = jnp.logical_and(jnp.logical_not(state.halted),
+                                         state.iteration < max_iters)
+                new_state = jax.lax.cond(active,
+                                         lambda s: step_fn(s, bind),
+                                         lambda s: s, state)
+                if not record:
+                    return new_state, {"valid": active}
+                if has_edges:
+                    src, dst, w, ideal, real_e = bind.hist
+                    # count only real edges: pads are weight-0 self-loops
+                    local = (new_state.labels[src] == new_state.labels[dst]
+                             ) & (w > 0)
+                    phi = jnp.sum(local.astype(jnp.float32)) / real_e
+                    rho = jnp.max(new_state.loads) / ideal
+                else:
+                    # edgeless graph: mirror metrics.rho's ideal<=0
+                    # convention (rho = 1)
+                    phi = jnp.float32(1.0)
+                    rho = jnp.float32(1.0)
+                rec = {
+                    "iteration": new_state.iteration,
+                    "score": new_state.score,
+                    "migrations": new_state.migrations,
+                    "message_mass": new_state.message_mass,
+                    "phi": phi,
+                    "rho": rho,
+                    "valid": active,
+                }
+                return new_state, rec
+
+            return jax.lax.scan(body, state, None, length=chunk_size)
+
+        return run
+
+    if score_fn is not None:
+        return Program(run=build())
+    return _program(("chunked", _static_cfg(cfg), sig, chunk_size, record,
+                     has_edges), build)
+
+
+# ---------------------------------------------------------------------------
+# Single-device runners (legacy-compatible wrappers over programs)
+# ---------------------------------------------------------------------------
+
+def _pad_slice_runner(prog: Program, bind: GraphBind, padded: Graph,
+                      num_real: int) -> Callable:
+    """Wrap a (state, bind) program: pad labels in, slice real labels out."""
+    v_pad = padded.num_vertices
+
+    def runner(state: SpinnerState) -> SpinnerState:
+        state = state._replace(labels=pad_labels(state.labels, v_pad))
+        out = prog.run(state, bind)
+        return out._replace(labels=out.labels[:num_real])
+
+    runner.program = prog
+    return runner
+
+
+def make_host_step(graph: Graph, cfg, opts: EngineOptions = _UNPADDED_OPTS,
+                   score_fn: Optional[Callable] = None) -> Callable:
+    """``step(labels, loads, key)`` on the options' padded layout.
+
+    Labels are carried PADDED between calls (the session's host driver
+    slices for metrics only); ``step.v_pad`` / ``step.num_real`` describe
+    the layout and ``step.program`` exposes the compiled program.  A
+    custom ``score_fn`` closure is shaped to the real graph, so it
+    forces ``pad="none"``.
+    """
+    if score_fn is not None:
+        opts = dataclasses.replace(opts, pad="none")
+    bind, padded = _single_bind(graph, cfg, opts, score_fn=score_fn)
+    prog = _iterate_program(cfg, opts, score_fn)
+
+    def step(labels, loads, key):
+        return prog.run(labels, loads, key, bind)
+
+    step.program = prog
+    step.v_pad = padded.num_vertices
+    step.num_real = graph.num_vertices
+    return step
+
+
+def cached_jit_step(graph: Graph, cfg) -> Callable:
+    """Jitted ``iterate(labels, loads, key)`` on the graph's exact shapes.
+
+    The compiled program is shared globally per (cfg statics, backend),
+    so repeated host-engine runs -- and config sweeps -- never re-trace.
+    """
+    return make_host_step(graph, cfg, _UNPADDED_OPTS)
+
+
+def make_iteration(graph: Graph, cfg,
+                   score_fn: Optional[Callable] = None) -> Callable:
+    """One LPA iteration bound to ``graph`` (exact shapes, jitted)."""
+    return make_host_step(graph, cfg, _UNPADDED_OPTS, score_fn)
+
+
+def make_step_fn(graph: Graph, cfg,
+                 score_fn: Optional[Callable] = None) -> Callable:
+    """``SpinnerState -> SpinnerState`` bound to ``graph`` (exact shapes)."""
+    bind, _ = _single_bind(graph, cfg, _UNPADDED_OPTS, score_fn=score_fn)
+    prog = _state_step_program(cfg, _UNPADDED_OPTS, score_fn)
+
+    def step_fn(state: SpinnerState) -> SpinnerState:
+        return prog.run(state, bind)
+
+    step_fn.program = prog
+    return step_fn
+
+
+def make_fused_runner(graph: Graph, cfg,
+                      score_fn: Optional[Callable] = None,
+                      opts: EngineOptions = _DEFAULT_OPTS) -> Callable:
+    """``runner(state) -> state``: the full run as a single device call.
+
+    Accepts a state over the REAL vertex set; padding to the options'
+    shape bucket (and slicing back) happens inside, so callers never see
+    the padded layout.  A custom ``score_fn`` closure is shaped to the
+    real graph, so it forces ``pad="none"``.
+    """
+    if score_fn is not None:
+        opts = dataclasses.replace(opts, pad="none")
+    bind, padded = _single_bind(graph, cfg, opts, score_fn=score_fn)
+    prog = _fused_program(cfg, opts, score_fn)
+    return _pad_slice_runner(prog, bind, padded, graph.num_vertices)
 
 
 def run_fused(graph: Graph, cfg, labels, loads, key,
-              score_fn: Optional[Callable] = None) -> SpinnerState:
+              score_fn: Optional[Callable] = None,
+              opts: EngineOptions = _DEFAULT_OPTS,
+              on_program: Optional[Callable] = None) -> SpinnerState:
     """Run to the stable state in one ``lax.while_loop`` dispatch.
 
-    The compiled runner is cached per (graph, cfg), so repeated runs --
-    determinism checks, incremental adapt/resize restarts -- skip
-    re-tracing entirely.
+    Compiled programs are cached globally per (cfg statics, backend) and
+    reused across graphs sharing a shape bucket, so repeated runs --
+    determinism checks, incremental adapt/resize restarts, session
+    streams -- skip re-tracing entirely.
     """
-    runner = _get_runner("fused", graph, cfg, None, score_fn)
+    runner = make_fused_runner(graph, cfg, score_fn, opts)
+    if on_program is not None:
+        on_program(getattr(runner, "program", None))
     return runner(init_state(labels, loads, key))
 
 
-# ---------------------------------------------------------------------------
-# Chunked runner: chunk_size iterations per dispatch, on-device history
-# ---------------------------------------------------------------------------
-
 def make_chunked_runner(graph: Graph, cfg, chunk_size: int = DEFAULT_CHUNK,
                         score_fn: Optional[Callable] = None,
-                        record: bool = True) -> Callable:
+                        record: bool = True,
+                        opts: EngineOptions = _DEFAULT_OPTS) -> Callable:
     """Compile ``chunk_size`` iterations + history recording into one scan.
 
     Each scan step is guarded: once the halting criterion fires (or
@@ -365,42 +689,25 @@ def make_chunked_runner(graph: Graph, cfg, chunk_size: int = DEFAULT_CHUNK,
     record is marked invalid, so a trailing partial chunk costs nothing but
     pass-through work.  With ``record=False`` the per-iteration phi trace
     (an O(E) gather) is skipped and only the validity flags come back.
+    A custom ``score_fn`` closure is shaped to the real graph, so it
+    forces ``pad="none"``.
     """
-    step_fn = make_step_fn(graph, cfg, score_fn)
-    src, dst, _, _ = device_edges(graph)
+    if score_fn is not None:
+        opts = dataclasses.replace(opts, pad="none")
     has_edges = graph.src.size > 0
-    # edgeless graph: mirror metrics.rho's ideal<=0 convention (rho = 1)
-    ideal = jnp.float32(graph.total_weight / cfg.k) if has_edges else None
-    max_iters = cfg.max_iters
+    bind, padded = _single_bind(graph, cfg, opts,
+                                hist=record and has_edges,
+                                score_fn=score_fn)
+    prog = _chunked_program(cfg, opts, chunk_size, record, has_edges,
+                            score_fn)
+    v_pad, num_real = padded.num_vertices, graph.num_vertices
 
-    def body(state: SpinnerState, _):
-        active = jnp.logical_and(jnp.logical_not(state.halted),
-                                 state.iteration < max_iters)
-        new_state = jax.lax.cond(active, step_fn, lambda s: s, state)
-        if not record:
-            return new_state, {"valid": active}
-        if has_edges:
-            local = new_state.labels[src] == new_state.labels[dst]
-            phi = jnp.mean(local.astype(jnp.float32))
-            rho = jnp.max(new_state.loads) / ideal
-        else:
-            phi = jnp.float32(1.0)
-            rho = jnp.float32(1.0)
-        rec = {
-            "iteration": new_state.iteration,
-            "score": new_state.score,
-            "migrations": new_state.migrations,
-            "message_mass": new_state.message_mass,
-            "phi": phi,
-            "rho": rho,
-            "valid": active,
-        }
-        return new_state, rec
-
-    @jax.jit
     def run_chunk(state: SpinnerState):
-        return jax.lax.scan(body, state, None, length=chunk_size)
+        state = state._replace(labels=pad_labels(state.labels, v_pad))
+        out, recs = prog.run(state, bind)
+        return out._replace(labels=out.labels[:num_real]), recs
 
+    run_chunk.program = prog
     return run_chunk
 
 
@@ -409,6 +716,8 @@ def run_chunked(graph: Graph, cfg, labels, loads, key,
                 score_fn: Optional[Callable] = None,
                 callback: Optional[Callable[[int, dict], None]] = None,
                 record: bool = True,
+                opts: EngineOptions = _DEFAULT_OPTS,
+                on_program: Optional[Callable] = None,
                 ) -> Tuple[SpinnerState, List[dict]]:
     """Run with at most ``ceil(max_iters / chunk_size)`` device dispatches.
 
@@ -419,8 +728,10 @@ def run_chunked(graph: Graph, cfg, labels, loads, key,
     returned list is empty); a ``callback`` forces recording on.
     """
     record = record or callback is not None
-    run_chunk = _get_runner("chunked", graph, cfg, chunk_size, score_fn,
-                            record=record)
+    run_chunk = make_chunked_runner(graph, cfg, chunk_size, score_fn,
+                                    record=record, opts=opts)
+    if on_program is not None:
+        on_program(getattr(run_chunk, "program", None))
     state = init_state(labels, loads, key)
     history: List[dict] = []
     num_chunks = -(-cfg.max_iters // chunk_size)
@@ -477,12 +788,12 @@ def _default_partition_mesh() -> Mesh:
 _DEFAULT_MESH: Optional[Mesh] = None
 
 
-def make_sharded_step_fn(graph: Graph, sg, cfg, axis: str, plan,
-                         scores: Callable) -> Callable:
+def make_sharded_step_fn(cfg, axis: str, ndev: int, v_local: int, plan,
+                         scores: Callable, noise_mode: str) -> Callable:
     """Per-device jittable sharded transition, parameterized by the plan.
 
     Runs INSIDE ``shard_map`` over ``axis``: ``state.labels`` arrives as
-    this device's ``(v_per_dev,)`` shard, the edge blocks as this device's
+    this device's ``(v_local,)`` shard, the edge blocks as this device's
     rows of the score backend's layout, scalars replicated.  The label
     exchange is delegated to ``plan`` (``repro.core.comm.ExchangePlan``):
     the all-gather oracle, the boundary-only halo exchange, or the
@@ -493,57 +804,58 @@ def make_sharded_step_fn(graph: Graph, sg, cfg, axis: str, plan,
     same ``_halting_update`` decision and a surrounding ``while_loop``
     stays in lockstep with no host involvement.
 
-    Returns ``step(state, aux, deg_l, score_blocks, plan_blocks) ->
-    (state, aux)`` where ``aux`` is the plan's loop-carried state (e.g.
-    delta's replicated label mirror; ``()`` for stateless plans).
+    Closes over static shape ints only (``ndev``, ``v_local``, the plan's
+    signature) -- capacity, the real vertex count and every edge array
+    are traced arguments, so one compiled program serves every graph in a
+    shape bucket.  Returns ``step(state, aux, capacity, num_real, deg_l,
+    score_blocks, plan_blocks) -> (state, aux)`` where ``aux`` is the
+    plan's loop-carried state (e.g. delta's replicated label mirror;
+    ``()`` for stateless plans).
 
-    PRNG (``cfg.sharded_noise``): with ``"replicated"`` (default) noise/u
-    are drawn over the full padded vertex set from the replicated key and
-    sliced to the local shard -- on a 1-device mesh the padded set IS the
-    vertex set, so draws (and therefore labels and iteration counts) are
-    bit-identical to the single-device engine.  With ``"folded"`` each
-    device folds its axis index into the key and draws only its local
-    (v_per_dev, k) block -- O(V/ndev) instead of O(V) noise memory for
-    very large V, at the cost of a different (still deterministic) stream.
+    PRNG (``EngineOptions.sharded_noise``): with ``"replicated"``
+    (default) noise/u are drawn over the full padded vertex set from the
+    replicated key and sliced to the local shard -- on a 1-device mesh
+    the padded set IS the engine's padded vertex set, so draws (and
+    therefore labels and iteration counts) are bit-identical to the
+    single-device engines.  With ``"folded"`` each device folds its axis
+    index into the key and draws only its local (v_local, k) block --
+    O(V/ndev) instead of O(V) noise memory for very large V, at the cost
+    of a different (still deterministic) stream.
     """
     k = cfg.k
-    v_pad, vl = sg.num_vertices, sg.v_per_dev
-    num_real = sg.num_real_vertices
-    update = make_vertex_update(cfg, jnp.float32(cfg.capacity(graph)))
+    v_pad = ndev * v_local
+    update = make_vertex_update(cfg)
     eps = jnp.float32(cfg.eps)
     halt_window = cfg.halt_window
-    noise_mode = cfg.resolved_sharded_noise()
 
     def psum(x):
         return jax.lax.psum(x, axis)
 
-    def step_fn(state: SpinnerState, aux, deg_l, score_blocks, plan_blocks):
+    def step_fn(state: SpinnerState, aux, capacity, num_real, deg_l,
+                score_blocks, plan_blocks):
         key, k_it = jax.random.split(state.key)
         # Pregel messages: one plan-defined label exchange.
         lookup, aux, xbytes = plan.exchange(state.labels, aux, axis,
                                             *plan_blocks)
-        scores_v = scores(lookup, *score_blocks)           # (vl, k) local
-        off = jax.lax.axis_index(axis) * vl
+        scores_v = scores(lookup, *score_blocks)           # (v_local, k)
+        off = jax.lax.axis_index(axis) * v_local
         if noise_mode == "folded":
             k_dev = jax.random.fold_in(k_it, jax.lax.axis_index(axis))
             k_noise, k_mig = jax.random.split(k_dev)
-            noise = jax.random.uniform(k_noise, (vl, k), jnp.float32,
+            noise = jax.random.uniform(k_noise, (v_local, k), jnp.float32,
                                        0.0, cfg.tie_noise)
-            u = jax.random.uniform(k_mig, (vl,), jnp.float32)
+            u = jax.random.uniform(k_mig, (v_local,), jnp.float32)
         else:
             k_noise, k_mig = jax.random.split(k_it)
             noise_full = jax.random.uniform(k_noise, (v_pad, k), jnp.float32,
                                             0.0, cfg.tie_noise)
             u_full = jax.random.uniform(k_mig, (v_pad,), jnp.float32)
-            noise = jax.lax.dynamic_slice_in_dim(noise_full, off, vl, 0)
-            u = jax.lax.dynamic_slice_in_dim(u_full, off, vl, 0)
-        if num_real == v_pad:
-            valid = None         # no padding: bit-identical unpadded math
-        else:
-            valid = off + jnp.arange(vl, dtype=jnp.int32) < num_real
+            noise = jax.lax.dynamic_slice_in_dim(noise_full, off, v_local, 0)
+            u = jax.lax.dynamic_slice_in_dim(u_full, off, v_local, 0)
+        valid = off + jnp.arange(v_local, dtype=jnp.int32) < num_real
         labels, loads, score_g, n_mig, mig_mass = update(
             scores_v, state.labels, deg_l, state.loads, noise, u, valid,
-            psum)
+            psum, capacity)
         best, stall, halted = _halting_update(
             state.best_score, state.stall, score_g, eps, halt_window)
         return SpinnerState(
@@ -557,136 +869,189 @@ def make_sharded_step_fn(graph: Graph, sg, cfg, axis: str, plan,
     return step_fn
 
 
-def _sharded_parts(graph: Graph, cfg, mesh: Mesh, axis: str,
-                   score_fn: Optional[Callable] = None):
+def _sharded_program(cfg, opts: EngineOptions, mesh: Mesh, axis: str,
+                     plan_sig: tuple, n_score: int,
+                     score_fn: Optional[Callable] = None,
+                     single_step: bool = False) -> Program:
+    """The compiled sharded runner (or one-iteration step) for a static
+    (cfg, backend, mesh, axis, plan signature, noise mode) tuple.
+
+    Traces against an array-free ``plan_from_signature`` view, so the
+    program closes over shape ints only and is shared by every graph
+    whose sharded layout lands in the same bucket.
+    """
+    from . import comm                                    # sibling, no cycle
+    noise_mode = opts.resolved_sharded_noise()
+    ndev = mesh.shape[axis]
+    if score_fn is not None:
+        scores_sig = ("custom",)
+    else:
+        backend = opts.backend()
+        scores_sig = backend.signature()
+    kind = "sharded_step" if single_step else "sharded"
+    key = (kind, _static_cfg(cfg), scores_sig, mesh, axis, plan_sig,
+           noise_mode)
+    max_iters = cfg.max_iters
+
+    def build():
+        plan = comm.plan_from_signature(plan_sig)
+        v_local = plan_sig[2] if plan_sig[0] != "allgather" \
+            else plan_sig[2] // ndev
+        if score_fn is not None:
+            scores = lambda lookup, *blocks: score_fn(lookup, *blocks)
+        else:
+            scores = opts.backend().make_sharded_scores(cfg.k, v_local)
+        step_fn = make_sharded_step_fn(cfg, axis, ndev, v_local, plan,
+                                       scores, noise_mode)
+
+        def cond_fn(carry):
+            s = carry[0]
+            return jnp.logical_and(jnp.logical_not(s.halted),
+                                   s.iteration < max_iters)
+
+        plan_specs = tuple(plan.arg_specs(axis))
+        # sharded args arrive with a leading length-1 shard dim to strip;
+        # replicated plan args (e.g. halo's wire-bytes scalar) do not
+        strip = (True,) * n_score + tuple(s == PartitionSpec(axis)
+                                          for s in plan_specs)
+
+        def run_local(state, capacity, num_real, deg_l, *rest):
+            blocks = tuple(r[0] if s else r for r, s in zip(rest, strip))
+            score_blocks, plan_blocks = blocks[:n_score], blocks[n_score:]
+            dl = deg_l[0]
+            aux0 = plan.init_aux(state.labels, axis, *plan_blocks)
+            if single_step:
+                new_state, _ = step_fn(state, aux0, capacity, num_real, dl,
+                                       score_blocks, plan_blocks)
+                return new_state
+
+            def body(carry):
+                s, aux = carry
+                return step_fn(s, aux, capacity, num_real, dl,
+                               score_blocks, plan_blocks)
+
+            state, _ = jax.lax.while_loop(cond_fn, body, (state, aux0))
+            return state
+
+        spec = state_partition_spec(axis)
+        rep = PartitionSpec()
+        arg_specs = (rep, rep, PartitionSpec(axis)) \
+            + (PartitionSpec(axis),) * n_score + tuple(plan.arg_specs(axis))
+        return jax.jit(shard_map(
+            run_local, mesh=mesh, in_specs=(spec,) + arg_specs,
+            out_specs=spec, check_rep=False))
+
+    if score_fn is not None:
+        return Program(run=build())
+    return _program(key, build)
+
+
+def _sharded_parts(graph: Graph, cfg, opts: EngineOptions, mesh: Mesh,
+                   axis: str, score_fn: Optional[Callable] = None,
+                   single_step: bool = False):
     """Everything the sharded runner and one-step dispatcher share.
 
-    Resolves the exchange plan from ``cfg.label_exchange``, builds the
-    score backend's sharded layout against the plan's ``dst_index``, and
-    assembles the per-device step plus the full ``shard_map`` argument
-    list.  Returns ``(sg, plan, step_fn, args, arg_specs, n_score_args)``
-    where ``args``/``arg_specs`` cover ``(deg_w, *score_args,
-    *plan_args)`` -- every array with leading dimension ndev, sharded
-    over ``axis``.
-
-    A custom ``score_fn`` closure gets the XLA-layout edge blocks
-    ``(src_local, dst_index, weight)``, matching the signature the XLA
-    backend's sharded scorer uses.
+    Resolves the exchange plan, builds (or fetches cached) the score
+    backend's sharded edge arrays against the plan's ``dst_index``, and
+    returns ``(sg, plan, program, args)`` where ``args`` is the full
+    argument tuple after the state: ``(capacity, num_real, deg_w,
+    *score_args, *plan_args)``.
     """
     from . import comm                                    # sibling, no cycle
     from .distributed import device_upload, shard_layout  # layout layer
+    padded, num_real = padded_view(graph, opts)
+    pad = opts.pad == "bucket"
     ndev = mesh.shape[axis]
-    sg = shard_layout(graph, ndev)
-    plan = comm.make_exchange_plan(cfg.resolved_label_exchange(ndev), sg,
-                                   delta_cap=cfg.delta_cap)
+    sg = shard_layout(padded, ndev, pad=pad)
+    plan = comm.make_exchange_plan(opts.resolved_label_exchange(ndev), sg,
+                                   delta_cap=opts.delta_cap, pad=pad)
     if score_fn is None:
-        from repro.kernels import ops as kernel_ops   # lazy: no import cycle
-        backend = kernel_ops.get_score_backend(cfg.resolved_score_backend())
-        build_sharded = getattr(backend, "build_sharded", None)
-        if build_sharded is None:
-            raise NotImplementedError(
-                f"score backend {backend.name!r} has no sharded "
-                "implementation (build_sharded)")
-        # cached like make_score_fn: the build retiles/uploads O(E) arrays
-        # (for pallas, a host retile per shard) and depends only on the
-        # layout, the backend, k, and the plan's dst_index -- so a cfg
-        # sweep (eps/seed/max_iters/...) over one graph shares one build,
-        # and so do the allgather/delta plans (both index with sg.dst)
+        backend = opts.backend()
+        # cached per layout: the build retiles/uploads O(E) arrays (for
+        # pallas, a host retile per shard) and depends only on the layout,
+        # the backend and the plan's dst layout -- so a cfg sweep
+        # (eps/seed/max_iters/...) over one graph shares one build, and so
+        # do the allgather/delta plans (both index with sg.dst)
         dst_layout = "halo" if plan.dst_index is not sg.dst else "global"
-        score_args, scores = _graph_cached(
-            _SCORE_FN_CACHE, graph,
-            ("sharded", backend.name, cfg.k, ndev, dst_layout),
-            lambda: build_sharded(sg, cfg.k, plan.dst_index))
+        score_args = _graph_cached(
+            _SCORE_ARG_CACHE, sg,
+            ("sharded", backend.signature(), dst_layout, pad),
+            lambda: tuple(backend.sharded_graph_args(sg, cfg.k,
+                                                     plan.dst_index,
+                                                     pad=pad)))
     else:
         # custom closures get the XLA backend's edge layout (same arrays,
         # same normalization), just a different scores fn
         from repro.kernels import ops as kernel_ops
-        score_args, _ = kernel_ops.get_score_backend("xla").build_sharded(
+        score_args = kernel_ops.get_score_backend("xla").sharded_graph_args(
             sg, cfg.k, plan.dst_index)
-        scores = score_fn
-    step_fn = make_sharded_step_fn(graph, sg, cfg, axis, plan, scores)
-    args = (device_upload(sg, "deg_w"),) + tuple(score_args) \
+    prog = _sharded_program(cfg, opts, mesh, axis, plan.signature(),
+                            len(score_args), score_fn,
+                            single_step=single_step)
+    args = (jnp.float32(cfg.capacity(graph)), jnp.int32(num_real),
+            device_upload(sg, "deg_w")) + tuple(score_args) \
         + tuple(plan.device_args())
-    arg_specs = (PartitionSpec(axis),) * (1 + len(score_args)) \
-        + tuple(plan.arg_specs(axis))
-    return sg, plan, step_fn, args, arg_specs, len(score_args)
+    return sg, plan, prog, args
 
 
 def make_sharded_runner(graph: Graph, cfg, mesh: Mesh, axis: str = "data",
-                        score_fn: Optional[Callable] = None) -> Callable:
+                        score_fn: Optional[Callable] = None,
+                        opts: EngineOptions = _DEFAULT_OPTS) -> Callable:
     """Compile the full sharded run into ONE device dispatch.
 
-    Returns ``runner(state) -> state`` where ``state.labels`` is the padded
-    (ndev * v_per_dev,) vector; the ``lax.while_loop`` lives INSIDE the
-    ``shard_map``, so all devices iterate in lockstep driven purely by the
-    psum-reduced halting scalars -- no per-iteration host sync exists even
-    in principle.  The while_loop carry is ``(state, plan aux)``: the
-    exchange plan's auxiliary state (e.g. delta's label mirror) never
-    leaves the device either.
+    Returns ``runner(state) -> state`` where ``state.labels`` is the
+    padded (ndev * v_per_dev,) vector over the shape-bucketed layout; the
+    ``lax.while_loop`` lives INSIDE the ``shard_map``, so all devices
+    iterate in lockstep driven purely by the psum-reduced halting scalars
+    -- no per-iteration host sync exists even in principle.  The
+    while_loop carry is ``(state, plan aux)``: the exchange plan's
+    auxiliary state (e.g. delta's label mirror) never leaves the device
+    either.  A custom ``score_fn`` closure is shaped to the real graph's
+    layout, so it forces ``pad="none"``.
     """
-    sg, plan, step_fn, args, arg_specs, n_score = _sharded_parts(
-        graph, cfg, mesh, axis, score_fn)
-    max_iters = cfg.max_iters
-
-    def cond_fn(carry):
-        s = carry[0]
-        return jnp.logical_and(jnp.logical_not(s.halted),
-                               s.iteration < max_iters)
-
-    def run_local(state, deg_l, *rest):
-        # per-device blocks arrive with a leading length-1 shard dim
-        blocks = tuple(r[0] for r in rest)
-        score_blocks, plan_blocks = blocks[:n_score], blocks[n_score:]
-        dl = deg_l[0]
-        aux0 = plan.init_aux(state.labels, axis, *plan_blocks)
-
-        def body(carry):
-            s, aux = carry
-            return step_fn(s, aux, dl, score_blocks, plan_blocks)
-
-        state, _ = jax.lax.while_loop(cond_fn, body, (state, aux0))
-        return state
-
-    spec = state_partition_spec(axis)
-    run = jax.jit(shard_map(
-        run_local, mesh=mesh, in_specs=(spec,) + arg_specs,
-        out_specs=spec, check_rep=False))
+    if score_fn is not None:
+        opts = dataclasses.replace(opts, pad="none")
+    sg, plan, prog, args = _sharded_parts(graph, cfg, opts, mesh, axis,
+                                          score_fn)
 
     def runner(state: SpinnerState) -> SpinnerState:
-        return run(state, *args)
+        return prog.run(state, *args)
 
+    runner.program = prog
+    runner.v_pad = sg.num_vertices
     return runner
 
 
-def pad_labels(labels: jax.Array, v_pad: int) -> jax.Array:
-    """Extend labels to the sharded layout's padded vertex count."""
-    labels = jnp.asarray(labels, jnp.int32)
-    pad = v_pad - labels.shape[0]
-    if pad:
-        labels = jnp.concatenate([labels, jnp.zeros((pad,), jnp.int32)])
-    return labels
+def sharded_v_pad(graph: Graph, opts: EngineOptions, mesh: Mesh,
+                  axis: str = "data") -> int:
+    """Padded vertex count of the sharded layout (bucket + mesh rounding)."""
+    padded, _ = padded_view(graph, opts)
+    ndev = mesh.shape[axis]
+    return -(-padded.num_vertices // ndev) * ndev
 
 
 def run_sharded(graph: Graph, cfg, labels, loads, key,
                 mesh: Optional[Mesh] = None, axis: str = "data",
-                score_fn: Optional[Callable] = None) -> SpinnerState:
+                score_fn: Optional[Callable] = None,
+                opts: EngineOptions = _DEFAULT_OPTS,
+                on_program: Optional[Callable] = None) -> SpinnerState:
     """Run to the stable state in one ``while_loop`` dispatch over ``mesh``.
 
     ``mesh=None`` uses a 1-D mesh over all local devices
     (``repro.launch.mesh.make_partition_mesh``).  The returned state
-    carries PADDED labels (length ndev * ceil(V / ndev)); callers slice
-    ``[:graph.num_vertices]``.  Compiled runners are cached per
-    (graph, cfg, mesh, axis) -- meshes compare by value, so rebuilding an
-    identical mesh reuses the compilation.
+    carries PADDED labels (the bucketed layout rounded up to a mesh
+    multiple); callers slice ``[:graph.num_vertices]``.  Compiled
+    programs are cached globally per (cfg statics, backend, mesh, axis,
+    plan signature) -- meshes compare by value, so rebuilding an
+    identical mesh reuses the compilation, and so do all graphs sharing
+    a shape bucket.
     """
     if mesh is None:
         mesh = _default_partition_mesh()
-    ndev = mesh.shape[axis]
-    if score_fn is not None:
-        runner = make_sharded_runner(graph, cfg, mesh, axis, score_fn)
-    else:
-        runner = _graph_cached(
-            _RUNNER_CACHE, graph, ("sharded", _cache_cfg(cfg), mesh, axis),
-            lambda: make_sharded_runner(graph, cfg, mesh, axis))
-    v_pad = -(-graph.num_vertices // ndev) * ndev
+    if score_fn is not None:             # custom closures run unpadded
+        opts = dataclasses.replace(opts, pad="none")
+    runner = make_sharded_runner(graph, cfg, mesh, axis, score_fn, opts=opts)
+    if on_program is not None:
+        on_program(getattr(runner, "program", None))
+    v_pad = sharded_v_pad(graph, opts, mesh, axis)
     return runner(init_state(pad_labels(labels, v_pad), loads, key))

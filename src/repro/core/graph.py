@@ -133,6 +133,68 @@ def add_edges(graph: Graph, new_src, new_dst, directed: bool = True,
     return from_edges(src, dst, V, directed=directed)
 
 
+def shape_bucket(n: int, floor: int = 64) -> int:
+    """Power-of-two-ish rounding for compile-shape buckets.
+
+    Returns the smallest value >= max(n, floor) of the form
+    ``m * 2**(e-2)`` with mantissa m in {5, 6, 7, 8} (i.e. quarter steps
+    between consecutive powers of two), so padding overhead is at most
+    25% while graphs of similar size land in the same bucket and share
+    one compiled executable (see ``repro.core.session``).  With the
+    default floor every bucket is a multiple of 8, so the sharded
+    engine's per-device split stays exact on 1/2/4/8-device meshes.
+    """
+    n = max(int(n), int(floor), 1)
+    p = 1 << (n - 1).bit_length()          # smallest power of two >= n
+    half = p // 2
+    step = max(half // 4, 1)
+    for m in range(1, 5):
+        b = half + m * step                # half * {1.25, 1.5, 1.75, 2}
+        if b >= n:
+            return b
+    return p
+
+
+def pad_graph(graph: Graph, v_pad: int, e_pad: int) -> Graph:
+    """Zero-padded view of ``graph`` with bucketed (V, E) compile shapes.
+
+    Pad vertices are isolated (``deg_w`` 0); pad edge slots are
+    weight-0 self-loops spread over the pad vertex range (or parked on
+    the last vertex when V is already at its bucket), so every score
+    backend treats them as exact no-ops: a scatter-add of 0.0 and a
+    one-hot matmul against weight 0 both leave the real rows bit-equal.
+    The engines mask the pad vertices out of migration and halting
+    aggregates with a ``valid`` mask (see ``engine.make_vertex_update``),
+    so pads never corrupt the result.  Note the tie-break PRNG draws over
+    the PADDED vertex set, so the (equally valid, deterministic)
+    trajectory depends on the bucket: bit-reproducibility holds across
+    calls that share a padded layout -- which one-shot wrappers and
+    sessions do by construction -- not across different buckets or
+    ``pad="none"``.
+    """
+    V, E = graph.num_vertices, graph.num_directed_entries
+    if v_pad < V or e_pad < E:
+        raise ValueError(f"pad shapes ({v_pad}, {e_pad}) below graph "
+                         f"shapes ({V}, {E})")
+    if v_pad == V and e_pad == E:
+        return graph
+    extra = e_pad - E
+    if extra and v_pad > V:
+        pad_src = np.sort((np.arange(extra, dtype=np.int64)
+                           % (v_pad - V)).astype(np.int32) + V)
+    else:
+        pad_src = np.full(extra, v_pad - 1, np.int32)
+    src = np.concatenate([graph.src, pad_src])
+    dst = np.concatenate([graph.dst, pad_src])
+    w = np.concatenate([graph.weight, np.zeros(extra, np.float32)])
+    counts = np.bincount(src, minlength=v_pad).astype(np.int64)
+    row_ptr = np.zeros(v_pad + 1, dtype=np.int64)
+    np.cumsum(counts, out=row_ptr[1:])
+    deg_w = np.concatenate([graph.deg_w, np.zeros(v_pad - V, np.float32)])
+    return Graph(num_vertices=v_pad, src=src, dst=dst, weight=w,
+                 row_ptr=row_ptr, deg_w=deg_w)
+
+
 def remove_vertices(graph: Graph, vertices) -> Graph:
     """Drop vertices (keeping ids stable) and their incident edges."""
     drop = np.zeros(graph.num_vertices, dtype=bool)
@@ -170,17 +232,20 @@ class TiledCSR:
 
 
 def build_tiled_csr(graph: Graph, tile_v: int = 128, tile_e: int = 128,
-                    balance_by_degree: bool = True) -> TiledCSR:
+                    balance_by_degree: bool = True,
+                    pad_chunks: int = 1) -> TiledCSR:
     return _tile_edge_arrays(graph.num_vertices, graph.src, graph.dst,
                              graph.weight, graph.deg_w, tile_v=tile_v,
                              tile_e=tile_e,
-                             balance_by_degree=balance_by_degree)
+                             balance_by_degree=balance_by_degree,
+                             pad_chunks=pad_chunks)
 
 
 def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
                       weight: np.ndarray, deg_w: np.ndarray, *,
                       tile_v: int, tile_e: int,
-                      balance_by_degree: bool) -> TiledCSR:
+                      balance_by_degree: bool, pad_chunks: int = 1
+                      ) -> TiledCSR:
     """Tile a raw (src, dst, weight) edge list over ``V`` source rows.
 
     The core of ``build_tiled_csr``, shared with the per-shard tiling
@@ -219,6 +284,9 @@ def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
     counts = np.bincount(tile_of, minlength=num_tiles)
     chunks_per_tile = np.maximum(1, -(-counts // tile_e))
     max_chunks = int(chunks_per_tile.max())
+    # pad_chunks > 1 rounds the chunk count up so the kernel's compile
+    # shape stays stable as edges shift between tiles (session reuse)
+    max_chunks = -(-max_chunks // pad_chunks) * pad_chunks
 
     src_local = np.zeros((num_tiles, max_chunks, tile_e), dtype=np.int32)
     dstA = np.zeros((num_tiles, max_chunks, tile_e), dtype=np.int32)
@@ -271,8 +339,8 @@ class ShardedTiledCSR:
 
 def build_sharded_tiled_csr(sg, dst_index: Optional[np.ndarray] = None,
                             tile_v: int = 128, tile_e: int = 128,
-                            balance_by_degree: bool = True
-                            ) -> ShardedTiledCSR:
+                            balance_by_degree: bool = True,
+                            pad_chunks: int = 1) -> ShardedTiledCSR:
     """Retile a ``ShardedGraph``'s edge shards for the Pallas kernel.
 
     ``dst_index`` overrides the global destination ids (e.g. with an
@@ -291,7 +359,7 @@ def build_sharded_tiled_csr(sg, dst_index: Optional[np.ndarray] = None,
             dsts[p][real].astype(np.int32),
             sg.weight[p][real].astype(np.float32), sg.deg_w[p],
             tile_v=tile_v, tile_e=tile_e,
-            balance_by_degree=balance_by_degree))
+            balance_by_degree=balance_by_degree, pad_chunks=pad_chunks))
     T = max(t.num_tiles for t in tiles)
     C = max(t.max_chunks for t in tiles)
     src_local = np.zeros((ndev, T, C, tile_e), np.int32)

@@ -15,6 +15,13 @@ pick a specific runner -- ``engine="sharded", mesh=...`` restarts the
 whole adapted/resized run as one ``while_loop`` dispatch across a device
 mesh, so incremental repartitioning scales with the cluster exactly like
 a from-scratch run.
+
+For a STREAM of adapts/resizes, hold a ``repro.core.session.
+PartitionSession`` instead: its ``adapt()``/``resize()`` methods are
+bit-identical to these wrappers (both run the same shape-bucketed
+compiled programs) but amortize the O(E) upload and the runner compile
+across calls -- a grown graph that stays inside its shape bucket
+recompiles nothing.
 """
 from __future__ import annotations
 

@@ -23,10 +23,9 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-import numpy as _np
-
 from . import metrics
 from .graph import Graph, _finish, from_edges
+from .session import PartitionSession
 from .spinner import SpinnerConfig, partition
 
 
@@ -74,17 +73,43 @@ def cross_shard_mass(choices: np.ndarray, assignment: np.ndarray) -> float:
     return cross / max(1, total)
 
 
+# Incremental re-placement sessions, one per (n_experts, n_shards, seed):
+# routing drift produces a stream of co-activation graphs of the same
+# expert count, so successive place_experts(prev=...) calls land in the
+# same shape bucket and reuse one compiled runner (see core.session).
+# FIFO-bounded so seed/shard sweeps cannot accumulate graphs forever.
+_PLACEMENT_SESSIONS: dict = {}
+_PLACEMENT_SESSIONS_MAX = 8
+
+
+def _placement_session(key, graph, cfg):
+    sess = _PLACEMENT_SESSIONS.get(key)
+    if sess is None:
+        while len(_PLACEMENT_SESSIONS) >= _PLACEMENT_SESSIONS_MAX:
+            _PLACEMENT_SESSIONS.pop(
+                next(iter(_PLACEMENT_SESSIONS))).close()
+        sess = _PLACEMENT_SESSIONS[key] = PartitionSession(graph, cfg)
+    return sess
+
+
 def place_experts(choices: np.ndarray, n_experts: int, n_shards: int,
                   seed: int = 0, prev: Optional[np.ndarray] = None
                   ) -> Tuple[np.ndarray, dict]:
     """Spinner-partition experts across EP shards from router statistics.
 
     ``prev`` enables incremental re-placement as routing drifts
-    (Section 3.4 applied to the serving plane).
+    (Section 3.4 applied to the serving plane); those calls ride a
+    reused ``PartitionSession``, so re-placing after a routing shift
+    costs an upload, not a compile.
     """
     g = coactivation_graph(choices, n_experts)
     cfg = SpinnerConfig(k=n_shards, seed=seed, max_iters=150)
-    res = partition(g, cfg, init=prev, record_history=False)
+    if prev is None:
+        res = partition(g, cfg, record_history=False)
+    else:
+        sess = _placement_session((n_experts, n_shards, seed), g, cfg)
+        res = sess.adapt(g, prev=np.asarray(prev, np.int32),
+                         record_history=False)
     contiguous = (np.arange(n_experts) * n_shards // n_experts
                   ).astype(np.int32)
     stats = {
@@ -111,16 +136,10 @@ def place_pipeline_stages(layer_costs: np.ndarray, n_stages: int,
     n = layer_costs.shape[0]
     src = np.arange(n - 1, dtype=np.int32)
     dst = src + 1
+    # Weighting the chain by cost through edge multiplicity does not
+    # survive from_edges (duplicates collapse per Eq. 3), so we run the
+    # plain chain and report the cost balance of the result instead.
     g = from_edges(src, dst, n, directed=False)
-    # integer-replicate edges by cost to encode weights through multiplicity
-    cost_e = ((layer_costs[:-1] + layer_costs[1:]) / 2.0)
-    reps = np.maximum(1, np.round(
-        8.0 * cost_e / max(cost_e.mean(), 1e-9)).astype(np.int64))
-    src_r = np.repeat(src, reps)
-    dst_r = np.repeat(dst, reps)
-    # multiplicity is collapsed by dedupe; emulate weights via parallel
-    # chains of intermediate ids is overkill -- instead run on the plain
-    # chain but report the cost balance of the result.
     cfg = SpinnerConfig(k=n_stages, seed=seed, max_iters=200, c=1.10)
     res = partition(g, cfg, record_history=False)
     stage_cost = np.zeros(n_stages)

@@ -1,0 +1,385 @@
+"""PartitionSession: a device-resident handle for continuous partitioning.
+
+Spinner's pitch is CONTINUOUS partitioning (Sections 3.4-3.5): react to a
+stream of graph changes and cluster resizes by restarting from the previous
+assignment, not from scratch.  xDGP and SDP frame the same workload as a
+long-lived service.  The one-shot ``partition(graph, cfg)`` call hides what
+such a service needs to amortize: the O(E) edge upload, the sharded layout
+and exchange-plan construction, and -- dominating small-graph latency --
+the XLA compile of the fused runner.
+
+``PartitionSession`` makes that state explicit::
+
+    from repro.core import EngineOptions, SpinnerConfig, open_session
+
+    with open_session(g, SpinnerConfig(k=32)) as s:
+        res = s.partition()                  # cold: upload + compile
+        while serving:
+            g = next_graph_snapshot()
+            res = s.adapt(g)                 # warm: zero new compiles
+            if cluster_resized(new_k):
+                res = s.resize(new_k)        # new k: exactly one compile
+
+Lifecycle: ``open (upload/bind lazily) -> partition / adapt / resize /
+update -> close``.  The session owns the (graph, config, options) triple,
+the previous stable labels (``adapt``/``resize`` default to them), and the
+set of compiled programs it has touched -- ``stats()`` reports shape
+buckets, per-session compile counts (via the programs' jit cache sizes)
+and the exchange-plan communication volumes.
+
+Shape-bucketed compile reuse: with the default ``EngineOptions(pad=
+"bucket")`` every engine runs on a power-of-two-ish padded (V, E) layout
+(``graph.shape_bucket`` / ``graph.pad_graph``).  Compiled programs take
+all graph data as arguments (see ``repro.core.engine``), so an ``adapt``
+on a grown graph that stays inside its bucket re-uses the same executable
+-- zero re-traces, asserted in tests/test_session.py -- and crossing a
+bucket costs exactly one.  Because ``spinner.partition`` opens a throwaway
+session with the same defaults, a warm session call is bit-identical to
+the one-shot API on every engine and exchange plan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import numpy as np
+
+from . import engine as _engine
+from . import metrics
+from .engine import EngineOptions
+from .graph import Graph, add_edges
+from .spinner import (PartitionResult, SpinnerConfig, prepare_init,
+                      resolve_options)
+
+_ENGINES = ("auto", "fused", "sharded", "chunked", "host")
+
+
+class PartitionSession:
+    """Device-resident handle: open -> partition/adapt/resize/update -> close.
+
+    See the module docstring for the lifecycle.  All runs go through the
+    same engine programs as the one-shot API; the session adds the
+    previous-labels memory, program/compile tracking, and the rebind
+    logic that keeps a growing graph inside its compile-shape bucket.
+    """
+
+    def __init__(self, graph: Graph, cfg: SpinnerConfig,
+                 options: Optional[EngineOptions] = None):
+        cfg, opts = resolve_options(cfg, options)
+        self.graph = graph
+        self.cfg = cfg
+        self.options = opts
+        self._prev: Optional[np.ndarray] = None
+        self._last: Optional[PartitionResult] = None
+        self._programs: dict = {}       # id(program) -> (program, base)
+        self._runs = 0
+        self._closed = False
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def close(self) -> None:
+        """Release the session's references (programs stay in the global
+        cache for other sessions; graph uploads die with the graph)."""
+        self._programs.clear()
+        self._prev = None
+        self._last = None
+        self._closed = True
+
+    def __enter__(self) -> "PartitionSession":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError("PartitionSession is closed")
+
+    # -- program / compile tracking ---------------------------------------
+
+    def _track(self, program) -> None:
+        if program is None:            # e.g. a monkeypatched test runner
+            return
+        if id(program) not in self._programs:
+            self._programs[id(program)] = (program, program.compiles())
+
+    @property
+    def compiles(self) -> int:
+        """Compilations this session caused (jit cache growth of the
+        programs it ran, measured from first acquisition)."""
+        return sum(max(0, prog.compiles() - base)
+                   for prog, base in self._programs.values())
+
+    # -- the four drivers --------------------------------------------------
+
+    def partition(self, init: Optional[np.ndarray] = None,
+                  record_history: Optional[bool] = None,
+                  callback: Optional[Callable[[int, dict], None]] = None,
+                  ) -> PartitionResult:
+        """Run to a stable state from ``init`` (or a fresh random start)."""
+        return self._run(init, record_history, callback)
+
+    def adapt(self, new_graph: Optional[Graph] = None,
+              prev: Optional[np.ndarray] = None, *,
+              edge_updates: Optional[tuple] = None,
+              num_vertices: Optional[int] = None,
+              record_history: Optional[bool] = None,
+              callback: Optional[Callable[[int, dict], None]] = None,
+              ) -> PartitionResult:
+        """Incremental restart (Section 3.4) from the previous labels.
+
+        Rebinds the session to ``new_graph`` (or to the current graph
+        extended by ``edge_updates=(src, dst)``; neither = re-run on the
+        current graph, e.g. after ``update()``), carries ``prev`` labels
+        (default: the last result) extending new vertices as -1 ->
+        least-loaded, and restarts.  While the new graph stays inside the
+        session's shape bucket this performs ZERO new compilations.
+        """
+        self._check_open()
+        if new_graph is not None and edge_updates is not None:
+            raise ValueError("pass at most one of new_graph/edge_updates")
+        prev = self._require_prev(prev)      # validate before rebinding
+        if edge_updates is not None:
+            e_src, e_dst = edge_updates
+            new_graph = add_edges(self.graph, e_src, e_dst,
+                                  num_vertices=num_vertices)
+        if new_graph is not None:
+            self.graph = new_graph
+        from .incremental import extend_labels
+        init = extend_labels(prev, self.graph.num_vertices)
+        return self._run(init, record_history, callback)
+
+    def resize(self, k_new: int, prev: Optional[np.ndarray] = None,
+               seed: Optional[int] = None,
+               record_history: Optional[bool] = None,
+               callback: Optional[Callable[[int, dict], None]] = None,
+               ) -> PartitionResult:
+        """Elastic restart (Section 3.5, Eq. 10) to ``k_new`` partitions.
+
+        Relabels the previous assignment probabilistically, updates the
+        session's config to the new k, and restarts.  A changed k means
+        new (k,) aggregate shapes, so this costs exactly one compile per
+        new k (returning to a previous k is free again).
+        """
+        self._check_open()
+        prev = self._require_prev(prev)
+        from .incremental import elastic_relabel
+        k_old = self.cfg.k
+        cfg_new = dataclasses.replace(self.cfg, k=k_new)
+        init = elastic_relabel(prev, k_old, k_new,
+                               seed=cfg_new.seed if seed is None else seed)
+        # run first, commit the new k only on success: a rejected call
+        # (bad history/callback combination) must not leave the session
+        # with k_new but labels from k_old
+        res = self._run(init, record_history, callback, cfg=cfg_new)
+        self.cfg = cfg_new
+        return res
+
+    def update(self, edge_src, edge_dst, num_vertices: Optional[int] = None,
+               directed: bool = True) -> "PartitionSession":
+        """Apply a graph delta WITHOUT running; the next ``adapt()`` (or
+        ``partition()``) sees the extended graph.  Chainable."""
+        self._check_open()
+        self.graph = add_edges(self.graph, edge_src, edge_dst,
+                               directed=directed, num_vertices=num_vertices)
+        return self
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def labels(self) -> Optional[np.ndarray]:
+        """The previous stable assignment (None before the first run)."""
+        return self._prev
+
+    def stats(self) -> dict:
+        """Session state: shape buckets, compile/run counters, padded
+        layout, and (on a mesh) the exchange plan's wire volumes."""
+        self._check_open()
+        graph, opts = self.graph, self.options
+        padded, _ = _engine.padded_view(graph, opts)
+        d = {
+            "num_vertices": graph.num_vertices,
+            "num_directed_entries": graph.num_directed_entries,
+            "k": self.cfg.k,
+            "engine": opts.engine,
+            "pad": opts.pad,
+            "bucket": (_engine.graph_buckets(graph)
+                       if opts.pad == "bucket" else None),
+            "padded_shape": (padded.num_vertices,
+                             padded.num_directed_entries),
+            "runs": self._runs,
+            "compiles": self.compiles,
+            "programs": len(self._programs),
+        }
+        if self._last is not None:
+            d["last"] = {"iterations": self._last.iterations,
+                         "halted": self._last.halted,
+                         "engine": self._last.engine,
+                         "exchanged_bytes": self._last.exchanged_bytes}
+        if opts.mesh is not None:
+            from .distributed import comm_stats, shard_layout
+            sg = shard_layout(padded, opts.mesh.shape[opts.axis],
+                              pad=opts.pad == "bucket")
+            d["exchange"] = comm_stats(sg, self.cfg, opts)
+        return d
+
+    # -- internals ---------------------------------------------------------
+
+    def _require_prev(self, prev) -> np.ndarray:
+        if prev is None:
+            prev = self._prev
+        if prev is None:
+            raise ValueError("no previous labels in this session; run "
+                             "partition() first or pass prev=")
+        return np.asarray(prev, dtype=np.int32)
+
+    def _run(self, init, record_history, callback,
+             cfg: Optional[SpinnerConfig] = None) -> PartitionResult:
+        self._check_open()
+        graph, opts = self.graph, self.options
+        cfg = self.cfg if cfg is None else cfg
+        eng = opts.engine
+        if eng == "auto":
+            if opts.mesh is not None:
+                eng = "sharded"   # an explicit mesh implies the sharded runner
+            else:
+                eng = "fused" if (record_history is False and
+                                  callback is None) else "chunked"
+        if opts.mesh is not None and eng != "sharded":
+            raise ValueError(
+                f"mesh= is only meaningful for engine='sharded', got "
+                f"{eng!r}")
+        if eng not in _ENGINES:
+            raise ValueError(
+                f"unknown engine {eng!r}; "
+                "available: auto, fused, sharded, chunked, host")
+
+        labels, loads, key = prepare_init(graph, cfg, init)
+        if eng == "host":
+            res = self._run_host(cfg, labels, loads, key,
+                                 record_history is not False, callback)
+        elif eng in ("fused", "sharded"):
+            # "chunked" is single-device only, so on a mesh there is no
+            # per-iteration visibility at all -- say so instead of pointing
+            # at an option the mesh check forbids.
+            remedy = ("per-iteration history/callbacks are not available "
+                      "on a device mesh; run engine='chunked' without "
+                      "mesh= for traces" if eng == "sharded"
+                      else "use engine='chunked' (or 'auto') instead")
+            if callback is not None:
+                raise ValueError(
+                    f"engine={eng!r} cannot invoke a per-iteration "
+                    f"callback; {remedy}")
+            if record_history is True:
+                raise ValueError(
+                    f"engine={eng!r} cannot record per-iteration history; "
+                    f"{remedy}")
+            if eng == "sharded":
+                state = _engine.run_sharded(graph, cfg, labels, loads, key,
+                                            mesh=opts.mesh, axis=opts.axis,
+                                            opts=opts,
+                                            on_program=self._track)
+            else:
+                state = _engine.run_fused(graph, cfg, labels, loads, key,
+                                          opts=opts, on_program=self._track)
+            history = []
+        else:   # chunked
+            record = record_history is not False
+            state, history = _engine.run_chunked(
+                graph, cfg, labels, loads, key,
+                chunk_size=opts.chunk_size or _engine.DEFAULT_CHUNK,
+                callback=callback, record=record, opts=opts,
+                on_program=self._track)
+            if not record:
+                history = []     # callback may force recording internally
+        if eng != "host":
+            # sharded labels come back padded to the sharded layout
+            res = PartitionResult(
+                labels=np.asarray(state.labels)[:graph.num_vertices],
+                loads=np.asarray(state.loads),
+                iterations=int(state.iteration),
+                halted=bool(state.halted), history=history,
+                total_messages=float(state.total_messages),
+                engine=eng,
+                exchanged_bytes=float(state.exchanged_bytes))
+
+        self._last = res
+        self._prev = res.labels
+        self._runs += 1
+        return res
+
+    def _run_host(self, cfg, labels, loads, key, record_history: bool,
+                  callback) -> PartitionResult:
+        """Legacy per-iteration host loop -- the fused engines' oracle.
+
+        Runs the same padded layout and jitted step program as the fused
+        runner; the halting compare runs in float32 (matching the
+        on-device ``engine._halting_update`` bit for bit), so host and
+        fused engines agree on iteration counts, not just trajectories.
+        ``cfg`` arrives from ``_run`` (resize runs the new k before
+        committing it to the session).
+        """
+        graph, opts = self.graph, self.options
+        step = _engine.make_host_step(graph, cfg, opts)
+        self._track(step.program)
+        num_real = graph.num_vertices
+        labels = _engine.pad_labels(labels, step.v_pad)
+        best_score = np.float32(-np.inf)
+        eps32 = np.float32(cfg.eps)
+        stall = 0
+        history: List[dict] = []
+        halted = False
+        total_messages = 0.0
+        it = 0
+        for it in range(1, cfg.max_iters + 1):
+            key, k_it = jax.random.split(key)
+            labels, loads, score_g, n_mig, mig_mass = step(labels, loads,
+                                                           k_it)
+            score_g = np.float32(score_g)
+            total_messages += float(mig_mass)
+            if record_history or callback is not None:
+                lab_np = np.asarray(labels)[:num_real]
+                entry = {
+                    "iteration": it,
+                    "score": float(score_g),
+                    "migrations": int(n_mig),
+                    "message_mass": float(mig_mass),
+                    "phi": metrics.phi(graph, lab_np),
+                    "rho": metrics.rho(graph, lab_np, cfg.k),
+                }
+                if record_history:
+                    history.append(entry)
+                if callback is not None:
+                    callback(it, entry)
+            # Halting (Section 3.3): relative improvement below eps for
+            # > w iters.  f32 arithmetic mirroring engine._halting_update;
+            # on iteration 1 best_score is -inf, tol is inf, best + tol is
+            # NaN and the compare is False (the invalid-op warning is
+            # expected and suppressed).
+            with np.errstate(invalid="ignore"):
+                tol = eps32 * np.maximum(np.float32(1.0),
+                                         np.abs(best_score))
+                improved = score_g > best_score + tol
+            best_score = np.maximum(best_score, score_g)
+            if improved:
+                stall = 0
+            else:
+                stall += 1
+                if stall >= cfg.halt_window:
+                    halted = True
+                    break
+
+        return PartitionResult(labels=np.asarray(labels)[:num_real],
+                               loads=np.asarray(loads),
+                               iterations=it, halted=halted,
+                               history=history,
+                               total_messages=total_messages,
+                               engine="host")
+
+
+def open_session(graph: Graph, cfg: SpinnerConfig,
+                 options: Optional[EngineOptions] = None
+                 ) -> PartitionSession:
+    """Open a device-resident partitioning session (``spinner.open``)."""
+    return PartitionSession(graph, cfg, options)

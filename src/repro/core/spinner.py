@@ -16,46 +16,51 @@ aggregators is a single fused reduction.
 Halting (Section 3.3): stop when score(G) has not improved by more than eps
 (relative) for more than ``halt_window`` consecutive iterations.
 
-Engine layering (see ``repro.core.engine`` for the device-resident side):
+The public API (PR 4) is organized around a device-resident SESSION:
 
-  state   ``engine.SpinnerState`` -- a pure pytree carrying labels, loads,
-          the PRNG key, the Eq. 9 best_score / stall halting aggregates and
-          the last iteration's migration statistics.
-  step    ``engine.make_iteration`` holds the two-phase math as a pure
-          function; ``engine.make_step_fn`` wraps it (PRNG split + on-device
-          halting update) into a jittable state transition.  The Eq. 8
-          numerator comes from a pluggable score backend
-          (``repro.kernels.ops.get_score_backend``): XLA scatter-add or the
-          Pallas tiled kernel, chosen once at trace time.
-  runner  four interchangeable drivers share that step:
-            * ``engine="fused"``   -- the whole run is ONE device dispatch
-              (``lax.while_loop`` with the halting criterion in the carry);
-            * ``engine="sharded"`` -- the fused loop sharded over a device
-              mesh (labels split over the vertex axis via ``shard_map``,
-              aggregates psum-reduced in the step): one ``while_loop``
-              dispatch drives ALL devices, with no per-iteration host
-              sync.  On a 1-device mesh this is a bit-compatible oracle
-              of "fused".  The per-iteration label exchange is pluggable
-              (``cfg.label_exchange``, see ``repro.core.comm``): full
-              all-gather, boundary-only halo, or changed-labels-only
-              delta -- identical trajectories, decreasing wire bytes;
-            * ``engine="chunked"`` -- ``lax.scan`` over ``chunk_size``
-              iterations per dispatch with fixed-size on-device history
-              (phi / rho / score / migration traces), one host sync per
-              chunk;
-            * ``engine="host"``    -- the legacy per-iteration host loop,
-              kept as the bit-compatible oracle for the fused paths.
-          ``engine="auto"`` (default) picks "chunked" when history or a
-          callback is requested and "fused" otherwise.  All four share
-          ``engine._halting_update``, so iteration counts agree exactly.
+  config   ``SpinnerConfig`` carries ONLY the paper's parameters (k, c,
+           eps, halt_window, max_iters, seed, migration weighting, the
+           tie-break amplitudes).  Runtime/engine knobs -- which runner,
+           which mesh, which score backend, which label-exchange plan,
+           the compile-shape policy -- live in
+           ``repro.core.engine.EngineOptions``.  The old config fields
+           for those knobs survive as a deprecation shim
+           (``SpinnerDeprecationWarning``) and are folded into the
+           options by ``resolve_options``.
+  session  ``repro.core.session.PartitionSession`` is the handle a
+           long-lived service holds: ``open -> partition / adapt /
+           resize / update -> close``.  Opening uploads the graph once
+           and compiles runners against power-of-two-ish padded (V, E)
+           shape buckets (``graph.shape_bucket``), so a stream of
+           ``adapt()`` calls on a growing graph reuses ONE compiled
+           executable until the graph outgrows its bucket -- the
+           xDGP/SDP serving pattern: O(E) upload + compile amortized
+           across requests.  ``session.stats()`` reports buckets,
+           compile counts and exchange-plan volumes.
+  engines  four interchangeable runners share the same iteration math
+           (``engine.make_vertex_update``; see ``repro.core.engine``):
+             * ``engine="fused"``   -- the whole run is ONE device
+               dispatch (``lax.while_loop`` with halting in the carry);
+             * ``engine="sharded"`` -- the fused loop sharded over a
+               device mesh in one ``shard_map(while_loop)`` dispatch,
+               with a pluggable label exchange (allgather / halo /
+               delta: identical trajectories, decreasing wire bytes);
+             * ``engine="chunked"`` -- ``lax.scan`` over ``chunk_size``
+               iterations per dispatch with on-device history;
+             * ``engine="host"``    -- the per-iteration host loop,
+               kept as the readable oracle.
+           For a fixed padded layout all four walk the same trajectory
+           bit for bit, and a 1-device mesh reproduces "fused" exactly.
 
-``incremental.adapt`` and ``incremental.resize`` rebase on the same
-``partition`` entry point, so dynamic and elastic restarts also execute as
-a single fused device call.
+``partition`` (and ``incremental.adapt`` / ``resize``) are thin wrappers
+that open a THROWAWAY session with the same default options, so a one-shot
+call and a warm session call execute the identical compiled program --
+which is what makes session results bit-identical to the one-shot API.
 """
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, List, Optional
 
 import jax
@@ -63,12 +68,37 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import engine as _engine
-from . import metrics
+from .engine import EngineOptions
 from .graph import Graph
+
+
+class SpinnerDeprecationWarning(DeprecationWarning):
+    """Deprecated use of engine/runtime knobs on ``SpinnerConfig``.
+
+    A dedicated subclass so CI can turn exactly the in-repo deprecation
+    surface into errors (``-W error::repro.core.spinner.
+    SpinnerDeprecationWarning``) without fighting third-party warnings.
+    """
+
+
+# Deprecated engine-era fields and their "unset" sentinels.
+_LEGACY_FIELDS = {"use_kernel": False, "score_backend": None,
+                  "label_exchange": None, "delta_cap": None,
+                  "sharded_noise": None}
 
 
 @dataclasses.dataclass(frozen=True)
 class SpinnerConfig:
+    """The paper's algorithm parameters (Sections 3.1-3.5) -- nothing else.
+
+    Engine/runtime knobs (runner choice, mesh, score backend, label
+    exchange, chunking, shape padding) live in
+    ``repro.core.engine.EngineOptions``.  The trailing fields below are a
+    deprecation shim for the pre-session API: setting any of them warns
+    ``SpinnerDeprecationWarning`` and ``resolve_options`` folds them into
+    the options object.
+    """
+
     k: int
     c: float = 1.05                    # capacity slack (Eq. 5)
     eps: float = 1e-3                  # halting threshold (Section 3.3)
@@ -81,56 +111,82 @@ class SpinnerConfig:
     # open-source Giraph implementation does the same.  "vertices" is the
     # literal paper text, kept for ablation.
     migration_weighting: str = "edges"
-    use_kernel: bool = False           # legacy alias for score_backend="pallas"
-    # ComputeScores backend: "xla" | "pallas" (see repro.kernels.ops).
-    # None defers to use_kernel for backward compatibility.
-    score_backend: Optional[str] = None
     tie_noise: float = 1e-7            # random tie-break amplitude
     current_bonus: float = 1e-6        # prefer the current label on ties
-    # Sharded-engine label exchange (see repro.core.comm): "allgather"
-    # ships the full label vector per iteration (the bit-compatible
-    # oracle), "halo" only the boundary labels other devices reference,
-    # "delta" only labels that changed last iteration (the Figure 7
-    # traffic decay).  All three walk identical trajectories; "auto"
-    # picks allgather on 1 device and delta on a real mesh.
-    label_exchange: str = "auto"
-    # Per-device compact-buffer capacity of the delta exchange (entries);
-    # None = v_per_dev // 4.  Iterations where any device changes more
-    # labels than this fall back to a full all-gather (still bit-equal).
+    # ---- deprecated shim (moved to EngineOptions) ----------------------
+    use_kernel: bool = False           # -> EngineOptions(score_backend=...)
+    score_backend: Optional[str] = None
+    label_exchange: Optional[str] = None
     delta_cap: Optional[int] = None
-    # Sharded tie-break noise: "replicated" draws over the full padded
-    # vertex set from the replicated key (1-device mesh bit-parity with
-    # the fused engine); "folded" folds the device index into the key and
-    # draws only the local shard -- O(V/ndev) noise memory for very large
-    # V, different (still deterministic) stream.
-    sharded_noise: str = "replicated"
+    sharded_noise: Optional[str] = None
+
+    def __post_init__(self):
+        legacy = [f for f, unset in _LEGACY_FIELDS.items()
+                  if getattr(self, f) != unset]
+        if legacy:
+            warnings.warn(
+                f"SpinnerConfig({', '.join(legacy)}) is deprecated: "
+                "engine/runtime knobs moved to "
+                "repro.core.engine.EngineOptions (pass options= to "
+                "partition()/PartitionSession)",
+                SpinnerDeprecationWarning, stacklevel=3)
 
     def capacity(self, graph: Graph) -> float:
         """C per Eq. (5), in weighted-degree units (see metrics module)."""
         return self.c * graph.total_weight / self.k
 
-    def resolved_score_backend(self) -> str:
-        if self.score_backend is not None:
-            return self.score_backend
-        return "pallas" if self.use_kernel else "xla"
 
-    def resolved_label_exchange(self, ndev: int) -> str:
-        """Exchange plan for an ndev-device mesh (see repro.core.comm)."""
-        from .comm import EXCHANGE_PLANS     # the one plan registry
-        if self.label_exchange == "auto":
-            return "allgather" if ndev == 1 else "delta"
-        if self.label_exchange not in EXCHANGE_PLANS:
-            raise ValueError(
-                f"unknown label_exchange {self.label_exchange!r}; "
-                f"available: auto, {', '.join(sorted(EXCHANGE_PLANS))}")
-        return self.label_exchange
+def _scrub_legacy(cfg: SpinnerConfig) -> SpinnerConfig:
+    """The config with the deprecated fields reset to their sentinels.
 
-    def resolved_sharded_noise(self) -> str:
-        if self.sharded_noise not in ("replicated", "folded"):
-            raise ValueError(
-                f"unknown sharded_noise {self.sharded_noise!r}; "
-                "available: replicated, folded")
-        return self.sharded_noise
+    Everything downstream of ``resolve_options`` sees a scrubbed config,
+    so internal ``dataclasses.replace`` calls never re-trigger the shim
+    warning and cache keys never vary with deprecated fields.
+    """
+    if any(getattr(cfg, f) != unset for f, unset in _LEGACY_FIELDS.items()):
+        return dataclasses.replace(cfg, **_LEGACY_FIELDS)
+    return cfg
+
+
+def resolve_options(cfg: SpinnerConfig,
+                    options: Optional[EngineOptions] = None, *,
+                    engine: str = "auto",
+                    chunk_size: Optional[int] = None,
+                    mesh=None,
+                    axis: str = "data",
+                    ) -> tuple:
+    """Merge (options, per-call kwargs, deprecated config fields).
+
+    Returns ``(scrubbed cfg, resolved EngineOptions)``.  Precedence:
+    explicit per-call kwargs > an explicit ``options`` object > the
+    deprecated ``SpinnerConfig`` fields (which only fill options still at
+    their defaults, and warned at config construction).
+    """
+    opts = options if options is not None else EngineOptions()
+    over = {}
+    if engine != "auto":
+        over["engine"] = engine
+    if chunk_size is not None:
+        over["chunk_size"] = chunk_size
+    if mesh is not None:
+        over["mesh"] = mesh
+    if axis != "data":
+        over["axis"] = axis
+    # deprecated config fields fill in wherever the options are defaulted
+    if opts.score_backend == "xla":
+        if cfg.score_backend is not None:
+            over["score_backend"] = cfg.score_backend
+        elif cfg.use_kernel:
+            over["score_backend"] = "pallas"
+    if cfg.label_exchange is not None and opts.label_exchange == "auto":
+        over["label_exchange"] = cfg.label_exchange
+    if cfg.delta_cap is not None and opts.delta_cap is None:
+        over["delta_cap"] = cfg.delta_cap
+    if cfg.sharded_noise is not None and opts.sharded_noise == "replicated":
+        over["sharded_noise"] = cfg.sharded_noise
+    if over:
+        opts = dataclasses.replace(opts, **over)
+    return _scrub_legacy(cfg), opts
 
 
 @dataclasses.dataclass
@@ -161,9 +217,9 @@ def make_step(graph: Graph, cfg: SpinnerConfig) -> Callable:
     """Build the jitted two-phase iteration for a fixed graph/config.
 
     Kept for host-loop and benchmark callers; the math lives in
-    ``engine.make_iteration`` and is shared with the fused runners, and
-    the jitted step is cached per (graph, cfg) so repeated host-engine
-    runs do not re-trace.
+    ``engine.make_vertex_update`` and is shared with the fused runners,
+    and the jitted program is cached globally per (cfg statics, backend)
+    so repeated host-engine runs do not re-trace.
     """
     return _engine.cached_jit_step(graph, cfg)
 
@@ -198,65 +254,6 @@ def prepare_init(graph: Graph, cfg: SpinnerConfig,
     return labels, loads, key
 
 
-def _partition_host(graph: Graph, cfg: SpinnerConfig, labels, loads, key,
-                    record_history: bool,
-                    callback: Optional[Callable[[int, dict], None]],
-                    ) -> PartitionResult:
-    """Legacy per-iteration host loop -- the fused engines' oracle.
-
-    The halting compare runs in float32 (matching the on-device
-    ``engine._halting_update`` bit for bit), so host and fused engines are
-    guaranteed to agree on iteration counts, not just label trajectories.
-    """
-    step = make_step(graph, cfg)
-    best_score = np.float32(-np.inf)
-    eps32 = np.float32(cfg.eps)
-    stall = 0
-    history: List[dict] = []
-    halted = False
-    total_messages = 0.0
-    it = 0
-    for it in range(1, cfg.max_iters + 1):
-        key, k_it = jax.random.split(key)
-        labels, loads, score_g, n_mig, mig_mass = step(labels, loads, k_it)
-        score_g = np.float32(score_g)
-        total_messages += float(mig_mass)
-        if record_history or callback is not None:
-            lab_np = np.asarray(labels)
-            entry = {
-                "iteration": it,
-                "score": float(score_g),
-                "migrations": int(n_mig),
-                "message_mass": float(mig_mass),
-                "phi": metrics.phi(graph, lab_np),
-                "rho": metrics.rho(graph, lab_np, cfg.k),
-            }
-            if record_history:
-                history.append(entry)
-            if callback is not None:
-                callback(it, entry)
-        # Halting (Section 3.3): relative improvement below eps for > w iters.
-        # f32 arithmetic mirroring engine._halting_update; on iteration 1
-        # best_score is -inf, tol is inf, best + tol is NaN and the compare
-        # is False (the invalid-op warning is expected and suppressed).
-        with np.errstate(invalid="ignore"):
-            tol = eps32 * np.maximum(np.float32(1.0), np.abs(best_score))
-            improved = score_g > best_score + tol
-        best_score = np.maximum(best_score, score_g)
-        if improved:
-            stall = 0
-        else:
-            stall += 1
-            if stall >= cfg.halt_window:
-                halted = True
-                break
-
-    return PartitionResult(labels=np.asarray(labels),
-                           loads=np.asarray(loads),
-                           iterations=it, halted=halted, history=history,
-                           total_messages=total_messages, engine="host")
-
-
 def partition(graph: Graph,
               cfg: SpinnerConfig,
               init: Optional[np.ndarray] = None,
@@ -264,10 +261,16 @@ def partition(graph: Graph,
               callback: Optional[Callable[[int, dict], None]] = None,
               engine: str = "auto",
               chunk_size: Optional[int] = None,
-              mesh: Optional[jax.sharding.Mesh] = None,
+              mesh=None,
               axis: str = "data",
+              options: Optional[EngineOptions] = None,
               ) -> PartitionResult:
     """Run Spinner to a stable state (Sections 3.3, 4.1).
+
+    A thin wrapper that opens a throwaway ``PartitionSession`` with the
+    resolved options and runs it once -- so repeat calls share the
+    session machinery's compiled programs and uploads, and results are
+    bit-identical to the same call through a live session.
 
     ``engine`` selects the runner (see module docstring): "fused" executes
     the whole run as one ``lax.while_loop`` device dispatch (and therefore
@@ -278,68 +281,18 @@ def partition(graph: Graph,
     ``chunk_size`` iterations per dispatch recording on-device history,
     "host" is the legacy per-iteration loop, and "auto" picks "chunked"
     when ``record_history``/``callback`` need per-iteration traces and
-    "fused" otherwise.
+    "fused" otherwise.  ``options`` carries the same knobs (plus score
+    backend, label exchange, shape padding) as one object; per-call
+    kwargs win over it.
 
     ``record_history=None`` (default) means "record where the engine can":
     True for host/chunked, False for fused.  Explicitly requesting
     ``record_history=True`` or a ``callback`` together with
     ``engine="fused"`` is an error rather than a silent empty history.
     """
-    labels, loads, key = prepare_init(graph, cfg, init)
-    if engine == "auto":
-        if mesh is not None:
-            engine = "sharded"   # an explicit mesh implies the sharded runner
-        else:
-            engine = "fused" if (record_history is False and callback is None) \
-                else "chunked"
-    if mesh is not None and engine != "sharded":
-        raise ValueError(
-            f"mesh= is only meaningful for engine='sharded', got {engine!r}")
-    if engine == "host":
-        return _partition_host(graph, cfg, labels, loads, key,
-                               record_history is not False, callback)
-
-    if engine in ("fused", "sharded"):
-        # "chunked" is single-device only, so on a mesh there is no
-        # per-iteration visibility at all -- say so instead of pointing at
-        # an option the mesh check forbids.
-        remedy = ("per-iteration history/callbacks are not available on a "
-                  "device mesh; run engine='chunked' without mesh= for "
-                  "traces" if engine == "sharded"
-                  else "use engine='chunked' (or 'auto') instead")
-        if callback is not None:
-            raise ValueError(
-                f"engine={engine!r} cannot invoke a per-iteration "
-                f"callback; {remedy}")
-        if record_history is True:
-            raise ValueError(
-                f"engine={engine!r} cannot record per-iteration history; "
-                f"{remedy}")
-        if engine == "sharded":
-            state = _engine.run_sharded(graph, cfg, labels, loads, key,
-                                        mesh=mesh, axis=axis)
-        else:
-            state = _engine.run_fused(graph, cfg, labels, loads, key)
-        history: List[dict] = []
-    elif engine == "chunked":
-        record = record_history is not False
-        state, history = _engine.run_chunked(
-            graph, cfg, labels, loads, key,
-            chunk_size=chunk_size or _engine.DEFAULT_CHUNK,
-            callback=callback, record=record)
-        if not record:
-            history = []     # callback may have forced recording internally
-    else:
-        raise ValueError(
-            f"unknown engine {engine!r}; "
-            "available: auto, fused, sharded, chunked, host")
-
-    # sharded labels come back padded to a multiple of the mesh size
-    labels_np = np.asarray(state.labels)[: graph.num_vertices]
-    return PartitionResult(labels=labels_np,
-                           loads=np.asarray(state.loads),
-                           iterations=int(state.iteration),
-                           halted=bool(state.halted), history=history,
-                           total_messages=float(state.total_messages),
-                           engine=engine,
-                           exchanged_bytes=float(state.exchanged_bytes))
+    cfg, opts = resolve_options(cfg, options, engine=engine,
+                                chunk_size=chunk_size, mesh=mesh, axis=axis)
+    from .session import PartitionSession    # lazy: session imports us
+    with PartitionSession(graph, cfg, opts) as session:
+        return session.partition(init=init, record_history=record_history,
+                                 callback=callback)

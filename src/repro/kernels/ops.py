@@ -71,28 +71,44 @@ def spinner_scores(labels: jax.Array, graph: Graph, k: int,
 # ---------------------------------------------------------------------------
 
 class ScoreBackend(Protocol):
-    """Builds the Eq. 8 numerator ``labels -> (V, k) scores`` closure.
+    """The Eq. 8 numerator as (graph-independent closure, per-graph args).
 
-    ``build`` runs once per (graph, k) at trace time -- any preprocessing
-    (tiling, padding, device upload) happens there, and the returned
-    closure must be pure and jit-traceable so runners can inline it into
-    ``lax.while_loop`` / ``lax.scan`` bodies.
+    The device-resident engine compiles runners once per SHAPE BUCKET and
+    reuses them across graphs (see ``repro.core.session``), so a backend
+    is split in two:
 
-    ``build_sharded`` is the mesh-parallel counterpart: given the
-    ``ShardedGraph`` layout (see ``repro.core.distributed``) and the
-    exchange plan's per-edge ``dst_index`` (global vertex ids for
-    all-gather/delta, halo-remapped slots for halo), it returns
-    ``(edge_arrays, scores_fn)``.  ``edge_arrays`` are device arrays with
-    leading dimension ndev, threaded through ``shard_map`` with
-    ``PartitionSpec(axis)`` on that dimension; ``scores_fn(lookup,
-    *edge_blocks) -> (v_per_dev, k)`` computes the numerator for THIS
-    device's vertex range from its edge blocks (leading dim stripped),
-    indexing the plan's ``lookup`` array with the (blocked) ``dst_index``.
-    Backends without a sharded path raise ``NotImplementedError`` at
-    build time (a clear trace-time failure, not a silent fallback).
+      * ``make_scores(k)`` / ``make_sharded_scores(k, v_local)`` return a
+        pure traced closure ``(labels_or_lookup, *edge_args) -> scores``
+        that reads only static python ints (k, tile sizes, interpret
+        mode) off the backend -- its identity for the engine's program
+        cache is ``signature()``;
+      * ``graph_args(graph, k, pad)`` / ``sharded_graph_args(sg, k,
+        dst_index, pad)`` build the per-graph device arrays the closure
+        consumes.  ``pad=True`` buckets derived shapes (the Pallas chunk
+        count) so a session rebinding a grown graph keeps the compile
+        shape.  For the sharded form the arrays carry a leading ndev
+        dimension and are threaded through ``shard_map`` with
+        ``PartitionSpec(axis)``; ``dst_index`` is the exchange plan's
+        per-edge index (global vertex ids for all-gather/delta,
+        halo-remapped slots for halo).
+
+    ``build`` / ``build_sharded`` are the legacy closure forms (args
+    baked in), kept for standalone callers.
     """
 
     name: str
+
+    def signature(self) -> tuple: ...
+
+    def make_scores(self, k: int) -> Callable: ...
+
+    def graph_args(self, graph: Graph, k: int, pad: bool = False
+                   ) -> tuple: ...
+
+    def make_sharded_scores(self, k: int, v_local: int) -> Callable: ...
+
+    def sharded_graph_args(self, sg, k: int, dst_index: np.ndarray,
+                           pad: bool = False) -> tuple: ...
 
     def build(self, graph: Graph, k: int
               ) -> Callable[[jax.Array], jax.Array]: ...
@@ -107,82 +123,114 @@ class XlaScatterBackend:
 
     name: str = "xla"
 
-    def build(self, graph: Graph, k: int) -> Callable[[jax.Array], jax.Array]:
-        from repro.core.engine import device_edges   # shared upload cache
-        src, dst, w, _ = device_edges(graph)
-        V = graph.num_vertices
+    def signature(self) -> tuple:
+        return ("xla",)
 
-        def scores(labels: jax.Array) -> jax.Array:
-            return ref.spinner_scores_ref(labels, src, dst, w, V, k)
-
+    def make_scores(self, k: int) -> Callable:
+        def scores(labels, src, dst, w):
+            return ref.spinner_scores_ref(labels, src, dst, w,
+                                          labels.shape[0], k)
         return scores
 
-    def build_sharded(self, sg, k: int, dst_index: np.ndarray) -> tuple:
+    def graph_args(self, graph: Graph, k: int, pad: bool = False) -> tuple:
+        from repro.core.engine import device_edges   # shared upload cache
+        src, dst, w, _ = device_edges(graph)
+        return (src, dst, w)
+
+    def make_sharded_scores(self, k: int, v_local: int) -> Callable:
         """Local scatter-add over this device's edge shard.
 
         Row-for-row ``spinner_scores_ref`` restricted to the local vertex
         range (zero-weight padding rows add 0 to row 0 and change
         nothing), so on a 1-device mesh -- where the shard is the whole
-        CSR-ordered edge list -- the result is bit-identical to
-        ``build``'s unsharded path.
+        CSR-ordered edge list -- the result is bit-identical to the
+        unsharded path.
         """
+        def scores(lookup, src_local, dst_idx, w):
+            nbr = lookup[dst_idx]
+            return jnp.zeros((v_local, k),
+                             jnp.float32).at[src_local, nbr].add(w)
+        return scores
+
+    def sharded_graph_args(self, sg, k: int, dst_index: np.ndarray,
+                           pad: bool = False) -> tuple:
         from repro.core.distributed import device_upload   # lazy: no cycle
-        vl = sg.v_per_dev
         # the allgather/delta plans index with the global dst ids verbatim
         # (dst_index IS sg.dst), so reuse the cached upload; halo's
         # remapped slots are a genuinely different array
         dst = (device_upload(sg, "dst") if dst_index is sg.dst
                else jnp.asarray(np.asarray(dst_index, np.int32)))
-        args = (device_upload(sg, "src_local"), dst,
+        return (device_upload(sg, "src_local"), dst,
                 device_upload(sg, "weight"))
 
-        def scores(lookup: jax.Array, src_local: jax.Array,
-                   dst_idx: jax.Array, w: jax.Array) -> jax.Array:
-            nbr = lookup[dst_idx]
-            return jnp.zeros((vl, k), jnp.float32).at[src_local, nbr].add(w)
+    def build(self, graph: Graph, k: int) -> Callable[[jax.Array], jax.Array]:
+        args = self.graph_args(graph, k)
+        fn = self.make_scores(k)
+        return lambda labels: fn(labels, *args)
 
-        return args, scores
+    def build_sharded(self, sg, k: int, dst_index: np.ndarray) -> tuple:
+        args = self.sharded_graph_args(sg, k, dst_index)
+        return args, self.make_sharded_scores(k, sg.v_per_dev)
 
 
 @dataclasses.dataclass(frozen=True)
 class PallasTiledBackend:
-    """ComputeScores via the tiled one-hot-matmul Pallas kernel."""
+    """ComputeScores via the tiled one-hot-matmul Pallas kernel.
+
+    Edge weights are small integers ({1, 2}, Eq. 3), so the f32 MXU
+    accumulation is exact and the result is bit-identical to the XLA
+    scatter-add backend regardless of summation order -- including on
+    per-shard retilings inside ``shard_map``.
+    """
 
     name: str = "pallas"
     tile_v: int = 128
     tile_e: int = 128
     interpret: Optional[bool] = None   # None -> compiled on TPU else interpret
 
-    def build(self, graph: Graph, k: int) -> Callable[[jax.Array], jax.Array]:
-        tiled = build_tiled_csr(graph, tile_v=self.tile_v, tile_e=self.tile_e)
-        return functools.partial(spinner_scores_tiled, tiled=tiled, k=k,
-                                 interpret=self.interpret)
+    def _interpret(self) -> bool:
+        return (self.interpret if self.interpret is not None
+                else _default_interpret())
 
-    def build_sharded(self, sg, k: int, dst_index: np.ndarray) -> tuple:
-        """Per-shard retiled CSR + the kernel launched inside shard_map.
+    def signature(self) -> tuple:
+        return ("pallas", self.tile_v, self.tile_e, self._interpret())
 
-        Each device's edge shard is retiled over its local vertex range
-        (``build_sharded_tiled_csr``) and the same tiled one-hot-matmul
-        kernel runs per device against the exchange plan's lookup array.
-        Edge weights are small integers ({1, 2}, Eq. 3), so the f32 MXU
-        accumulation is exact and the result is bit-identical to the XLA
-        scatter-add backend regardless of summation order.
-        """
-        st = build_sharded_tiled_csr(sg, dst_index, tile_v=self.tile_v,
-                                     tile_e=self.tile_e)
-        interpret = (self.interpret if self.interpret is not None
-                     else _default_interpret())
+    def make_scores(self, k: int) -> Callable:
         k_pad = round_up(max(k, 1), 128)
-        args = tuple(map(jnp.asarray, (st.src_local, st.dst, st.weight,
+        interpret = self._interpret()
+
+        def scores(labels, src_local, dst, w, perm):
+            return scores_from_tiles(labels, src_local, dst, w, perm,
+                                     tile_v=self.tile_v, k_pad=k_pad, k=k,
+                                     interpret=interpret)
+        return scores
+
+    def graph_args(self, graph: Graph, k: int, pad: bool = False) -> tuple:
+        tiled = build_tiled_csr(graph, tile_v=self.tile_v,
+                                tile_e=self.tile_e,
+                                pad_chunks=4 if pad else 1)
+        return tuple(map(jnp.asarray, (tiled.src_local, tiled.dst,
+                                       tiled.weight, tiled.perm)))
+
+    def make_sharded_scores(self, k: int, v_local: int) -> Callable:
+        return self.make_scores(k)     # perm is (v_local,): same pipeline
+
+    def sharded_graph_args(self, sg, k: int, dst_index: np.ndarray,
+                           pad: bool = False) -> tuple:
+        st = build_sharded_tiled_csr(sg, dst_index, tile_v=self.tile_v,
+                                     tile_e=self.tile_e,
+                                     pad_chunks=4 if pad else 1)
+        return tuple(map(jnp.asarray, (st.src_local, st.dst, st.weight,
                                        st.perm)))
 
-        def scores(lookup: jax.Array, src_local: jax.Array, dst: jax.Array,
-                   w: jax.Array, perm: jax.Array) -> jax.Array:
-            return scores_from_tiles(lookup, src_local, dst, w, perm,
-                                     tile_v=st.tile_v, k_pad=k_pad, k=k,
-                                     interpret=interpret)
+    def build(self, graph: Graph, k: int) -> Callable[[jax.Array], jax.Array]:
+        args = self.graph_args(graph, k)
+        fn = self.make_scores(k)
+        return lambda labels: fn(labels, *args)
 
-        return args, scores
+    def build_sharded(self, sg, k: int, dst_index: np.ndarray) -> tuple:
+        args = self.sharded_graph_args(sg, k, dst_index)
+        return args, self.make_sharded_scores(k, sg.v_per_dev)
 
 
 SCORE_BACKENDS = {

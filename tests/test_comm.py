@@ -10,7 +10,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.core import SpinnerConfig, comm, generators
+from repro.core import EngineOptions, comm, generators
 from repro.core.distributed import shard_graph
 from repro.core.graph import build_sharded_tiled_csr
 
@@ -91,17 +91,25 @@ class TestExchangePlans:
             comm.make_exchange_plan("broadcast", sg)
 
     def test_config_resolution(self):
-        cfg = SpinnerConfig(k=4)
-        assert cfg.resolved_label_exchange(1) == "allgather"
-        assert cfg.resolved_label_exchange(8) == "delta"
-        cfg2 = dataclasses.replace(cfg, label_exchange="halo")
-        assert cfg2.resolved_label_exchange(1) == "halo"
+        opts = EngineOptions()
+        assert opts.resolved_label_exchange(1) == "allgather"
+        assert opts.resolved_label_exchange(8) == "delta"
+        opts2 = dataclasses.replace(opts, label_exchange="halo")
+        assert opts2.resolved_label_exchange(1) == "halo"
         with pytest.raises(ValueError, match="label_exchange"):
             dataclasses.replace(
-                cfg, label_exchange="bogus").resolved_label_exchange(2)
+                opts, label_exchange="bogus").resolved_label_exchange(2)
         with pytest.raises(ValueError, match="sharded_noise"):
             dataclasses.replace(
-                cfg, sharded_noise="bogus").resolved_sharded_noise()
+                opts, sharded_noise="bogus").resolved_sharded_noise()
+
+    def test_plan_signature_roundtrip(self, sg):
+        """from_signature reconstructs the traced shape ints exactly."""
+        for name in ("allgather", "halo", "delta"):
+            plan = comm.make_exchange_plan(name, sg)
+            view = comm.plan_from_signature(plan.signature())
+            assert view.signature() == plan.signature()
+            assert type(view) is type(plan)
 
 
 class TestPregelOnSharedHalo:

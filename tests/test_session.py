@@ -1,0 +1,346 @@
+"""PartitionSession coverage (PR 4).
+
+Four pillars:
+
+  * session-vs-one-shot bit parity on every engine (fused / chunked /
+    host / sharded-on-a-mesh) and every exchange plan -- the one-shot
+    wrappers open throwaway sessions with the same defaults, so a warm
+    session call must reproduce them bit for bit;
+  * shape-bucketed compile reuse: a warm ``adapt()`` on a grown graph
+    that stays inside its (V, E) bucket performs ZERO new compilations
+    (asserted via the programs' jit compilation counters), crossing a
+    bucket costs exactly one;
+  * ``adapt``/``resize``/``update`` through a live session;
+  * the SpinnerConfig -> EngineOptions split: deprecated engine knobs on
+    the config warn ``SpinnerDeprecationWarning`` and resolve into the
+    options object.
+
+Each test uses a unique ``max_iters`` so its programs are private in the
+global program cache and compile counts cannot be perturbed by other
+tests.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (EngineOptions, PartitionSession, SpinnerConfig,
+                        SpinnerDeprecationWarning, adapt, engine, generators,
+                        open_session, partition, resize, resolve_options)
+from repro.core.graph import add_edges, pad_graph, shape_bucket
+from repro.launch.mesh import make_partition_mesh
+
+
+@pytest.fixture(scope="module")
+def ws_graph():
+    return generators.watts_strogatz(600, 8, 0.2, seed=11)
+
+
+def _grow(graph, n_edges=30, new_vertices=2, seed=1):
+    """A same-bucket growth of ``graph`` (a few edges + vertices)."""
+    rng = np.random.default_rng(seed)
+    v = graph.num_vertices
+    return add_edges(graph, rng.integers(0, v, n_edges),
+                     rng.integers(0, v, n_edges),
+                     num_vertices=v + new_vertices)
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(a.labels, b.labels)
+    np.testing.assert_array_equal(a.loads, b.loads)
+    assert a.iterations == b.iterations
+    assert a.halted == b.halted
+
+
+class TestShapeBuckets:
+    def test_power_of_two_ish(self):
+        assert shape_bucket(600) == 640
+        assert shape_bucket(1024) == 1024
+        assert shape_bucket(1025) == 1280
+        assert shape_bucket(3) == 64          # floor
+        for n in (64, 100, 700, 5000, 12345):
+            b = shape_bucket(n)
+            assert b >= n
+            assert b <= 1.25 * n or n < 64    # <= 25% overhead
+            assert b % 8 == 0                 # exact 1/2/4/8-device splits
+
+    def test_pad_graph_is_a_noop_view(self):
+        g = generators.powerlaw_ba(300, 4, seed=5)
+        vb, eb = engine.graph_buckets(g)
+        p = pad_graph(g, vb, eb)
+        p.validate()
+        assert p.num_vertices == vb
+        assert p.num_directed_entries == eb
+        # pads are weightless: totals and real degrees unchanged
+        assert p.total_weight == g.total_weight
+        np.testing.assert_array_equal(p.deg_w[: g.num_vertices], g.deg_w)
+        assert (p.deg_w[g.num_vertices:] == 0).all()
+        real = p.weight > 0
+        np.testing.assert_array_equal(p.src[real], g.src)
+        np.testing.assert_array_equal(p.dst[real], g.dst)
+
+
+class TestSessionOneShotParity:
+    @pytest.mark.parametrize("eng", ["fused", "chunked", "host"])
+    def test_single_device_engines(self, ws_graph, eng):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=61)
+        opts = EngineOptions(engine=eng)
+        one = partition(ws_graph, cfg, record_history=False, engine=eng)
+        with PartitionSession(ws_graph, cfg, opts) as s:
+            res = s.partition(record_history=False)
+        _assert_same(one, res)
+
+    def test_sharded_mesh(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=62)
+        mesh = make_partition_mesh(1)
+        one = partition(ws_graph, cfg, record_history=False,
+                        engine="sharded", mesh=mesh)
+        with PartitionSession(ws_graph, cfg,
+                              EngineOptions(engine="sharded",
+                                            mesh=mesh)) as s:
+            res = s.partition(record_history=False)
+        _assert_same(one, res)
+
+    def test_chunked_history_matches(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=63)
+        one = partition(ws_graph, cfg, record_history=True,
+                        engine="chunked", chunk_size=16)
+        with PartitionSession(ws_graph, cfg,
+                              EngineOptions(engine="chunked",
+                                            chunk_size=16)) as s:
+            res = s.partition(record_history=True)
+        _assert_same(one, res)
+        assert one.history == res.history
+
+
+class TestWarmAdaptBitParity:
+    """The acceptance criterion: a warm ``adapt()`` on a same-bucket grown
+    graph performs zero new compilations and is bit-identical to one-shot
+    ``adapt()`` -- for every engine and every exchange plan."""
+
+    @pytest.mark.parametrize("eng", ["fused", "chunked", "host"])
+    def test_engines(self, ws_graph, eng):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=64)
+        opts = EngineOptions(engine=eng)
+        with PartitionSession(ws_graph, cfg, opts) as s:
+            base = s.partition(record_history=False)
+            g2 = _grow(ws_graph)
+            assert engine.graph_buckets(g2) == engine.graph_buckets(ws_graph)
+            before = s.compiles
+            warm = s.adapt(g2, record_history=False)
+            assert s.compiles == before, \
+                f"warm adapt recompiled on engine={eng}"
+            one = adapt(g2, base.labels, cfg, engine=eng,
+                        record_history=False)
+            _assert_same(one, warm)
+
+    @pytest.mark.parametrize("plan", ["allgather", "halo", "delta"])
+    def test_sharded_exchange_plans(self, ws_graph, plan):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=65)
+        mesh = make_partition_mesh(1)
+        opts = EngineOptions(engine="sharded", mesh=mesh,
+                             label_exchange=plan)
+        with PartitionSession(ws_graph, cfg, opts) as s:
+            base = s.partition(record_history=False)
+            g2 = _grow(ws_graph)
+            before = s.compiles
+            warm = s.adapt(g2, record_history=False)
+            assert s.compiles == before, \
+                f"warm adapt recompiled on plan={plan}"
+            one = adapt(g2, base.labels, cfg, record_history=False,
+                        options=opts)
+            _assert_same(one, warm)
+
+    def test_default_mesh_sharded(self, ws_graph):
+        """Sharded session on the default (all local devices) mesh."""
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=66)
+        mesh = make_partition_mesh()
+        opts = EngineOptions(engine="sharded", mesh=mesh)
+        with PartitionSession(ws_graph, cfg, opts) as s:
+            base = s.partition(record_history=False)
+            g2 = _grow(ws_graph)
+            before = s.compiles
+            warm = s.adapt(g2, record_history=False)
+            assert s.compiles == before
+            one = adapt(g2, base.labels, cfg, record_history=False,
+                        engine="sharded", mesh=mesh)
+            _assert_same(one, warm)
+
+
+class TestBucketReuse:
+    def test_cold_run_compiles_once(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=67)
+        with open_session(ws_graph, cfg) as s:
+            assert s.compiles == 0
+            s.partition(record_history=False)
+            assert s.compiles == 1
+
+    def test_cross_bucket_compiles_exactly_once(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=68)
+        with open_session(ws_graph, cfg) as s:
+            s.partition(record_history=False)
+            base = s.compiles
+            # grow past the vertex bucket: 600 -> bucket 640; 650 -> 768
+            g_big = _grow(ws_graph, n_edges=40,
+                          new_vertices=700 - ws_graph.num_vertices, seed=2)
+            assert engine.graph_buckets(g_big)[0] != \
+                engine.graph_buckets(ws_graph)[0]
+            s.adapt(g_big, record_history=False)
+            assert s.compiles == base + 1
+            # ... and a further same-bucket growth is free again
+            g_big2 = _grow(g_big, seed=3)
+            assert engine.graph_buckets(g_big2) == engine.graph_buckets(g_big)
+            before = s.compiles
+            s.adapt(g_big2, record_history=False)
+            assert s.compiles == before
+
+    def test_two_sessions_share_programs(self, ws_graph):
+        """The program cache is global: a second session over a same-bucket
+        graph compiles nothing (cross-session amortization)."""
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=69)
+        with open_session(ws_graph, cfg) as s1:
+            s1.partition(record_history=False)
+            assert s1.compiles == 1
+        g_other = generators.watts_strogatz(610, 8, 0.2, seed=12)
+        assert engine.graph_buckets(g_other) == engine.graph_buckets(ws_graph)
+        with open_session(g_other, cfg) as s2:
+            s2.partition(record_history=False)
+            assert s2.compiles == 0
+
+
+class TestLiveSession:
+    def test_adapt_resize_update_stream(self, ws_graph):
+        cfg = SpinnerConfig(k=6, seed=3, max_iters=70)
+        with open_session(ws_graph, cfg) as s:
+            r0 = s.partition(record_history=False)
+            assert s.labels is not None
+            # adapt via edge_updates applies add_edges internally
+            rng = np.random.default_rng(7)
+            r1 = s.adapt(edge_updates=(rng.integers(0, 600, 20),
+                                       rng.integers(0, 600, 20)),
+                         record_history=False)
+            assert r1.labels.shape == (600,)
+            # update() stages a delta; the next adapt() sees it
+            s.update([600, 601], [0, 1], num_vertices=602)
+            r2 = s.adapt(record_history=False)
+            assert r2.labels.shape == (602,)
+            # resize re-keys the session to the new k
+            r3 = s.resize(8, record_history=False)
+            assert r3.labels.max() < 8
+            assert s.cfg.k == 8
+            assert s.stats()["k"] == 8
+            # ... and parity with the one-shot elastic path
+            one, _ = resize(s.graph, r2.labels,
+                            SpinnerConfig(k=8, seed=3, max_iters=70),
+                            k_old=6, record_history=False)
+            np.testing.assert_array_equal(one.labels, r3.labels)
+            assert r0.iterations > 0 and s.stats()["runs"] == 4
+
+    def test_adapt_requires_prev(self, ws_graph):
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=8)
+        with open_session(ws_graph, cfg) as s:
+            with pytest.raises(ValueError, match="previous labels"):
+                s.adapt(_grow(ws_graph))
+            # the failed adapt must NOT have swapped the session's graph
+            assert s.graph is ws_graph
+
+    def test_resize_on_host_engine(self, ws_graph):
+        """resize() must run the NEW k on every engine -- the host driver
+        takes the per-run cfg, not the session's yet-uncommitted one."""
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=12)
+        with open_session(ws_graph, cfg, EngineOptions(engine="host")) as s:
+            s.partition(record_history=False)
+            res = s.resize(6, record_history=False)
+            assert res.loads.shape == (6,)
+            assert res.labels.max() < 6
+            assert s.cfg.k == 6
+
+    def test_failed_resize_does_not_commit_k(self, ws_graph):
+        """A rejected resize call (bad engine/history combination) must
+        leave the session's config -- and therefore the label range of
+        subsequent runs -- untouched."""
+        cfg = SpinnerConfig(k=8, seed=0, max_iters=10)
+        with open_session(ws_graph, cfg,
+                          EngineOptions(engine="fused")) as s:
+            s.partition(record_history=False)
+            with pytest.raises(ValueError, match="history"):
+                s.resize(4, record_history=True)
+            assert s.cfg.k == 8
+            res = s.adapt(record_history=False)
+            assert res.labels.max() < 8 and res.loads.shape == (8,)
+
+    def test_closed_session_raises(self, ws_graph):
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=8)
+        s = open_session(ws_graph, cfg)
+        s.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            s.partition()
+
+    def test_stats_reports_buckets_and_exchange(self, ws_graph):
+        mesh = make_partition_mesh(1)
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=71)
+        opts = EngineOptions(engine="sharded", mesh=mesh,
+                             label_exchange="halo")
+        with open_session(ws_graph, cfg, opts) as s:
+            s.partition(record_history=False)
+            st = s.stats()
+            assert st["bucket"] == engine.graph_buckets(ws_graph)
+            assert st["padded_shape"][0] == st["bucket"][0]
+            assert st["compiles"] >= 1 and st["runs"] == 1
+            assert st["exchange"]["label_exchange"] == "halo"
+            assert st["last"]["halted"] in (True, False)
+
+    def test_pad_none_keeps_exact_shapes(self, ws_graph):
+        """pad='none' is the escape hatch: exact shapes, same quality."""
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=72)
+        opts = EngineOptions(pad="none")
+        with open_session(ws_graph, cfg, opts) as s:
+            res = s.partition(record_history=False)
+            assert s.stats()["padded_shape"] == (
+                ws_graph.num_vertices, ws_graph.num_directed_entries)
+            assert res.labels.shape == (ws_graph.num_vertices,)
+
+
+class TestConfigSplitShim:
+    def test_use_kernel_warns_and_resolves(self):
+        with pytest.warns(SpinnerDeprecationWarning, match="use_kernel"):
+            cfg = SpinnerConfig(k=4, use_kernel=True)
+        cfg2, opts = resolve_options(cfg)
+        assert opts.score_backend == "pallas"
+        assert cfg2.use_kernel is False          # scrubbed downstream
+
+    def test_engine_knobs_warn_and_resolve(self):
+        with pytest.warns(SpinnerDeprecationWarning,
+                          match="label_exchange"):
+            cfg = SpinnerConfig(k=4, label_exchange="halo", delta_cap=9,
+                                sharded_noise="folded",
+                                score_backend="pallas")
+        _, opts = resolve_options(cfg)
+        assert opts.label_exchange == "halo"
+        assert opts.delta_cap == 9
+        assert opts.sharded_noise == "folded"
+        assert opts.score_backend == "pallas"
+
+    def test_clean_config_does_not_warn(self):
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", SpinnerDeprecationWarning)
+            cfg = SpinnerConfig(k=4, c=1.1, eps=1e-4, seed=3)
+            resolve_options(cfg, EngineOptions(score_backend="pallas"))
+
+    def test_legacy_config_still_runs_identically(self, ws_graph):
+        """The shim is behavior-preserving: use_kernel=True equals the
+        EngineOptions(score_backend='pallas') spelling bit for bit."""
+        with pytest.warns(SpinnerDeprecationWarning):
+            cfg_old = SpinnerConfig(k=4, seed=2, max_iters=20,
+                                    use_kernel=True)
+        cfg_new = SpinnerConfig(k=4, seed=2, max_iters=20)
+        a = partition(ws_graph, cfg_old, record_history=False)
+        b = partition(ws_graph, cfg_new, record_history=False,
+                      options=EngineOptions(score_backend="pallas"))
+        _assert_same(a, b)
+
+    def test_per_call_kwargs_win_over_options(self, ws_graph):
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=9)
+        res = partition(ws_graph, cfg, record_history=False,
+                        engine="host",
+                        options=EngineOptions(engine="fused"))
+        assert res.engine == "host"

@@ -3,23 +3,26 @@ multi-device balance/dispatch semantics (subprocess, 8 host devices),
 exchange-plan parity (allgather / halo / delta walk identical
 trajectories, with halo/delta strictly fewer bytes on the wire), the
 sharded Pallas score backend (bit-identical to the XLA scatter-add),
-mesh-keyed runner caches, and adapt()/resize() on the sharded path.
+shape-keyed program-cache reuse, and adapt()/resize() on the sharded path.
 
 The 1-device parity tests are the backbone of the sharded refactor: a
-1-device mesh introduces no padding and makes every collective the
-identity, so ``engine="sharded"`` must reproduce ``engine="fused"``
-BIT FOR BIT -- labels, loads, iteration counts, halting flags.  Any
-drift means the shared ``make_vertex_update`` math forked.
-"""
-import dataclasses
+1-device mesh makes every collective the identity over the same padded
+layout the fused engine runs, so ``engine="sharded"`` must reproduce
+``engine="fused"`` BIT FOR BIT -- labels, loads, iteration counts,
+halting flags.  Any drift means the shared ``make_vertex_update`` math
+forked.
 
+Engine/runtime knobs (score backend, label exchange, noise mode) are
+passed via ``EngineOptions`` -- the deprecated ``SpinnerConfig`` fields
+are covered separately by tests/test_session.py's shim tests.
+"""
 import numpy as np
 import pytest
 
 import jax
 
-from repro.core import (SpinnerConfig, adapt, engine, generators, metrics,
-                        partition, resize)
+from repro.core import (EngineOptions, SpinnerConfig, adapt, engine,
+                        generators, metrics, partition, resize)
 from repro.core.graph import add_edges
 from repro.launch.mesh import make_partition_mesh
 
@@ -120,9 +123,9 @@ class TestShardedApi:
         cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
         xla = partition(ws_graph, cfg, record_history=False,
                         engine="sharded", mesh=mesh1)
-        cfg_p = dataclasses.replace(cfg, score_backend="pallas")
-        pal = partition(ws_graph, cfg_p, record_history=False,
-                        engine="sharded", mesh=mesh1)
+        pal = partition(ws_graph, cfg, record_history=False,
+                        engine="sharded", mesh=mesh1,
+                        options=EngineOptions(score_backend="pallas"))
         np.testing.assert_array_equal(xla.labels, pal.labels)
         np.testing.assert_array_equal(xla.loads, pal.loads)
         assert xla.iterations == pal.iterations
@@ -133,10 +136,9 @@ class TestShardedApi:
         base = partition(pl_graph, cfg, record_history=False,
                          engine="sharded", mesh=mesh1)
         for mode in ("halo", "delta"):
-            cfg_m = dataclasses.replace(cfg, score_backend="pallas",
-                                        label_exchange=mode)
-            res = partition(pl_graph, cfg_m, record_history=False,
-                            engine="sharded", mesh=mesh1)
+            opts = EngineOptions(score_backend="pallas", label_exchange=mode)
+            res = partition(pl_graph, cfg, record_history=False,
+                            engine="sharded", mesh=mesh1, options=opts)
             np.testing.assert_array_equal(base.labels, res.labels)
             assert base.iterations == res.iterations
 
@@ -150,9 +152,9 @@ class TestExchangeModes:
         cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
         results = {}
         for mode in ("allgather", "halo", "delta"):
-            cfg_m = dataclasses.replace(cfg, label_exchange=mode)
-            results[mode] = partition(ws_graph, cfg_m, record_history=False,
-                                      engine="sharded", mesh=mesh1)
+            results[mode] = partition(
+                ws_graph, cfg, record_history=False, engine="sharded",
+                mesh=mesh1, options=EngineOptions(label_exchange=mode))
         for mode in ("halo", "delta"):
             np.testing.assert_array_equal(results["allgather"].labels,
                                           results[mode].labels)
@@ -165,62 +167,68 @@ class TestExchangeModes:
     def test_single_device_exchanges_zero_bytes(self, ws_graph, mesh1):
         cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
         for mode in ("allgather", "halo", "delta"):
-            cfg_m = dataclasses.replace(cfg, label_exchange=mode)
-            res = partition(ws_graph, cfg_m, record_history=False,
-                            engine="sharded", mesh=mesh1)
+            res = partition(ws_graph, cfg, record_history=False,
+                            engine="sharded", mesh=mesh1,
+                            options=EngineOptions(label_exchange=mode))
             assert res.exchanged_bytes == 0.0, mode
 
     def test_unknown_mode_rejected(self, ws_graph, mesh1):
-        cfg = SpinnerConfig(k=4, seed=0, max_iters=5,
-                            label_exchange="bogus")
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=5)
         with pytest.raises(ValueError, match="label_exchange"):
             partition(ws_graph, cfg, record_history=False, engine="sharded",
-                      mesh=mesh1)
+                      mesh=mesh1,
+                      options=EngineOptions(label_exchange="bogus"))
 
     def test_folded_noise_runs_and_balances(self, ws_graph, mesh1):
         """The O(V/ndev) folded noise stream is a different (still
         deterministic) draw: no bit parity, but quality must hold."""
-        cfg = SpinnerConfig(k=6, seed=2, max_iters=80,
-                            sharded_noise="folded")
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=80)
+        opts = EngineOptions(sharded_noise="folded")
         res = partition(ws_graph, cfg, record_history=False,
-                        engine="sharded", mesh=mesh1)
+                        engine="sharded", mesh=mesh1, options=opts)
         res2 = partition(ws_graph, cfg, record_history=False,
-                         engine="sharded", mesh=mesh1)
+                         engine="sharded", mesh=mesh1, options=opts)
         np.testing.assert_array_equal(res.labels, res2.labels)
         assert res.halted
         assert metrics.rho(ws_graph, res.labels, cfg.k) < cfg.c + 0.1
 
     def test_bad_noise_mode_rejected(self, ws_graph, mesh1):
-        cfg = SpinnerConfig(k=4, seed=0, max_iters=5,
-                            sharded_noise="bogus")
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=5)
         with pytest.raises(ValueError, match="sharded_noise"):
             partition(ws_graph, cfg, record_history=False, engine="sharded",
-                      mesh=mesh1)
+                      mesh=mesh1,
+                      options=EngineOptions(sharded_noise="bogus"))
 
 
-class TestMeshKeyedCache:
+class TestProgramCache:
+    """Compiled sharded programs are cached globally per (cfg statics,
+    backend, mesh, axis, plan signature) -- graph data arrives as traced
+    arguments, so seed sweeps and repeat runs never re-trace (the PR 4
+    successor of the old per-graph runner caches)."""
+
+    def _program(self, graph, cfg, mesh, axis="data"):
+        runner = engine.make_sharded_runner(graph, cfg, mesh, axis)
+        return runner.program
+
     def test_cache_keyed_per_mesh(self, ws_graph):
         cfg = SpinnerConfig(k=6, seed=21, max_iters=17)
         mesh_a = make_partition_mesh(1)
         partition(ws_graph, cfg, record_history=False, engine="sharded",
                   mesh=mesh_a)
-        key = (id(ws_graph), "sharded", engine._cache_cfg(cfg), mesh_a,
-               "data")
-        assert key in engine._RUNNER_CACHE
-        runner = engine._RUNNER_CACHE[key][1]
+        prog = self._program(ws_graph, cfg, mesh_a)
+        compiles = prog.compiles()
+        assert compiles >= 1
         # meshes compare by value: an identical rebuild hits the same entry
         mesh_b = make_partition_mesh(1)
         partition(ws_graph, cfg, record_history=False, engine="sharded",
                   mesh=mesh_b)
-        assert engine._RUNNER_CACHE[key][1] is runner
-        # a different axis name is a different compiled runner
+        assert self._program(ws_graph, cfg, mesh_b) is prog
+        assert prog.compiles() == compiles
+        # a different axis name is a different compiled program
         mesh_c = make_partition_mesh(1, axis="vtx")
         partition(ws_graph, cfg, record_history=False, engine="sharded",
                   mesh=mesh_c, axis="vtx")
-        key_c = (id(ws_graph), "sharded", engine._cache_cfg(cfg), mesh_c,
-                 "vtx")
-        assert key_c in engine._RUNNER_CACHE
-        assert engine._RUNNER_CACHE[key_c][1] is not runner
+        assert self._program(ws_graph, cfg, mesh_c, axis="vtx") is not prog
 
     def test_seed_sweep_shares_runner(self, ws_graph):
         mesh = make_partition_mesh(1)
@@ -228,21 +236,38 @@ class TestMeshKeyedCache:
         cfg_b = SpinnerConfig(k=6, seed=32, max_iters=19)
         partition(ws_graph, cfg_a, record_history=False, engine="sharded",
                   mesh=mesh)
-        key = (id(ws_graph), "sharded", engine._cache_cfg(cfg_a), mesh,
-               "data")
-        runner = engine._RUNNER_CACHE[key][1]
+        prog = self._program(ws_graph, cfg_a, mesh)
+        compiles = prog.compiles()
         partition(ws_graph, cfg_b, record_history=False, engine="sharded",
                   mesh=mesh)
-        assert engine._RUNNER_CACHE[key][1] is runner
+        assert self._program(ws_graph, cfg_b, mesh) is prog
+        assert prog.compiles() == compiles     # no re-trace for a new seed
+
+    def test_bucket_sweep_shares_program(self, mesh1):
+        """Two different graphs in one shape bucket share one compiled
+        sharded program (the jit cache does not grow)."""
+        cfg = SpinnerConfig(k=6, seed=51, max_iters=11)
+        g_a = generators.watts_strogatz(600, 8, 0.2, seed=3)
+        g_b = generators.watts_strogatz(610, 8, 0.2, seed=4)
+        assert engine.graph_buckets(g_a)[0] == engine.graph_buckets(g_b)[0]
+        partition(g_a, cfg, record_history=False, engine="sharded",
+                  mesh=mesh1)
+        prog = self._program(g_a, cfg, mesh1)
+        compiles = prog.compiles()
+        partition(g_b, cfg, record_history=False, engine="sharded",
+                  mesh=mesh1)
+        assert self._program(g_b, cfg, mesh1) is prog
+        if engine.graph_buckets(g_a) == engine.graph_buckets(g_b):
+            assert prog.compiles() == compiles
 
     def test_single_dispatch(self, ws_graph, monkeypatch):
         """partition(engine='sharded') invokes the runner exactly once."""
-        cfg = SpinnerConfig(k=6, seed=41, max_iters=23)   # fresh cache key
+        cfg = SpinnerConfig(k=6, seed=41, max_iters=23)
         calls = {"n": 0}
         real = engine.make_sharded_runner
 
-        def counting(graph, cfg_, mesh, axis="data", score_fn=None):
-            run = real(graph, cfg_, mesh, axis, score_fn)
+        def counting(graph, cfg_, mesh, axis="data", score_fn=None, **kw):
+            run = real(graph, cfg_, mesh, axis, score_fn, **kw)
 
             def wrapped(state):
                 calls["n"] += 1
@@ -331,8 +356,8 @@ assert mesh.size == 8
 
 calls = {"n": 0}
 real = engine.make_sharded_runner
-def counting(graph, cfg_, mesh_, axis="data", score_fn=None):
-    run = real(graph, cfg_, mesh_, axis, score_fn)
+def counting(graph, cfg_, mesh_, axis="data", score_fn=None, **kw):
+    run = real(graph, cfg_, mesh_, axis, score_fn, **kw)
     def wrapped(state):
         calls["n"] += 1
         return run(state)
@@ -355,9 +380,8 @@ print("SINGLE DISPATCH OK")
 
 
 EXCHANGE_PARITY_MULTIDEV = """
-import dataclasses
 import numpy as np
-from repro.core import SpinnerConfig, generators, partition
+from repro.core import EngineOptions, SpinnerConfig, generators, partition
 from repro.launch.mesh import make_partition_mesh
 
 # clustered graph with contiguous communities: the range partition keeps
@@ -366,12 +390,14 @@ g = generators.clustered_graph(8, 500, 0.02, 0.5, seed=5)
 cfg = SpinnerConfig(k=8, seed=1, max_iters=120)
 for ndev in (2, 4, 8):
     mesh = make_partition_mesh(ndev)
-    base = partition(g, dataclasses.replace(cfg, label_exchange="allgather"),
-                     record_history=False, engine="sharded", mesh=mesh)
+    base = partition(g, cfg, record_history=False, engine="sharded",
+                     mesh=mesh,
+                     options=EngineOptions(label_exchange="allgather"))
     ag_bpi = base.exchanged_bytes / max(1, base.iterations)
     for mode in ("halo", "delta"):
-        res = partition(g, dataclasses.replace(cfg, label_exchange=mode),
-                        record_history=False, engine="sharded", mesh=mesh)
+        res = partition(g, cfg, record_history=False, engine="sharded",
+                        mesh=mesh,
+                        options=EngineOptions(label_exchange=mode))
         np.testing.assert_array_equal(base.labels, res.labels)
         np.testing.assert_array_equal(base.loads, res.loads)
         assert res.iterations == base.iterations, (mode, ndev)
@@ -382,8 +408,8 @@ for ndev in (2, 4, 8):
               f"{ag_bpi:.0f} B/iter")
 # "auto" on a multi-device mesh resolves to delta -- same trajectory
 mesh = make_partition_mesh(8)
-base = partition(g, dataclasses.replace(cfg, label_exchange="allgather"),
-                 record_history=False, engine="sharded", mesh=mesh)
+base = partition(g, cfg, record_history=False, engine="sharded", mesh=mesh,
+                 options=EngineOptions(label_exchange="allgather"))
 auto = partition(g, cfg, record_history=False, engine="sharded", mesh=mesh)
 np.testing.assert_array_equal(base.labels, auto.labels)
 assert auto.exchanged_bytes < base.exchanged_bytes
@@ -392,9 +418,8 @@ print("EXCHANGE PARITY OK")
 
 
 PALLAS_SHARDED_MULTIDEV = """
-import dataclasses
 import numpy as np
-from repro.core import SpinnerConfig, generators, partition
+from repro.core import EngineOptions, SpinnerConfig, generators, partition
 from repro.launch.mesh import make_partition_mesh
 
 g = generators.watts_strogatz(801, 8, 0.2, seed=7)   # 801: padding on 8 dev
@@ -405,10 +430,9 @@ xla = partition(g, cfg, record_history=False, engine="sharded", mesh=mesh)
 # halo included: its remapped [local | halo] dst slots feed the per-shard
 # tiled CSR, a layout the 1-device tests can never produce (true_halo=0)
 for mode in ("allgather", "halo", "delta"):
-    cfg_p = dataclasses.replace(cfg, score_backend="pallas",
-                                label_exchange=mode)
-    pal = partition(g, cfg_p, record_history=False, engine="sharded",
-                    mesh=mesh)
+    opts = EngineOptions(score_backend="pallas", label_exchange=mode)
+    pal = partition(g, cfg, record_history=False, engine="sharded",
+                    mesh=mesh, options=opts)
     np.testing.assert_array_equal(xla.labels, pal.labels)
     np.testing.assert_array_equal(xla.loads, pal.loads)
     assert xla.iterations == pal.iterations, mode
@@ -418,13 +442,15 @@ print("PALLAS SHARDED OK")
 
 FOLDED_NOISE_MULTIDEV = """
 import numpy as np
-from repro.core import SpinnerConfig, generators, metrics, partition
+from repro.core import EngineOptions, SpinnerConfig, generators, metrics, \\
+    partition
 from repro.launch.mesh import make_partition_mesh
 
 g = generators.watts_strogatz(4001, 12, 0.2, seed=3)
-cfg = SpinnerConfig(k=8, seed=1, max_iters=120, sharded_noise="folded")
+cfg = SpinnerConfig(k=8, seed=1, max_iters=120)
 mesh = make_partition_mesh()
-res = partition(g, cfg, record_history=False, engine="sharded", mesh=mesh)
+res = partition(g, cfg, record_history=False, engine="sharded", mesh=mesh,
+                options=EngineOptions(sharded_noise="folded"))
 assert res.halted
 assert metrics.phi(g, res.labels) > 0.3
 assert metrics.rho(g, res.labels, cfg.k) < cfg.c + 0.05

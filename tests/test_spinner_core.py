@@ -2,7 +2,8 @@
 import numpy as np
 import pytest
 
-from repro.core import (SpinnerConfig, from_edges, metrics, partition)
+from repro.core import (EngineOptions, SpinnerConfig, from_edges, metrics,
+                        partition)
 from repro.core import generators
 
 
@@ -79,8 +80,9 @@ class TestPartitionQuality:
         assert metrics.phi(small_world, res.labels) > 1.5 * hash_phi
 
     def test_kernel_path_equivalent_quality(self, clustered):
-        cfg = SpinnerConfig(k=4, seed=2, max_iters=40, use_kernel=True)
-        res = partition(clustered, cfg, record_history=False)
+        cfg = SpinnerConfig(k=4, seed=2, max_iters=40)
+        res = partition(clustered, cfg, record_history=False,
+                        options=EngineOptions(score_backend="pallas"))
         assert metrics.phi(clustered, res.labels) > 0.5
         assert metrics.rho(clustered, res.labels, 4) < cfg.c + 0.05
 

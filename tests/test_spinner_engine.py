@@ -9,8 +9,8 @@ scatter-add and the Pallas kernel score backends.
 import numpy as np
 import pytest
 
-from repro.core import (SpinnerConfig, adapt, engine, generators, metrics,
-                        partition, prepare_init, resize)
+from repro.core import (EngineOptions, SpinnerConfig, adapt, engine,
+                        generators, metrics, partition, prepare_init, resize)
 from repro.core.graph import add_edges
 
 BACKENDS = ["xla", "pallas"]
@@ -29,9 +29,12 @@ def pl_graph():
 class TestFusedParity:
     @pytest.mark.parametrize("backend", BACKENDS)
     def test_watts_strogatz(self, ws_graph, backend):
-        cfg = SpinnerConfig(k=6, seed=2, max_iters=60, score_backend=backend)
-        host = partition(ws_graph, cfg, record_history=False, engine="host")
-        fused = partition(ws_graph, cfg, record_history=False, engine="fused")
+        cfg = SpinnerConfig(k=6, seed=2, max_iters=60)
+        opts = EngineOptions(score_backend=backend)
+        host = partition(ws_graph, cfg, record_history=False, engine="host",
+                         options=opts)
+        fused = partition(ws_graph, cfg, record_history=False,
+                          engine="fused", options=opts)
         np.testing.assert_array_equal(host.labels, fused.labels)
         np.testing.assert_allclose(host.loads, fused.loads, rtol=1e-5)
         assert host.iterations == fused.iterations
@@ -41,9 +44,12 @@ class TestFusedParity:
 
     @pytest.mark.parametrize("backend", BACKENDS)
     def test_powerlaw(self, pl_graph, backend):
-        cfg = SpinnerConfig(k=4, seed=3, max_iters=40, score_backend=backend)
-        host = partition(pl_graph, cfg, record_history=False, engine="host")
-        fused = partition(pl_graph, cfg, record_history=False, engine="fused")
+        cfg = SpinnerConfig(k=4, seed=3, max_iters=40)
+        opts = EngineOptions(score_backend=backend)
+        host = partition(pl_graph, cfg, record_history=False, engine="host",
+                         options=opts)
+        fused = partition(pl_graph, cfg, record_history=False,
+                          engine="fused", options=opts)
         np.testing.assert_array_equal(host.labels, fused.labels)
         assert host.iterations == fused.iterations
         # quality parity is implied by label equality; spell it out anyway
@@ -105,21 +111,22 @@ class TestChunkedParity:
         assert calls["n"] == -(-res.iterations // 16)
 
     def test_runner_cache_reuse(self, ws_graph):
-        """Same (graph, cfg) -> the compiled runner is built only once,
-        and the cache key is seed-independent (seed sweeps share it)."""
+        """Same cfg statics -> one compiled program, shared seed-to-seed
+        and run-to-run (the PR 4 global program cache: graph data are
+        traced arguments, so the jit cache never grows for a repeat)."""
         cfg = SpinnerConfig(k=6, seed=13, max_iters=20)
         a = partition(ws_graph, cfg, record_history=False, engine="fused")
-        key = (id(ws_graph), "fused", engine._cache_cfg(cfg), None, True)
-        assert key in engine._RUNNER_CACHE
-        runner = engine._RUNNER_CACHE[key][1]
+        prog = engine.make_fused_runner(ws_graph, cfg).program
+        compiles = prog.compiles()
+        assert compiles >= 1
         b = partition(ws_graph, cfg, record_history=False, engine="fused")
-        assert engine._RUNNER_CACHE[key][1] is runner
-        # a different seed reuses the same compiled runner
+        assert engine.make_fused_runner(ws_graph, cfg).program is prog
+        assert prog.compiles() == compiles
+        # a different seed reuses the same compiled program
         cfg2 = SpinnerConfig(k=6, seed=14, max_iters=20)
         partition(ws_graph, cfg2, record_history=False, engine="fused")
-        assert engine._RUNNER_CACHE[key][1] is runner
-        assert (id(ws_graph), "fused", engine._cache_cfg(cfg2), None,
-                True) == key
+        assert engine.make_fused_runner(ws_graph, cfg2).program is prog
+        assert prog.compiles() == compiles
         np.testing.assert_array_equal(a.labels, b.labels)
 
     def test_callback_sees_every_iteration(self, ws_graph):
@@ -170,10 +177,10 @@ class TestAutoEngine:
         assert res.history == []
 
     def test_unknown_backend_raises(self, ws_graph):
-        cfg = SpinnerConfig(k=4, seed=0, max_iters=5,
-                            score_backend="nonexistent")
+        cfg = SpinnerConfig(k=4, seed=0, max_iters=5)
         with pytest.raises(ValueError, match="unknown score backend"):
-            partition(ws_graph, cfg, record_history=False, engine="fused")
+            partition(ws_graph, cfg, record_history=False, engine="fused",
+                      options=EngineOptions(score_backend="nonexistent"))
 
 
 class TestIncrementalOnFusedEngine:
