@@ -24,6 +24,17 @@ converging LPA needs ever less communication, measured on device.  The
 ``sharded_pallas`` row times the per-shard tiled MXU kernel inside
 ``shard_map`` (interpret mode off-TPU, so it is a correctness/coverage
 row there, not a speed claim).
+
+The overlap matrix (subprocess, 8 forced host devices) times the
+interior/frontier overlap schedule (``EngineOptions.overlap``) against
+the sequential exchange->score step on the same mesh and plan --
+bit-identical trajectories, so the gap is pure schedule -- and reports
+the layout's frontier fraction (the share of scoring that must wait for
+the wire).  The ``staged_adapt`` row measures the session's
+double-buffered uploads: ``stage()`` issues the next snapshot's
+transfers ahead of time, so the following ``adapt()`` dispatches from a
+device-resident bind (compare against ``session_cold_adapt`` /
+``session_warm_adapt``).
 """
 from __future__ import annotations
 
@@ -106,6 +117,84 @@ def _exchange_matrix_rows(quick: bool) -> list:
     if not rows:
         rows.append({"name": "engine/exchange_matrix", "us_per_call": 0.0,
                      "derived": "FAILED: " + (err or "no MODE lines")[-200:]})
+    return rows
+
+
+OVERLAP_MATRIX_CODE = """
+import time
+import numpy as np
+from repro.core import EngineOptions, SpinnerConfig, generators, metrics, \\
+    partition
+from repro.core.distributed import shard_layout
+from repro.core.engine import padded_view
+from repro.launch.mesh import make_partition_mesh
+
+g = generators.clustered_graph(8, {n_per}, 0.02, 0.5, seed=5)
+cfg = SpinnerConfig(k=8, seed=1, max_iters={max_iters})
+mesh = make_partition_mesh()
+labels = {{}}
+for ov in ("off", "on"):
+    opts = EngineOptions(label_exchange="halo", overlap=ov)
+    kw = dict(record_history=False, engine="sharded", mesh=mesh,
+              options=opts)
+    partition(g, cfg, **kw)                       # warm-up/compile
+    t0 = time.time()
+    res = partition(g, cfg, **kw)
+    dt = time.time() - t0
+    labels[ov] = res.labels
+    padded, _ = padded_view(g, opts)
+    sg = shard_layout(padded, mesh.size, pad=True)
+    bpi = res.exchanged_bytes / max(1, res.iterations)
+    print(f"OVERLAP {{ov}} ndev={{mesh.size}} iters={{res.iterations}} "
+          f"total_s={{dt:.3f}} bytes_per_iter={{bpi:.0f}} "
+          f"frontier_fraction={{metrics.frontier_fraction(sg):.3f}}")
+assert (labels["off"] == labels["on"]).all()      # pure schedule change
+"""
+
+
+def _overlap_matrix_rows(quick: bool) -> list:
+    """Overlap-on vs overlap-off wall-clock on an 8-device mesh (halo
+    plan; identical trajectories, asserted in the subprocess)."""
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(here, "src"))
+    code = OVERLAP_MATRIX_CODE.format(n_per=250 if quick else 500,
+                                      max_iters=60 if quick else 120)
+    try:
+        r = subprocess.run([sys.executable, "-c", code],
+                           env=env, cwd=here, capture_output=True,
+                           text=True, timeout=900)
+        err = ("" if r.returncode == 0 else
+               f"rc={r.returncode}: {r.stderr.strip()}")
+        stdout = r.stdout
+    except subprocess.TimeoutExpired as e:
+        stdout, err = "", f"timeout after {e.timeout}s"
+    rows = []
+    parsed = {}
+    if not err:
+        for line in stdout.splitlines():
+            if line.startswith("OVERLAP "):
+                parsed[line.split()[1]] = dict(
+                    f.split("=") for f in line.split()[2:])
+    t_off = float(parsed.get("off", {}).get("total_s", 0))
+    for ov, f in parsed.items():
+        dt = float(f["total_s"])
+        iters = int(f["iters"])
+        extra = (f";vs_overlap_off={t_off / max(dt, 1e-12):.2f}x"
+                 if ov == "on" and t_off else "")
+        rows.append({
+            "name": f"engine/overlap_{ov}",
+            "us_per_call": dt / max(1, iters) * 1e6,
+            "derived": f"ndev={f['ndev']};iters={iters};"
+                       f"total_s={dt:.3f};plan=halo;"
+                       f"frontier_fraction={f['frontier_fraction']};"
+                       f"bytes_per_iter={f['bytes_per_iter']}" + extra,
+        })
+    if not rows:
+        rows.append({"name": "engine/overlap_matrix", "us_per_call": 0.0,
+                     "derived": "FAILED: "
+                                + (err or "no OVERLAP lines")[-200:]})
     return rows
 
 
@@ -210,6 +299,10 @@ def run(quick: bool = False) -> list:
     # measured on a real 8-device mesh (subprocess, forced host devices)
     rows.extend(_exchange_matrix_rows(quick))
 
+    # overlap schedule: interior scoring concurrent with the halo
+    # exchange vs the sequential step, same mesh and trajectory
+    rows.extend(_overlap_matrix_rows(quick))
+
     # Figure 7 traffic decay: the delta plan ships one (index, label) pair
     # per migration to each peer, so the per-iteration wire volume is the
     # migration curve -- run a clustered graph to convergence and read the
@@ -303,6 +396,41 @@ def run(quick: bool = False) -> list:
                    f"speedup_vs_cold="
                    f"{t_cold_adapt / max(t_warm_adapt, 1e-12):.1f}x;"
                    f"bucket={sess.stats()['bucket']};parity={parity_s}",
+    })
+
+    # staged (double-buffered) adapt (PR 5): stage() issues the next
+    # snapshot's uploads -- and the per-shape init-op warmup -- ahead of
+    # time, so the following adapt() dispatches straight from a
+    # device-resident bind with zero new compiles and zero synchronous
+    # copies.  Baseline: a synchronous warm adapt of an equally FRESH
+    # snapshot (the session_warm_adapt row above is shape-warm because
+    # the cold one-shot just ran the identical graph).
+    g_sync = add_edges(g_grown, rng.integers(0, v_s, 200),
+                       rng.integers(0, v_s, 200), num_vertices=v_s + 12)
+    t0 = time.time()
+    res_sync = sess.adapt(g_sync, record_history=False)
+    t_sync = time.time() - t0
+    g_next = add_edges(g_sync, rng.integers(0, v_s, 200),
+                       rng.integers(0, v_s, 200), num_vertices=v_s + 14)
+    t0 = time.time()
+    sess.stage(g_next)
+    t_stage = time.time() - t0
+    compiles_before = sess.compiles
+    t0 = time.time()
+    res_staged = sess.adapt(record_history=False)
+    t_staged = time.time() - t0
+    staged_compiles = sess.compiles - compiles_before
+    rows.append({
+        "name": "engine/staged_adapt",
+        "us_per_call": t_staged * 1e6,
+        "derived": f"iters={res_staged.iterations};"
+                   f"total_s={t_staged:.3f};stage_s={t_stage:.3f};"
+                   f"sync_adapt_s={t_sync:.3f};"
+                   f"new_compiles={staged_compiles};"
+                   f"speedup_vs_cold="
+                   f"{t_cold_adapt / max(t_staged, 1e-12):.1f}x;"
+                   f"speedup_vs_sync="
+                   f"{t_sync / max(t_staged, 1e-12):.1f}x",
     })
     sess.close()
 

@@ -31,7 +31,7 @@ def main() -> None:
         "apps": bench_apps.run,                # Fig 8, Table 4
         "placement": bench_placement.run,      # beyond-paper
         "kernel": bench_kernel.run,            # Pallas kernel
-        "engine": bench_engine.run,            # host-vs-fused dispatch
+        "engine": bench_engine.run,            # dispatch/overlap/staged
         "roofline": roofline.run,              # deliverable (g)
     }
     selected = ([args.suite] if args.suite else list(suites))

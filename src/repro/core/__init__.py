@@ -7,7 +7,8 @@ from .engine import (EngineOptions, SpinnerState, make_fused_runner,
 from .graph import (Graph, TiledCSR, add_edges, build_tiled_csr, from_edges,
                     pad_graph, shape_bucket)
 from .incremental import adapt, elastic_relabel, extend_labels, resize
-from .metrics import (partitioning_difference, phi, phi_weighted, rho,
+from .metrics import (comm_volume, frontier_fraction,
+                      partitioning_difference, phi, phi_weighted, rho,
                       score_global, summarize)
 from .session import PartitionSession, open_session
 from .spinner import (PartitionResult, SpinnerConfig,
@@ -24,7 +25,8 @@ __all__ = [
     "make_fused_runner", "make_chunked_runner", "make_sharded_runner",
     "run_fused", "run_chunked", "run_sharded", "init_labels",
     "compute_loads", "adapt", "resize", "elastic_relabel", "extend_labels",
-    "phi", "phi_weighted", "rho", "score_global",
+    "phi", "phi_weighted", "rho", "score_global", "comm_volume",
+    "frontier_fraction",
     "partitioning_difference", "summarize", "comm", "engine", "generators",
     "graph", "metrics", "incremental", "session",
 ]

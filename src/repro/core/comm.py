@@ -124,6 +124,25 @@ def build_halo_index(edge_owner: np.ndarray, remote_ids: np.ndarray,
                      true_halo=true_halo, send_idx=send_idx, ext_idx=ext_idx)
 
 
+def halo_exchange_start(values_local: jax.Array, send_idx_dev: jax.Array,
+                        axis: str) -> Tuple[jax.Array, jax.Array]:
+    """Issue the halo collective: ``(values_local, (ndev, H) halo)``.
+
+    The one copy of the halo wire format (gather the send rows, one
+    ``all_to_all``); ``halo_exchange_finish`` assembles the lookup.
+    Split so the overlap schedule can compute between the halves.
+    """
+    outbox = values_local[send_idx_dev]                     # (ndev, H)
+    halo = jax.lax.all_to_all(outbox, axis, split_axis=0, concat_axis=0)
+    return values_local, halo
+
+
+def halo_exchange_finish(values_local: jax.Array,
+                         halo: jax.Array) -> jax.Array:
+    """Assemble the ``[local | halo]`` lookup from a started exchange."""
+    return jnp.concatenate([values_local, halo.reshape(-1)])
+
+
 def halo_exchange(values_local: jax.Array, send_idx_dev: jax.Array,
                   axis: str) -> jax.Array:
     """One halo exchange (traced, inside ``shard_map``).
@@ -133,9 +152,8 @@ def halo_exchange(values_local: jax.Array, send_idx_dev: jax.Array,
     ``(v_per_dev + ndev * H,)`` lookup array addressed by
     ``HaloIndex.ext_idx``.
     """
-    outbox = values_local[send_idx_dev]                     # (ndev, H)
-    halo = jax.lax.all_to_all(outbox, axis, split_axis=0, concat_axis=0)
-    return jnp.concatenate([values_local, halo.reshape(-1)])
+    return halo_exchange_finish(*halo_exchange_start(values_local,
+                                                     send_idx_dev, axis))
 
 
 # ---------------------------------------------------------------------------
@@ -156,10 +174,19 @@ class ExchangePlan:
     Traced methods (called inside ``shard_map``):
       * ``init_aux(labels_local, axis, *args)`` -- the plan's loop-carried
         auxiliary state (e.g. delta's replicated label mirror);
-      * ``exchange(labels_local, aux, axis, *args)`` -- one exchange,
-        returning ``(lookup, new_aux, wire_bytes)`` where ``wire_bytes``
-        is the f32 per-iteration message volume accumulated into
-        ``SpinnerState.exchanged_bytes``.
+      * ``start_exchange(labels_local, aux, axis, *args)`` -- issue the
+        plan's collectives and return an opaque pending pytree.  Under
+        the engine's overlap schedule this is called BEFORE interior
+        scoring, so the wire transfer and the interior scatter-add/
+        matmul are dataflow-independent and XLA's latency-hiding
+        scheduler can run them concurrently;
+      * ``finish_exchange(pending)`` -- complete the exchange:
+        ``(lookup, new_aux, wire_bytes)`` where ``wire_bytes`` is the
+        f32 per-iteration message volume accumulated into
+        ``SpinnerState.exchanged_bytes``;
+      * ``exchange(labels_local, aux, axis, *args)`` -- the composed
+        single-phase form (``finish_exchange(start_exchange(...))``),
+        what the non-overlapped schedule calls.
 
     Static identity (``signature()`` / ``from_signature``): the traced
     methods only read python-int shape parameters off ``self``, so a plan
@@ -195,8 +222,24 @@ class ExchangePlan:
     def init_aux(self, labels_local: jax.Array, axis: str, *args):
         return ()
 
-    def exchange(self, labels_local: jax.Array, aux, axis: str, *args):
+    def start_exchange(self, labels_local: jax.Array, aux, axis: str,
+                       *args):
+        """Issue the plan's collectives; returns an opaque pending value."""
         raise NotImplementedError
+
+    def finish_exchange(self, pending):
+        """Complete a ``start_exchange``: ``(lookup, aux, wire_bytes)``.
+
+        The default assumes ``start_exchange`` already produced the
+        finished triple (plans whose assembly is itself collective-bound,
+        like delta's ``lax.cond``, keep everything in the start half).
+        """
+        return pending
+
+    def exchange(self, labels_local: jax.Array, aux, axis: str, *args):
+        """One full exchange -- the non-overlapped schedule."""
+        return self.finish_exchange(
+            self.start_exchange(labels_local, aux, axis, *args))
 
 
 class AllGatherPlan(ExchangePlan):
@@ -223,7 +266,7 @@ class AllGatherPlan(ExchangePlan):
         # every device receives the (v_pad - v_per_dev) labels it lacks
         return (self.ndev - 1) * self.v_pad * 4
 
-    def exchange(self, labels_local, aux, axis, *args):
+    def start_exchange(self, labels_local, aux, axis, *args):
         lookup = jax.lax.all_gather(labels_local, axis, tiled=True)
         return lookup, aux, jnp.float32(self.wire_bytes_per_iter())
 
@@ -282,9 +325,17 @@ class HaloPlan(ExchangePlan):
         """What the static-shape all_to_all physically moves."""
         return self.ndev * (self.ndev - 1) * self.halo_size * 4
 
-    def exchange(self, labels_local, aux, axis, send_idx_dev, wire_bytes):
-        lookup = halo_exchange(labels_local, send_idx_dev, axis)
-        return lookup, aux, wire_bytes
+    def start_exchange(self, labels_local, aux, axis, send_idx_dev,
+                       wire_bytes):
+        # the all_to_all is issued here; the cheap local assembly that
+        # builds the lookup waits in finish_exchange, so interior scoring
+        # scheduled between the halves overlaps the wire transfer
+        local, halo = halo_exchange_start(labels_local, send_idx_dev, axis)
+        return local, halo, aux, wire_bytes
+
+    def finish_exchange(self, pending):
+        labels_local, halo, aux, wire_bytes = pending
+        return halo_exchange_finish(labels_local, halo), aux, wire_bytes
 
 
 class DeltaPlan(ExchangePlan):
@@ -333,7 +384,11 @@ class DeltaPlan(ExchangePlan):
     def init_aux(self, labels_local, axis, *args):
         return jax.lax.all_gather(labels_local, axis, tiled=True)
 
-    def exchange(self, labels_local, aux, axis, *args):
+    def start_exchange(self, labels_local, aux, axis, *args):
+        # everything stays in the start half: the mirror update is a
+        # lax.cond whose BOTH branches are collectives, so there is no
+        # communication-free finish to defer -- the engine still issues
+        # this before interior scoring, which overlaps the gathers
         vl, v_pad, cap = self.v_per_dev, self.v_pad, self.cap
         off = jax.lax.axis_index(axis) * vl
         prev = jax.lax.dynamic_slice_in_dim(aux, off, vl, 0)

@@ -50,7 +50,20 @@ _UPLOAD_CACHE: dict = {}  # per ShardedGraph: () -> device edge arrays
 
 @dataclasses.dataclass(frozen=True)
 class ShardedGraph:
-    """Host-side edge shards, one row per device."""
+    """Host-side edge shards, one row per device, interior-first.
+
+    Each device's edge row holds two contiguous segments: columns
+    ``[0, e_interior)`` are INTERIOR edges -- their dst vertex is owned
+    by the same device, so its label is readable from the local label
+    shard without any communication -- and columns ``[e_interior, E)``
+    are FRONTIER edges, whose dst label arrives via the exchange plan.
+    The split is what lets the sharded step overlap the label collective
+    with interior scoring (``EngineOptions.overlap``): only the frontier
+    segment depends on the wire.  Within each segment the CSR edge order
+    is preserved; ``edge_perm`` records where each slot's edge sat in
+    the original ``Graph`` arrays (-1 for padding), so tests can
+    reconstruct the permutation exactly.
+    """
     num_vertices: int          # padded to ndev multiple
     num_real_vertices: int
     ndev: int
@@ -59,45 +72,88 @@ class ShardedGraph:
     dst: np.ndarray            # (ndev, E_shard) int32 global ids
     weight: np.ndarray         # (ndev, E_shard) f32, 0 = padding
     deg_w: np.ndarray          # (ndev, v_per_dev) f32
+    e_interior: int = 0        # static split column (padded segment width)
+    interior_counts: Optional[np.ndarray] = None  # (ndev,) real interior
+    frontier_counts: Optional[np.ndarray] = None  # (ndev,) real frontier
+    edge_perm: Optional[np.ndarray] = None  # (ndev, E_shard) orig idx | -1
 
 
 def shard_graph(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
     """Range-partition vertices and edges into per-device shards.
 
-    Pure layout: contiguous blocks of ceil(V/ndev) vertex ids per device,
-    every edge stored with its source's owner (the CSR order inside a
-    shard is preserved, so on 1 device the shard IS the graph's edge list
-    and the sharded scatter-add is bit-identical to the unsharded one).
-    ``pad`` buckets the per-device edge width (power-of-two-ish) so a
-    session rebinding a slightly grown graph keeps the compile shape.
+    Pure layout: contiguous blocks of ceil(V/ndev) vertex ids per
+    device, every edge stored with its source's owner and reordered
+    ``[interior | frontier]`` (dst owned locally vs. remotely; see
+    ``ShardedGraph``).  CSR order is preserved inside each segment, and
+    on 1 device every edge is interior, so the shard IS the graph's
+    edge list; on any layout the scatter-add totals are bit-identical
+    to the unsharded ones because the integer edge weights make f32
+    sums exact under reordering.  ``pad`` buckets each segment's width
+    so a session rebinding a slightly grown graph keeps the compile
+    shape: the interior (bulk) segment gets the usual quarter-step
+    ``shape_bucket`` (<= 25% overhead), while the frontier segment is
+    rounded to a full power of two -- it is the minority of the shard,
+    and its width tracks the boundary SET, which drifts more than the
+    edge count under growth, so the coarser steps (<= 2x padding on
+    <= ~25% of the edges) halve the bucket boundaries a drifting
+    boundary set can cross.  Interior pad slots point at the device's
+    own vertex 0 (global id ``p * v_per_dev``) so every dst view --
+    global ids, the halo remap, the split local view -- stays in
+    bounds; weight 0 makes all pads exact no-ops.
     """
     from .graph import shape_bucket
     v_per_dev = -(-graph.num_vertices // ndev)
     v_pad = v_per_dev * ndev
     owner = graph.src // v_per_dev
-    counts = np.bincount(owner, minlength=ndev)
-    e_shard = int(counts.max()) if counts.size else 1
+    frontier = (graph.dst // v_per_dev) != owner
+    n_int = np.bincount(owner[~frontier], minlength=ndev).astype(np.int64)
+    n_fro = np.bincount(owner[frontier], minlength=ndev).astype(np.int64)
+    # reported counts exclude weight-0 edges (pad_graph's bucket-filler
+    # self-loops), so frontier_fraction reflects the REAL graph; the
+    # layout itself still allocates slots for every incoming edge
+    real = graph.weight > 0
+    int_counts = np.bincount(owner[real & ~frontier],
+                             minlength=ndev).astype(np.int64)
+    fro_counts = np.bincount(owner[real & frontier],
+                             minlength=ndev).astype(np.int64)
+    e_int = int(n_int.max()) if n_int.size else 0
+    e_fro = int(n_fro.max()) if n_fro.size else 0
+    if e_int + e_fro == 0:
+        e_int = 1                       # keep one (zeroed) slot per shard
     if pad:
-        e_shard = shape_bucket(e_shard, floor=128)
+        e_int = shape_bucket(e_int, floor=128)
+        if e_fro:                       # 1-device shards stay frontier-free
+            e_fro = max(128, 1 << (e_fro - 1).bit_length())
+    e_shard = e_int + e_fro
     src_l = np.zeros((ndev, e_shard), np.int32)
-    dst = np.zeros((ndev, e_shard), np.int32)
     w = np.zeros((ndev, e_shard), np.float32)
-    order = np.argsort(owner, kind="stable")
+    perm = np.full((ndev, e_shard), -1, np.int32)
+    # pad slots read the owner's vertex 0 under every dst layout
+    dst = np.tile((np.arange(ndev, dtype=np.int32) * v_per_dev)[:, None],
+                  (1, e_shard))
+    # stable sort by (owner, frontier flag): per device, the interior run
+    # comes first, each run in CSR order
+    order = np.argsort(owner.astype(np.int64) * 2 + frontier, kind="stable")
     s, d, ww = graph.src[order], graph.dst[order], graph.weight[order]
-    starts = np.zeros(ndev + 1, np.int64)
-    np.cumsum(counts, out=starts[1:])
+    oidx = np.arange(graph.src.shape[0], dtype=np.int32)[order]
+    starts = np.zeros(2 * ndev + 1, np.int64)
+    np.cumsum(np.stack([n_int, n_fro], axis=1).reshape(-1), out=starts[1:])
     for p in range(ndev):
-        lo, hi = starts[p], starts[p + 1]
-        n = hi - lo
-        src_l[p, :n] = s[lo:hi] - p * v_per_dev
-        dst[p, :n] = d[lo:hi]
-        w[p, :n] = ww[lo:hi]
+        for lo, hi, col in ((starts[2 * p], starts[2 * p + 1], 0),
+                            (starts[2 * p + 1], starts[2 * p + 2], e_int)):
+            n = hi - lo
+            src_l[p, col: col + n] = s[lo:hi] - p * v_per_dev
+            dst[p, col: col + n] = d[lo:hi]
+            w[p, col: col + n] = ww[lo:hi]
+            perm[p, col: col + n] = oidx[lo:hi]
     deg = np.zeros(v_pad, np.float32)
     deg[: graph.num_vertices] = graph.deg_w
     return ShardedGraph(num_vertices=v_pad,
                         num_real_vertices=graph.num_vertices, ndev=ndev,
                         v_per_dev=v_per_dev, src_local=src_l, dst=dst,
-                        weight=w, deg_w=deg.reshape(ndev, v_per_dev))
+                        weight=w, deg_w=deg.reshape(ndev, v_per_dev),
+                        e_interior=e_int, interior_counts=int_counts,
+                        frontier_counts=fro_counts, edge_perm=perm)
 
 
 def shard_layout(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
@@ -131,7 +187,7 @@ def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig,
     is the plan's static message volume; None for the delta plan, whose
     volume is measured on device (``PartitionResult.exchanged_bytes``).
     """
-    from . import comm
+    from . import comm, metrics
     opts = options if options is not None else engine.EngineOptions()
     name = opts.resolved_label_exchange(sg.ndev)
     # same pad flag as the runner's plan (engine._sharded_parts), so this
@@ -143,6 +199,8 @@ def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig,
     wire = plan.wire_bytes_per_iter()
     stats = {
         "label_exchange": name,
+        "overlap": opts.resolved_overlap(sg.ndev),
+        "frontier_fraction": metrics.frontier_fraction(sg),
         "message_bytes_per_iter": None if wire is None else int(wire),
         "allgather_bytes_per_iter": int(comm.make_exchange_plan(
             "allgather", sg, pad=pad).wire_bytes_per_iter()),
@@ -168,15 +226,13 @@ def make_sharded_step(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
     ``step(state) -> state`` over the engine's ``SpinnerState`` (padded
     labels).  This is the engine's sharded step_fn without the surrounding
     ``while_loop`` -- the building block of ``run_sharded_hostloop``.
-    The compiled program is cached globally like the engine's runners, so
-    the hostloop driver's repeat calls pay dispatch, not retrace/recompile.
+    The step is assembled by the one shared ``engine._sharded_parts``
+    code path (``single_step=True`` pins the aux-free allgather oracle
+    and the non-overlapped schedule there), and the compiled program is
+    cached globally like the engine's runners, so the hostloop driver's
+    repeat calls pay dispatch, not retrace/recompile.
     """
-    # Forced onto the all-gather oracle plan: it carries no loop state
-    # (delta's label mirror would have to round-trip between dispatches),
-    # so each dispatch is self-contained -- and every plan walks the same
-    # trajectory anyway, so parity with engine="sharded" is unaffected.
     opts = options if options is not None else engine.EngineOptions()
-    opts = dataclasses.replace(opts, label_exchange="allgather")
     _, _, prog, args = engine._sharded_parts(graph, cfg, opts, mesh, axis,
                                              single_step=True)
 

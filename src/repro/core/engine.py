@@ -33,6 +33,12 @@ since PR 4 -- separates WHAT is compiled from WHICH graph it runs on:
     on device, and a pluggable per-iteration label exchange
     (``repro.core.comm``: all-gather oracle / boundary halo / Figure 7
     delta), wire bytes accumulated in ``SpinnerState.exchanged_bytes``.
+    Under ``EngineOptions.overlap`` the sharded step splits each edge
+    shard at ``ShardedGraph.e_interior`` and reschedules to
+    start_exchange -> score_interior -> finish_exchange ->
+    score_frontier, overlapping the collective with the
+    exchange-independent majority of ComputeScores -- bit-identical
+    to the sequential schedule.
     All runners share ``make_vertex_update`` (Eqs. 7-8, 11-12) and
     ``_halting_update``, so for one padded layout every engine walks the
     same trajectory bit for bit.
@@ -170,6 +176,16 @@ class EngineOptions:
     # (bit parity with the single-device engines); "folded" draws only
     # the local shard from a device-folded key (O(V/ndev) memory).
     sharded_noise: str = "replicated"
+    # Sharded step schedule.  "on" splits each device's edge shard at
+    # ShardedGraph.e_interior and reschedules the step as start_exchange
+    # -> score_interior -> finish_exchange -> score_frontier: only the
+    # frontier segment depends on remote labels, so the label collective
+    # and the interior scatter-add/matmul are dataflow-independent and
+    # can run concurrently.  Bit-identical to "off" for every exchange
+    # plan and score backend (integer edge weights make the f32 partial
+    # sums exact under the segment split).  "auto" = on over a real
+    # mesh, off on a single device (nothing to overlap).
+    overlap: str = "auto"            # auto | on | off
     pad: str = "bucket"              # bucket | none
 
     def resolved_label_exchange(self, ndev: int) -> str:
@@ -188,6 +204,14 @@ class EngineOptions:
                 f"unknown sharded_noise {self.sharded_noise!r}; "
                 "available: replicated, folded")
         return self.sharded_noise
+
+    def resolved_overlap(self, ndev: int) -> str:
+        if self.overlap == "auto":
+            return "on" if ndev > 1 else "off"
+        if self.overlap not in ("on", "off"):
+            raise ValueError(f"unknown overlap {self.overlap!r}; "
+                             "available: auto, on, off")
+        return self.overlap
 
     def backend(self):
         from repro.kernels import ops as kernel_ops   # lazy: no import cycle
@@ -789,7 +813,8 @@ _DEFAULT_MESH: Optional[Mesh] = None
 
 
 def make_sharded_step_fn(cfg, axis: str, ndev: int, v_local: int, plan,
-                         scores: Callable, noise_mode: str) -> Callable:
+                         scores, noise_mode: str,
+                         overlap: bool = False) -> Callable:
     """Per-device jittable sharded transition, parameterized by the plan.
 
     Runs INSIDE ``shard_map`` over ``axis``: ``state.labels`` arrives as
@@ -803,6 +828,18 @@ def make_sharded_step_fn(cfg, axis: str, ndev: int, v_local: int, plan,
     ``make_vertex_update`` are psum-reduced, so every device computes the
     same ``_halting_update`` decision and a surrounding ``while_loop``
     stays in lockstep with no host involvement.
+
+    Schedule (``overlap``): with ``overlap=False``, ``scores`` is the
+    backend's single-phase closure and the step is exchange -> score.
+    With ``overlap=True``, ``scores`` is the backend's ``(interior_fn,
+    frontier_fn)`` pair over the [interior | frontier] edge split (see
+    ``distributed.ShardedGraph``) and the step is rescheduled to
+    ``start_exchange -> score_interior -> finish_exchange ->
+    score_frontier``: the collective is issued before any edge is
+    scored and only the frontier phase consumes it, so the two are
+    dataflow-independent and XLA's latency-hiding scheduler can overlap
+    wire and compute.  Both schedules are bit-identical (the integer
+    edge weights make the f32 partial sums exact).
 
     Closes over static shape ints only (``ndev``, ``v_local``, the plan's
     signature) -- capacity, the real vertex count and every edge array
@@ -835,9 +872,17 @@ def make_sharded_step_fn(cfg, axis: str, ndev: int, v_local: int, plan,
                 score_blocks, plan_blocks):
         key, k_it = jax.random.split(state.key)
         # Pregel messages: one plan-defined label exchange.
-        lookup, aux, xbytes = plan.exchange(state.labels, aux, axis,
-                                            *plan_blocks)
-        scores_v = scores(lookup, *score_blocks)           # (v_local, k)
+        if overlap:
+            interior_fn, frontier_fn = scores
+            pending = plan.start_exchange(state.labels, aux, axis,
+                                          *plan_blocks)
+            partial = interior_fn(state.labels, *score_blocks)
+            lookup, aux, xbytes = plan.finish_exchange(pending)
+            scores_v = frontier_fn(partial, lookup, *score_blocks)
+        else:
+            lookup, aux, xbytes = plan.exchange(state.labels, aux, axis,
+                                                *plan_blocks)
+            scores_v = scores(lookup, *score_blocks)       # (v_local, k)
         off = jax.lax.axis_index(axis) * v_local
         if noise_mode == "folded":
             k_dev = jax.random.fold_in(k_it, jax.lax.axis_index(axis))
@@ -872,9 +917,11 @@ def make_sharded_step_fn(cfg, axis: str, ndev: int, v_local: int, plan,
 def _sharded_program(cfg, opts: EngineOptions, mesh: Mesh, axis: str,
                      plan_sig: tuple, n_score: int,
                      score_fn: Optional[Callable] = None,
-                     single_step: bool = False) -> Program:
+                     single_step: bool = False,
+                     overlap: bool = False) -> Program:
     """The compiled sharded runner (or one-iteration step) for a static
-    (cfg, backend, mesh, axis, plan signature, noise mode) tuple.
+    (cfg, backend, mesh, axis, plan signature, noise mode, overlap
+    schedule) tuple.
 
     Traces against an array-free ``plan_from_signature`` view, so the
     program closes over shape ints only and is shared by every graph
@@ -890,7 +937,7 @@ def _sharded_program(cfg, opts: EngineOptions, mesh: Mesh, axis: str,
         scores_sig = backend.signature()
     kind = "sharded_step" if single_step else "sharded"
     key = (kind, _static_cfg(cfg), scores_sig, mesh, axis, plan_sig,
-           noise_mode)
+           noise_mode, overlap)
     max_iters = cfg.max_iters
 
     def build():
@@ -899,10 +946,14 @@ def _sharded_program(cfg, opts: EngineOptions, mesh: Mesh, axis: str,
             else plan_sig[2] // ndev
         if score_fn is not None:
             scores = lambda lookup, *blocks: score_fn(lookup, *blocks)
+        elif overlap:
+            scores = opts.backend().make_sharded_scores_split(cfg.k,
+                                                              v_local)
         else:
             scores = opts.backend().make_sharded_scores(cfg.k, v_local)
         step_fn = make_sharded_step_fn(cfg, axis, ndev, v_local, plan,
-                                       scores, noise_mode)
+                                       scores, noise_mode,
+                                       overlap=overlap)
 
         def cond_fn(carry):
             s = carry[0]
@@ -951,17 +1002,31 @@ def _sharded_parts(graph: Graph, cfg, opts: EngineOptions, mesh: Mesh,
                    single_step: bool = False):
     """Everything the sharded runner and one-step dispatcher share.
 
-    Resolves the exchange plan, builds (or fetches cached) the score
-    backend's sharded edge arrays against the plan's ``dst_index``, and
+    Resolves the exchange plan and the overlap schedule, builds (or
+    fetches cached) the score backend's sharded edge arrays against the
+    plan's ``dst_index`` (the two-phase split arrays under overlap), and
     returns ``(sg, plan, program, args)`` where ``args`` is the full
     argument tuple after the state: ``(capacity, num_real, deg_w,
     *score_args, *plan_args)``.
+
+    ``single_step=True`` (the hostloop baseline's one-iteration
+    dispatcher) pins the aux-free allgather oracle -- delta's label
+    mirror would have to round-trip between dispatches -- and the
+    non-overlapped schedule, so there is exactly ONE step-construction
+    code path for every driver.  Every plan/schedule combination walks
+    the same trajectory, so parity with ``engine="sharded"`` is
+    unaffected.
     """
     from . import comm                                    # sibling, no cycle
     from .distributed import device_upload, shard_layout  # layout layer
+    if single_step:
+        opts = dataclasses.replace(opts, label_exchange="allgather",
+                                   overlap="off")
     padded, num_real = padded_view(graph, opts)
     pad = opts.pad == "bucket"
     ndev = mesh.shape[axis]
+    # custom score closures are single-phase by contract
+    overlap = (opts.resolved_overlap(ndev) == "on" and score_fn is None)
     sg = shard_layout(padded, ndev, pad=pad)
     plan = comm.make_exchange_plan(opts.resolved_label_exchange(ndev), sg,
                                    delta_cap=opts.delta_cap, pad=pad)
@@ -969,16 +1034,16 @@ def _sharded_parts(graph: Graph, cfg, opts: EngineOptions, mesh: Mesh,
         backend = opts.backend()
         # cached per layout: the build retiles/uploads O(E) arrays (for
         # pallas, a host retile per shard) and depends only on the layout,
-        # the backend and the plan's dst layout -- so a cfg sweep
-        # (eps/seed/max_iters/...) over one graph shares one build, and so
-        # do the allgather/delta plans (both index with sg.dst)
+        # the backend, the plan's dst layout and the schedule -- so a cfg
+        # sweep (eps/seed/max_iters/...) over one graph shares one build,
+        # and so do the allgather/delta plans (both index with sg.dst)
         dst_layout = "halo" if plan.dst_index is not sg.dst else "global"
+        args_of = (backend.sharded_graph_args_split if overlap
+                   else backend.sharded_graph_args)
         score_args = _graph_cached(
             _SCORE_ARG_CACHE, sg,
-            ("sharded", backend.signature(), dst_layout, pad),
-            lambda: tuple(backend.sharded_graph_args(sg, cfg.k,
-                                                     plan.dst_index,
-                                                     pad=pad)))
+            ("sharded", backend.signature(), dst_layout, pad, overlap),
+            lambda: tuple(args_of(sg, cfg.k, plan.dst_index, pad=pad)))
     else:
         # custom closures get the XLA backend's edge layout (same arrays,
         # same normalization), just a different scores fn
@@ -987,7 +1052,7 @@ def _sharded_parts(graph: Graph, cfg, opts: EngineOptions, mesh: Mesh,
             sg, cfg.k, plan.dst_index)
     prog = _sharded_program(cfg, opts, mesh, axis, plan.signature(),
                             len(score_args), score_fn,
-                            single_step=single_step)
+                            single_step=single_step, overlap=overlap)
     args = (jnp.float32(cfg.capacity(graph)), jnp.int32(num_real),
             device_upload(sg, "deg_w")) + tuple(score_args) \
         + tuple(plan.device_args())

@@ -70,12 +70,49 @@ def partitioning_difference(labels_a: np.ndarray, labels_b: np.ndarray) -> float
     return float((a != b).mean()) if a.size else 0.0
 
 
-def summarize(graph: Graph, labels: np.ndarray, k: int, c: float = 1.05
-              ) -> dict:
-    return {
+def comm_volume(graph: Graph, labels: np.ndarray, k: int) -> np.ndarray:
+    """Per-partition remote-neighbor count -- the paper's communication
+    cost proxy (Section 2: messages cross the network iff the endpoints
+    live in different partitions).
+
+    Entry ``l`` counts the directed adjacency entries whose source is in
+    partition ``l`` and whose destination is not, i.e. the neighbor
+    labels partition ``l`` must fetch from other partitions every
+    superstep under a message-passing runtime.  The total over all
+    partitions is the (unweighted) directed cut size; phi relates as
+    ``comm_volume(...).sum() == (1 - phi) * num_directed_entries``.
+    """
+    labels = np.asarray(labels)
+    cut = labels[graph.src] != labels[graph.dst]
+    return np.bincount(labels[graph.src[cut]], minlength=k).astype(np.int64)
+
+
+def frontier_fraction(sg) -> float:
+    """Fraction of a ``ShardedGraph``'s real edges in the frontier
+    segment -- the share of each step's scoring that must wait for the
+    label exchange under the overlap schedule (``EngineOptions.overlap``;
+    the interior remainder computes while the collective is in flight).
+    """
+    interior = int(np.sum(sg.interior_counts))
+    frontier = int(np.sum(sg.frontier_counts))
+    total = interior + frontier
+    return float(frontier / total) if total else 0.0
+
+
+def summarize(graph: Graph, labels: np.ndarray, k: int, c: float = 1.05,
+              sg=None) -> dict:
+    """Quality summary; pass a ``ShardedGraph`` as ``sg`` to include the
+    layout's frontier fraction alongside the quality metrics."""
+    cv = comm_volume(graph, labels, k)
+    out = {
         "phi": phi(graph, labels),
         "phi_weighted": phi_weighted(graph, labels),
         "rho": rho(graph, labels, k),
         "score": score_global(graph, labels, k, c),
+        "comm_volume": int(cv.sum()),
+        "comm_volume_max": int(cv.max()) if cv.size else 0,
         "k": k,
     }
+    if sg is not None:
+        out["frontier_fraction"] = frontier_fraction(sg)
+    return out

@@ -25,7 +25,12 @@ update -> close``.  The session owns the (graph, config, options) triple,
 the previous stable labels (``adapt``/``resize`` default to them), and the
 set of compiled programs it has touched -- ``stats()`` reports shape
 buckets, per-session compile counts (via the programs' jit cache sizes)
-and the exchange-plan communication volumes.
+and the exchange-plan communication volumes.  ``stage(next_graph)``
+double-buffers the upload: it issues the NEXT snapshot's host->device
+transfers (asynchronously, overlapping in-flight device work) so the
+following ``adapt()`` consumes a device-resident bind with zero
+synchronous copies -- the serving-loop pattern ``res = s.adapt();
+s.stage(next); ... ; res = s.adapt()``.
 
 Shape-bucketed compile reuse: with the default ``EngineOptions(pad=
 "bucket")`` every engine runs on a power-of-two-ish padded (V, E) layout
@@ -72,6 +77,7 @@ class PartitionSession:
         self.options = opts
         self._prev: Optional[np.ndarray] = None
         self._last: Optional[PartitionResult] = None
+        self._staged: Optional[Graph] = None
         self._programs: dict = {}       # id(program) -> (program, base)
         self._runs = 0
         self._closed = False
@@ -84,6 +90,7 @@ class PartitionSession:
         self._programs.clear()
         self._prev = None
         self._last = None
+        self._staged = None
         self._closed = True
 
     def __enter__(self) -> "PartitionSession":
@@ -130,25 +137,104 @@ class PartitionSession:
         """Incremental restart (Section 3.4) from the previous labels.
 
         Rebinds the session to ``new_graph`` (or to the current graph
-        extended by ``edge_updates=(src, dst)``; neither = re-run on the
+        extended by ``edge_updates=(src, dst)``; neither = the snapshot
+        previously ``stage()``-d if one is pending, else re-run on the
         current graph, e.g. after ``update()``), carries ``prev`` labels
         (default: the last result) extending new vertices as -1 ->
         least-loaded, and restarts.  While the new graph stays inside the
-        session's shape bucket this performs ZERO new compilations.
+        session's shape bucket this performs ZERO new compilations; a
+        staged snapshot additionally starts from device-resident edge
+        arrays, with zero synchronous host->device copies on this call.
         """
         self._check_open()
-        if new_graph is not None and edge_updates is not None:
-            raise ValueError("pass at most one of new_graph/edge_updates")
+        new_graph = self._graph_delta(new_graph, edge_updates, num_vertices)
         prev = self._require_prev(prev)      # validate before rebinding
-        if edge_updates is not None:
-            e_src, e_dst = edge_updates
-            new_graph = add_edges(self.graph, e_src, e_dst,
-                                  num_vertices=num_vertices)
+        if new_graph is None and self._staged is not None:
+            new_graph = self._staged
         if new_graph is not None:
+            # any rebinding -- staged or explicit -- supersedes a pending
+            # staged snapshot, which was built against the graph this call
+            # replaces (see stage())
+            self._staged = None
             self.graph = new_graph
         from .incremental import extend_labels
         init = extend_labels(prev, self.graph.num_vertices)
         return self._run(init, record_history, callback)
+
+    def stage(self, new_graph: Optional[Graph] = None, *,
+              edge_updates: Optional[tuple] = None,
+              num_vertices: Optional[int] = None) -> "PartitionSession":
+        """Double-buffer the NEXT snapshot: begin its host->device
+        uploads now, so a following ``adapt()`` starts from a
+        device-resident bind with zero synchronous copies.
+
+        Builds the padded view, sharded layout, exchange plan and
+        compiled-program handle for ``new_graph`` (or for the current
+        graph extended by ``edge_updates=(src, dst)``) through the
+        engine's bind caches, issuing every per-graph device transfer
+        immediately.  JAX dispatches transfers asynchronously, so they
+        overlap whatever device work is still in flight (e.g. the
+        current fused run) and the host-side layout work happens off the
+        next ``adapt()``'s critical path.  The staged snapshot is
+        consumed by the next argument-less ``adapt()``; staging again
+        replaces it, and any other rebinding (``update()``, an explicit
+        ``adapt(new_graph=...)``/``adapt(edge_updates=...)``) discards
+        it, since it was built against the superseded graph.  Chainable.
+        """
+        self._check_open()
+        new_graph = self._graph_delta(new_graph, edge_updates, num_vertices)
+        if new_graph is None:
+            raise ValueError("stage() needs new_graph or edge_updates")
+        self._prestage(new_graph)
+        self._staged = new_graph
+        return self
+
+    def _graph_delta(self, new_graph: Optional[Graph], edge_updates,
+                     num_vertices: Optional[int]) -> Optional[Graph]:
+        """Resolve the mutually-exclusive new_graph/edge_updates pair
+        (shared by ``adapt`` and ``stage`` so their semantics cannot
+        drift); ``edge_updates=(src, dst)`` extends the current graph."""
+        if new_graph is not None and edge_updates is not None:
+            raise ValueError("pass at most one of new_graph/edge_updates")
+        if edge_updates is not None:
+            e_src, e_dst = edge_updates
+            new_graph = add_edges(self.graph, e_src, e_dst,
+                                  num_vertices=num_vertices)
+        return new_graph
+
+    def _prestage(self, graph: Graph) -> None:
+        """Warm every per-graph cache ``_run`` would touch for ``graph``.
+
+        The engine's bind pieces (padded view, edge uploads, score-
+        backend arrays, sharded layout + plan) are memoized per graph
+        OBJECT, so building them here means the later ``adapt()`` --
+        which receives the same object -- finds everything device-
+        resident.  The sharded path also resolves (and tracks) its
+        program handle; note a CROSS-bucket stage does not pre-pay the
+        new program's XLA compile -- jit compiles lazily, so that one
+        compile still lands on the first dispatch inside ``adapt()``
+        (stage removes the uploads and layout work from that path, not
+        the compiler).  A dummy ``prepare_init`` pass
+        additionally warms the init-path op compilations (load scatter,
+        label pad/concat), which run on the EXACT vertex count and would
+        otherwise retrace on every new snapshot shape even when the
+        bucketed runner itself is compile-warm.
+        """
+        opts, cfg = self.options, self.cfg
+        if opts.mesh is not None or opts.engine == "sharded":
+            mesh = opts.mesh
+            if mesh is None:
+                mesh = _engine._default_partition_mesh()
+            _, _, prog, _ = _engine._sharded_parts(graph, cfg, opts, mesh,
+                                                   opts.axis)
+            self._track(prog)
+            v_pad = _engine.sharded_v_pad(graph, opts, mesh, opts.axis)
+        else:
+            _, padded = _engine._single_bind(graph, cfg, opts, hist=True)
+            v_pad = padded.num_vertices
+        labels, _, _ = prepare_init(
+            graph, cfg, np.zeros(graph.num_vertices, np.int32))
+        _engine.pad_labels(labels, v_pad)
 
     def resize(self, k_new: int, prev: Optional[np.ndarray] = None,
                seed: Optional[int] = None,
@@ -179,8 +265,11 @@ class PartitionSession:
     def update(self, edge_src, edge_dst, num_vertices: Optional[int] = None,
                directed: bool = True) -> "PartitionSession":
         """Apply a graph delta WITHOUT running; the next ``adapt()`` (or
-        ``partition()``) sees the extended graph.  Chainable."""
+        ``partition()``) sees the extended graph.  Discards any pending
+        staged snapshot (it was built against the graph this call
+        replaces).  Chainable."""
         self._check_open()
+        self._staged = None
         self.graph = add_edges(self.graph, edge_src, edge_dst,
                                directed=directed, num_vertices=num_vertices)
         return self
@@ -211,6 +300,8 @@ class PartitionSession:
             "runs": self._runs,
             "compiles": self.compiles,
             "programs": len(self._programs),
+            "staged": (self._staged.num_vertices
+                       if self._staged is not None else None),
         }
         if self._last is not None:
             d["last"] = {"iterations": self._last.iterations,

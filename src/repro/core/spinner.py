@@ -44,7 +44,9 @@ The public API (PR 4) is organized around a device-resident SESSION:
              * ``engine="sharded"`` -- the fused loop sharded over a
                device mesh in one ``shard_map(while_loop)`` dispatch,
                with a pluggable label exchange (allgather / halo /
-               delta: identical trajectories, decreasing wire bytes);
+               delta: identical trajectories, decreasing wire bytes)
+               and an overlap schedule (``EngineOptions.overlap``) that
+               scores interior edges while the exchange is in flight;
              * ``engine="chunked"`` -- ``lax.scan`` over ``chunk_size``
                iterations per dispatch with on-device history;
              * ``engine="host"``    -- the per-iteration host loop,

@@ -90,7 +90,21 @@ class ScoreBackend(Protocol):
         dimension and are threaded through ``shard_map`` with
         ``PartitionSpec(axis)``; ``dst_index`` is the exchange plan's
         per-edge index (global vertex ids for all-gather/delta,
-        halo-remapped slots for halo).
+        halo-remapped slots for halo);
+      * ``make_sharded_scores_split(k, v_local)`` /
+        ``sharded_graph_args_split(sg, k, dst_index, pad)`` are the
+        TWO-PHASE form for the engine's overlap schedule
+        (``EngineOptions.overlap``): the edge shard is split at
+        ``ShardedGraph.e_interior`` into an interior segment (dst labels
+        readable from the local label shard) and a frontier segment (dst
+        labels arriving via the exchange plan's lookup).  The returned
+        ``(interior_fn, frontier_fn)`` closures both take the full split
+        arg tuple: ``interior_fn(labels_local, *args)`` accumulates the
+        interior partial while the exchange is in flight, and
+        ``frontier_fn(partial, lookup, *args)`` finishes the (v_local,
+        k) block.  The integer Eq. 3 edge weights make both f32 phases
+        exact, so interior + frontier is bit-identical to the
+        single-phase sum.
 
     ``build`` / ``build_sharded`` are the legacy closure forms (args
     baked in), kept for standalone callers.
@@ -110,11 +124,33 @@ class ScoreBackend(Protocol):
     def sharded_graph_args(self, sg, k: int, dst_index: np.ndarray,
                            pad: bool = False) -> tuple: ...
 
+    def make_sharded_scores_split(self, k: int, v_local: int
+                                  ) -> tuple: ...
+
+    def sharded_graph_args_split(self, sg, k: int, dst_index: np.ndarray,
+                                 pad: bool = False) -> tuple: ...
+
     def build(self, graph: Graph, k: int
               ) -> Callable[[jax.Array], jax.Array]: ...
 
     def build_sharded(self, sg, k: int, dst_index: np.ndarray
                       ) -> tuple: ...
+
+
+def _split_dst_views(sg, dst_index) -> tuple:
+    """(interior dst as LOCAL vertex ids, frontier dst in plan layout).
+
+    The interior conversion is plan-independent: an interior edge's dst
+    lives on its own device by construction, so its local id is just the
+    global id minus the owner offset (interior pad slots carry the
+    owner's vertex 0 and land on local id 0).  The frontier half keeps
+    whatever index the exchange plan's lookup array expects.
+    """
+    e = sg.e_interior
+    offs = (np.arange(sg.ndev, dtype=np.int64) * sg.v_per_dev)[:, None]
+    d_int = (sg.dst[:, :e].astype(np.int64) - offs).astype(np.int32)
+    d_fro = np.asarray(dst_index)[:, e:].astype(np.int32)
+    return d_int, d_fro
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,6 +198,30 @@ class XlaScatterBackend:
                else jnp.asarray(np.asarray(dst_index, np.int32)))
         return (device_upload(sg, "src_local"), dst,
                 device_upload(sg, "weight"))
+
+    def make_sharded_scores_split(self, k: int, v_local: int) -> tuple:
+        """Two-phase scatter-add over the [interior | frontier] segments
+        (see the protocol docstring): the interior half reads the local
+        label shard, the frontier half the exchange plan's lookup."""
+        def interior(labels_local, src_i, dst_i, w_i, src_f, dst_f, w_f):
+            nbr = labels_local[dst_i]
+            return jnp.zeros((v_local, k),
+                             jnp.float32).at[src_i, nbr].add(w_i)
+
+        def frontier(partial, lookup, src_i, dst_i, w_i, src_f, dst_f,
+                     w_f):
+            return partial.at[src_f, lookup[dst_f]].add(w_f)
+
+        return interior, frontier
+
+    def sharded_graph_args_split(self, sg, k: int, dst_index: np.ndarray,
+                                 pad: bool = False) -> tuple:
+        e = sg.e_interior
+        d_int, d_fro = _split_dst_views(sg, dst_index)
+        return (jnp.asarray(sg.src_local[:, :e]), jnp.asarray(d_int),
+                jnp.asarray(sg.weight[:, :e]),
+                jnp.asarray(sg.src_local[:, e:]), jnp.asarray(d_fro),
+                jnp.asarray(sg.weight[:, e:]))
 
     def build(self, graph: Graph, k: int) -> Callable[[jax.Array], jax.Array]:
         args = self.graph_args(graph, k)
@@ -222,6 +282,44 @@ class PallasTiledBackend:
                                      pad_chunks=4 if pad else 1)
         return tuple(map(jnp.asarray, (st.src_local, st.dst, st.weight,
                                        st.perm)))
+
+    def make_sharded_scores_split(self, k: int, v_local: int) -> tuple:
+        """Two kernel launches over independent segment tilings: the
+        interior tiles gather from the local label shard (their dst ids
+        are pre-remapped to local), the frontier tiles from the exchange
+        lookup; the f32 MXU accumulations are exact on the integer
+        weights, so the sum matches the single-tiling kernel bit for
+        bit."""
+        base = self.make_scores(k)
+
+        def interior(labels_local, si, di, wi, pi, sf, df, wf, pf):
+            return base(labels_local, si, di, wi, pi)
+
+        def frontier(partial, lookup, si, di, wi, pi, sf, df, wf, pf):
+            return partial + base(lookup, sf, df, wf, pf)
+
+        return interior, frontier
+
+    def sharded_graph_args_split(self, sg, k: int, dst_index: np.ndarray,
+                                 pad: bool = False) -> tuple:
+        e = sg.e_interior
+        d_int, d_fro = _split_dst_views(sg, dst_index)
+        seg_i = dataclasses.replace(sg, src_local=sg.src_local[:, :e],
+                                    dst=sg.dst[:, :e],
+                                    weight=sg.weight[:, :e], edge_perm=None)
+        seg_f = dataclasses.replace(sg, src_local=sg.src_local[:, e:],
+                                    dst=sg.dst[:, e:],
+                                    weight=sg.weight[:, e:], edge_perm=None)
+        st_i = build_sharded_tiled_csr(seg_i, d_int, tile_v=self.tile_v,
+                                       tile_e=self.tile_e,
+                                       pad_chunks=4 if pad else 1)
+        st_f = build_sharded_tiled_csr(seg_f, d_fro, tile_v=self.tile_v,
+                                       tile_e=self.tile_e,
+                                       pad_chunks=4 if pad else 1)
+        return tuple(map(jnp.asarray, (st_i.src_local, st_i.dst,
+                                       st_i.weight, st_i.perm,
+                                       st_f.src_local, st_f.dst,
+                                       st_f.weight, st_f.perm)))
 
     def build(self, graph: Graph, k: int) -> Callable[[jax.Array], jax.Array]:
         args = self.graph_args(graph, k)
