@@ -198,6 +198,76 @@ def _overlap_matrix_rows(quick: bool) -> list:
     return rows
 
 
+FUSED_MATRIX_CODE = """
+import time
+import numpy as np
+from repro.core import EngineOptions, SpinnerConfig, generators, partition
+from repro.launch.mesh import make_partition_mesh
+
+g = generators.clustered_graph(8, {n_per}, 0.02, 0.5, seed=5)
+cfg = SpinnerConfig(k=8, seed=1, max_iters={max_iters})
+mesh = make_partition_mesh()
+labels = {{}}
+for fu in ("off", "on"):
+    opts = EngineOptions(score_backend="pallas", label_exchange="halo",
+                         fused_update=fu)
+    kw = dict(record_history=False, engine="sharded", mesh=mesh,
+              options=opts)
+    partition(g, cfg, **kw)                       # warm-up/compile
+    t0 = time.time()
+    res = partition(g, cfg, **kw)
+    dt = time.time() - t0
+    labels[fu] = res.labels
+    print(f"FUSED {{fu}} ndev={{mesh.size}} iters={{res.iterations}} "
+          f"total_s={{dt:.3f}}")
+assert (labels["off"] == labels["on"]).all()      # bit-exact megakernel
+"""
+
+
+def _fused_matrix_rows(quick: bool) -> list:
+    """Fused megakernel on vs off on an 8-device mesh (pallas backend,
+    halo plan; identical trajectories, asserted in the subprocess).
+    Interpret-mode Pallas runs the kernel op-by-op on host, so the
+    wall-clock here tracks dispatch count, not the TPU win the roofline
+    mode models."""
+    here = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=os.path.join(here, "src"))
+    code = FUSED_MATRIX_CODE.format(n_per=100 if quick else 200,
+                                    max_iters=20 if quick else 40)
+    try:
+        r = subprocess.run([sys.executable, "-c", code],
+                           env=env, cwd=here, capture_output=True,
+                           text=True, timeout=900)
+        err = ("" if r.returncode == 0 else
+               f"rc={r.returncode}: {r.stderr.strip()}")
+        stdout = r.stdout
+    except subprocess.TimeoutExpired as e:
+        stdout, err = "", f"timeout after {e.timeout}s"
+    rows = []
+    parsed = {}
+    if not err:
+        for line in stdout.splitlines():
+            if line.startswith("FUSED "):
+                parsed[line.split()[1]] = dict(
+                    f.split("=") for f in line.split()[2:])
+    for fu, f in parsed.items():
+        dt = float(f["total_s"])
+        iters = int(f["iters"])
+        rows.append({
+            "name": f"engine/fused_update_{fu}",
+            "us_per_call": dt / max(1, iters) * 1e6,
+            "derived": f"ndev={f['ndev']};iters={iters};"
+                       f"total_s={dt:.3f};plan=halo;backend=pallas",
+        })
+    if not rows:
+        rows.append({"name": "engine/fused_matrix", "us_per_call": 0.0,
+                     "derived": "FAILED: "
+                                + (err or "no FUSED lines")[-200:]})
+    return rows
+
+
 def _time_engine(graph, cfg, eng, chunk_size=None):
     """(seconds_warm, iterations): second call timed, first pays compile."""
     kw = {"record_history": False, "engine": eng}
@@ -302,6 +372,7 @@ def run(quick: bool = False) -> list:
     # overlap schedule: interior scoring concurrent with the halo
     # exchange vs the sequential step, same mesh and trajectory
     rows.extend(_overlap_matrix_rows(quick))
+    rows.extend(_fused_matrix_rows(quick))
 
     # Figure 7 traffic decay: the delta plan ships one (index, label) pair
     # per migration to each peer, so the per-iteration wire volume is the

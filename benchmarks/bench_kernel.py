@@ -1,5 +1,10 @@
 """Spinner-scores Pallas kernel: interpret-mode validation timing + the
 static VMEM/roofline accounting of the kernel itself (TPU-target numbers).
+
+Tile configs come from the autotuner (``repro.kernels.autotune``), not a
+hardcoded sweep, so each row reports the shape the engine would actually
+bind; the modeled-traffic columns quantify the fused megakernel's HBM
+win (the (V_pad, k_pad) score write+read the split path pays).
 """
 from __future__ import annotations
 
@@ -11,7 +16,7 @@ import numpy as np
 
 from repro.core import generators
 from repro.core.graph import build_tiled_csr
-from repro.kernels import ops, ref
+from repro.kernels import autotune, ops, ref
 
 from .common import emit
 
@@ -19,8 +24,9 @@ from .common import emit
 def run(quick: bool = False) -> list:
     rows = []
     g = generators.powerlaw_ba(3000 if quick else 20_000, 8, seed=0)
-    for k, tile in ((16, 128), (64, 128), (256, 128)):
-        tiled = build_tiled_csr(g, tile_v=tile, tile_e=tile)
+    for k in (16, 64, 256):
+        tile_v, tile_e, k_pad = autotune.choose_tile_config(g, k)
+        tiled = build_tiled_csr(g, tile_v=tile_v, tile_e=tile_e)
         labels = jnp.asarray(
             np.random.default_rng(0).integers(0, k, g.num_vertices),
             jnp.int32)
@@ -38,42 +44,64 @@ def run(quick: bool = False) -> list:
         t0 = time.time()
         f(labels).block_until_ready()
         dt = time.time() - t0
-        # static kernel accounting for the TPU target
-        k_pad = ops.round_up(k, 128)
+        # static kernel accounting for the TPU target: the (tile_v, k_pad)
+        # accumulator stays VMEM-resident across ALL chunk revisits of its
+        # tile, on top of the double-buffered edge blocks and the two
+        # one-hot matmul operands
         e_pad = tiled.num_tiles * tiled.max_chunks * tiled.tile_e
-        vmem = (tile * tiled.tile_e + tiled.tile_e * k_pad
-                + tile * k_pad) * 4
-        mxu_flops = 2 * e_pad * (tile + k_pad)
-        hbm = e_pad * (4 + 4 + 4) + tiled.padded_v * k_pad * 4
+        vmem = (tile_v * k_pad                 # persistent accumulator
+                + 2 * 3 * tile_e               # double-buffered edge chunk
+                + tile_e * tile_v              # one-hot src operand
+                + tile_e * k_pad) * 4          # one-hot label operand
+        mxu_flops = 2 * e_pad * (tile_v + k_pad)
+        split, fused = autotune.modeled_traffic(tiled.padded_v, e_pad,
+                                                k_pad)
+        s_bytes, f_bytes = sum(split.values()), sum(fused.values())
+        n_edges = 2 * g.num_undirected_edges
         rows.append({
             "name": f"kernel/spinner_scores/k{k}",
             "us_per_call": dt * 1e6,
             "derived": f"max_err={err:.1e};vmem_bytes={vmem};"
-                       f"pad_overhead={e_pad / (2 * g.num_undirected_edges):.2f};"
-                       f"arith_intensity={mxu_flops / hbm:.1f}",
+                       f"tile=({tile_v},{tile_e},{k_pad});"
+                       f"pad_overhead={e_pad / n_edges:.2f};"
+                       f"split_Bpe={s_bytes / n_edges:.1f};"
+                       f"fused_Bpe={f_bytes / n_edges:.1f};"
+                       f"hbm_drop={1 - f_bytes / s_bytes:.2f}",
             "err": err, "vmem": vmem, "e_pad": e_pad,
+            "tile_config": (tile_v, tile_e, k_pad),
+            "split_bytes": s_bytes, "fused_bytes": f_bytes,
+            "arith_intensity_fused": mxu_flops / f_bytes,
         })
 
     # end-to-end: both score backends driven by the fused on-device engine
     # (interpret-mode Pallas is host-speed; the row validates the plumbing
-    # and gives the XLA-backend steady-state number)
+    # and gives the XLA-backend steady-state number).  The pallas backend
+    # additionally runs with the megakernel on/off, parity asserted.
     from repro.core import EngineOptions, SpinnerConfig, partition
     g_small = generators.powerlaw_ba(1000 if quick else 3000, 6, seed=1)
     for backend in ("xla",) if quick else ("xla", "pallas"):
         cfg = SpinnerConfig(k=16, seed=0, max_iters=30)
-        opts = EngineOptions(score_backend=backend)
-        partition(g_small, cfg, record_history=False,
-                  engine="fused", options=opts)       # compile
-        t0 = time.time()
-        res = partition(g_small, cfg, record_history=False, engine="fused",
-                        options=opts)
-        dt = time.time() - t0
-        rows.append({
-            "name": f"kernel/fused_engine/{backend}",
-            "us_per_call": dt * 1e6 / max(1, res.iterations),
-            "derived": f"iters={res.iterations};total_s={dt:.3f};"
-                       f"backend={backend}",
-        })
+        fus = ("off",) if backend == "xla" else ("off", "on")
+        res = {}
+        for fu in fus:
+            opts = EngineOptions(score_backend=backend, fused_update=fu)
+            partition(g_small, cfg, record_history=False,
+                      engine="fused", options=opts)       # compile
+            t0 = time.time()
+            res[fu] = partition(g_small, cfg, record_history=False,
+                                engine="fused", options=opts)
+            dt = time.time() - t0
+            rows.append({
+                "name": f"kernel/fused_engine/{backend}"
+                        + (f"/fused_{fu}" if backend == "pallas" else ""),
+                "us_per_call": dt * 1e6 / max(1, res[fu].iterations),
+                "derived": f"iters={res[fu].iterations};total_s={dt:.3f};"
+                           f"backend={backend}",
+            })
+        if len(res) == 2:
+            assert np.array_equal(np.asarray(res["off"].labels),
+                                  np.asarray(res["on"].labels)), \
+                "fused megakernel diverged from split path"
     emit(rows, "bench_kernel")
     return rows
 

@@ -177,7 +177,8 @@ def device_upload(sg: ShardedGraph, field: str) -> jax.Array:
 
 
 def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig,
-               options: Optional[engine.EngineOptions] = None) -> dict:
+               options: Optional[engine.EngineOptions] = None,
+               graph: Optional[Graph] = None) -> dict:
     """Per-iteration communication volume of the sharded engine.
 
     The label exchange (plan selected by ``options.label_exchange``, see
@@ -186,9 +187,15 @@ def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig,
     with workers and Figure 7 shows decaying.  ``message_bytes_per_iter``
     is the plan's static message volume; None for the delta plan, whose
     volume is measured on device (``PartitionResult.exchanged_bytes``).
+
+    Passing ``graph`` (the padded view the runner binds) additionally
+    resolves the tile autotuner, so the reported ``score_backend`` /
+    ``fused_update`` / ``tile_config`` match the compiled program.
     """
     from . import comm, metrics
     opts = options if options is not None else engine.EngineOptions()
+    if graph is not None:
+        opts = engine._autotuned(graph, cfg, opts, ndev=sg.ndev)
     name = opts.resolved_label_exchange(sg.ndev)
     # same pad flag as the runner's plan (engine._sharded_parts), so this
     # hits the cached plan and halo's padded volume matches what the
@@ -208,6 +215,14 @@ def comm_stats(sg: ShardedGraph, cfg: SpinnerConfig,
         "edge_shard_sizes": [int((sg.weight[p] > 0).sum())
                              for p in range(sg.ndev)],
     }
+    backend = opts.backend()
+    stats["score_backend"] = backend.name
+    stats["fused_update"] = opts.resolved_fused_update()
+    if backend.name == "pallas":
+        from repro.kernels.ops import round_up
+        stats["tile_config"] = {"tile_v": backend.tile_v,
+                                "tile_e": backend.tile_e,
+                                "k_pad": round_up(max(cfg.k, 1), 128)}
     if name == "halo":
         # message_bytes_per_iter above is the TRUE halo volume; this is
         # what the static-shape all_to_all physically moves
@@ -289,7 +304,8 @@ def partition_distributed(graph: Graph, cfg: SpinnerConfig, mesh: Mesh,
                     engine="sharded", mesh=mesh, axis=axis, options=opts)
     padded, _ = engine.padded_view(graph, opts)
     sg = shard_layout(padded, mesh.shape[axis], pad=opts.pad == "bucket")
-    stats = dict(comm_stats(sg, cfg, opts), iterations=res.iterations,
+    stats = dict(comm_stats(sg, cfg, opts, graph=padded),
+                 iterations=res.iterations,
                  halted=res.halted,
                  exchanged_bytes=res.exchanged_bytes)
     return res.labels, stats

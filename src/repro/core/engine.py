@@ -186,6 +186,28 @@ class EngineOptions:
     # sums exact under the segment split).  "auto" = on over a real
     # mesh, off on a single device (nothing to overlap).
     overlap: str = "auto"            # auto | on | off
+    # Fused vertex update.  "on" asks the score backend for its
+    # make_fused_update entry: the edge reduction, Eq. 7-8 normalization,
+    # tie-noise argmax and migration bookkeeping run inside ONE kernel and
+    # the (V_pad, k) score matrix never touches HBM (see
+    # kernels/spinner_scores._fused_kernel); only the O(V + k) epilogue
+    # (make_update_parts's ``finish``) runs as XLA ops.  Bit-identical to
+    # "off" for every engine, exchange plan and overlap schedule (integer
+    # Eq. 3 weights; same op order; same noise/u streams).  "auto" = on
+    # iff the backend advertises ``fused_auto`` (the Pallas backend does;
+    # XLA's scatter path gains nothing from fusing by hand).
+    fused_update: str = "auto"       # auto | on | off
+    # Tile autotuning for the Pallas backend: sweep the
+    # kernels.autotune.CANDIDATES (tile_v, tile_e) configs against a
+    # static roofline cost model of the actual degree distribution and
+    # bind the winner (a dataclasses.replace of the backend, so it flows
+    # into every program/arg cache key like any other backend).  The
+    # choice is memoized per padded (V, E, k_pad, ndev) bucket -- the
+    # first graph in a bucket decides -- so a session's warm same-bucket
+    # adapt() never flips config and costs zero new compiles.  "auto"
+    # tunes the registry default ("pallas" by name); explicit
+    # PallasTiledBackend instances pin their tile config unless "on".
+    autotune: str = "auto"           # auto | on | off
     pad: str = "bucket"              # bucket | none
 
     def resolved_label_exchange(self, ndev: int) -> str:
@@ -212,6 +234,31 @@ class EngineOptions:
             raise ValueError(f"unknown overlap {self.overlap!r}; "
                              "available: auto, on, off")
         return self.overlap
+
+    def resolved_fused_update(self) -> str:
+        if self.fused_update not in ("auto", "on", "off"):
+            raise ValueError(f"unknown fused_update {self.fused_update!r}; "
+                             "available: auto, on, off")
+        if self.fused_update == "off":
+            return "off"
+        backend = self.backend()
+        has = callable(getattr(backend, "make_fused_update", None))
+        if self.fused_update == "auto":
+            return "on" if (has and getattr(backend, "fused_auto", False)) \
+                else "off"
+        if not has:
+            raise ValueError(
+                f"score backend {getattr(backend, 'name', backend)!r} has "
+                "no fused vertex-update entry (make_fused_update); use "
+                "fused_update='auto'/'off' or a backend implementing the "
+                "fused protocol")
+        return "on"
+
+    def resolved_autotune(self) -> str:
+        if self.autotune not in ("auto", "on", "off"):
+            raise ValueError(f"unknown autotune {self.autotune!r}; "
+                             "available: auto, on, off")
+        return self.autotune
 
     def backend(self):
         from repro.kernels import ops as kernel_ops   # lazy: no import cycle
@@ -339,9 +386,12 @@ def _single_bind(graph: Graph, cfg, opts: EngineOptions,
     else:
         backend = opts.backend()
         pad = opts.pad == "bucket"
+        fused = opts.resolved_fused_update() == "on"
+        args_of = backend.fused_graph_args if fused else backend.graph_args
         score_args = _graph_cached(
-            _SCORE_ARG_CACHE, padded, ("single", backend.signature(), pad),
-            lambda: tuple(backend.graph_args(padded, cfg.k, pad=pad)))
+            _SCORE_ARG_CACHE, padded,
+            ("single", backend.signature(), pad, fused),
+            lambda: tuple(args_of(padded, cfg.k, pad=pad)))
     if hist and graph.src.size:
         src, dst, w, _ = device_edges(padded)
         hist_args = (src, dst, w,
@@ -355,48 +405,93 @@ def _single_bind(graph: Graph, cfg, opts: EngineOptions,
                      score=score_args, hist=hist_args), padded
 
 
+def _autotuned(graph: Graph, cfg, opts: EngineOptions,
+               ndev: int = 1) -> EngineOptions:
+    """Options with the tile autotuner's (tile_v, tile_e) choice applied.
+
+    Only the Pallas backend is tunable; the winner is bound by
+    ``dataclasses.replace`` on the backend instance, so it flows into
+    ``signature()`` and thence every program / score-arg cache key -- an
+    autotuned config is cached exactly like a hand-picked one.  The
+    choice is memoized per padded (V, E, k_pad, ndev) shape
+    (``kernels.autotune``), so every graph in a shape bucket resolves to
+    ONE config and warm session rebinds stay compile-free.  Under
+    ``autotune="auto"`` explicit backend INSTANCES are left alone (they
+    pin their tile config); ``"on"`` tunes those too.
+    """
+    mode = opts.resolved_autotune()
+    if mode == "off":
+        return opts
+    if mode == "auto" and not isinstance(opts.score_backend, str):
+        return opts
+    backend = opts.backend()
+    if getattr(backend, "name", None) != "pallas":
+        return opts
+    from repro.kernels import autotune as _tune   # lazy: no import cycle
+    padded, _ = padded_view(graph, opts)
+    tile_v, tile_e, _kp = _tune.choose_tile_config(padded, cfg.k, ndev=ndev)
+    if (tile_v, tile_e) == (backend.tile_v, backend.tile_e):
+        return opts
+    return dataclasses.replace(opts, score_backend=dataclasses.replace(
+        backend, tile_v=tile_v, tile_e=tile_e))
+
+
 # ---------------------------------------------------------------------------
 # The iteration math (shared verbatim by every engine)
 # ---------------------------------------------------------------------------
 
-def make_vertex_update(cfg) -> Callable:
-    """The per-vertex two-phase update (Eqs. 7-8, 11-12) as a pure function.
+def make_update_parts(k: int, *, degree_weighted: bool,
+                      current_bonus: float) -> Tuple[Callable, Callable]:
+    """The vertex update split at its one global synchronization point.
 
-    Shared verbatim by the single-device iteration and the per-shard
-    sharded iteration, which is what makes every engine an oracle of the
-    others.  The caller supplies whatever slice of the vertex set it owns
-    plus the matching noise/u draws and the Eq. 5 capacity ``C`` (a
-    traced scalar, so graph growth never forces a recompile); every (k,)
-    or scalar aggregate (M(l), the load delta, score(G), migration
-    counts) goes through ``reduce_`` -- identity on a single device,
-    ``lax.psum`` over the vertex axis under ``shard_map``, i.e. the
-    Giraph sharded aggregators as one collective each.
+    ``propose(scores, labels, deg_w, loads, noise, valid, C)`` is the
+    per-vertex half -- Eq. 7-8 normalization, penalty, current-label
+    bonus and tie-noise argmax plus the local migration-candidate mass
+    partial -- returning ``(best, tot_best, tot_cur, m_partial)``:
+    the proposed label, the Eq. 8 total at the proposal and at the
+    current label, and the un-reduced (k,) M(l) contribution.  A fused
+    score backend computes these INSIDE its kernel (the (V, k) score
+    matrix never materializes); this reference form shares its exact op
+    sequence so the two are bit-identical.
 
-    ``valid`` masks padding vertices introduced by the shape-bucket /
-    sharded layouts; pads never migrate and contribute nothing to any
-    aggregate.  (``None`` statically skips the masking ops.  Tie-break
-    noise is drawn over the padded set, so trajectories are
-    deterministic PER padded layout -- see ``graph.pad_graph``.)
+    ``finish(best, tot_best, tot_cur, m_partial, labels, deg_w, loads,
+    u, valid, reduce_, C)`` is the epilogue that needs the globally
+    reduced M(l): the Eq. 11-12 probability test, the load delta, and
+    the score(G)/migration aggregates.  O(V + k) -- no (V, k) operand.
+
+    ``reduce_`` is identity on a single device and ``lax.psum`` under
+    ``shard_map`` (the Giraph sharded aggregators as one collective
+    each); ``valid`` masks padding vertices (``None`` statically skips
+    the masking ops).
     """
-    k = cfg.k
-    degree_weighted = cfg.migration_weighting == "edges"
 
-    def update(scores, labels, deg_w, loads, noise, u, valid, reduce_, C):
+    def propose(scores, labels, deg_w, loads, noise, valid, C):
         # ---- ComputeScores (Eq. 8) -------------------------------------
         norm = scores / jnp.maximum(deg_w, 1.0)[:, None]
         penalty = loads / C                                # pi(l) (Eq. 7)
         total = norm - penalty[None, :]
-        bonus = cfg.current_bonus * jax.nn.one_hot(labels, k,
-                                                   dtype=jnp.float32)
+        bonus = current_bonus * jax.nn.one_hot(labels, k,
+                                               dtype=jnp.float32)
         best = jnp.argmax(total + noise + bonus, axis=1).astype(jnp.int32)
+        want = best != labels
+        if valid is not None:
+            want = want & valid
+        measure = deg_w if degree_weighted else jnp.ones_like(deg_w)
+        m_partial = jnp.zeros((k,), jnp.float32).at[best].add(
+            jnp.where(want, measure, 0.0))
+        tot_best = jnp.take_along_axis(total, best[:, None], axis=1)[:, 0]
+        tot_cur = jnp.take_along_axis(total, labels[:, None],
+                                      axis=1)[:, 0]
+        return best, tot_best, tot_cur, m_partial
+
+    def finish(best, tot_best, tot_cur, m_partial, labels, deg_w, loads,
+               u, valid, reduce_, C):
         want = best != labels
         if valid is not None:
             want = want & valid
 
         # ---- ComputeMigrations (Eq. 11-12) -----------------------------
-        measure = deg_w if degree_weighted else jnp.ones_like(deg_w)
-        M = reduce_(jnp.zeros((k,), jnp.float32).at[best].add(
-            jnp.where(want, measure, 0.0)))                # aggregator
+        M = reduce_(m_partial)                             # aggregator
         R = jnp.maximum(C - loads, 0.0)                    # Eq. 11
         p = jnp.clip(R / jnp.maximum(M, 1e-9), 0.0, 1.0)   # Eq. 12
         migrate = want & (u < p[best])
@@ -409,7 +504,8 @@ def make_vertex_update(cfg) -> Callable:
         new_loads = loads + reduce_(delta)                 # aggregator
 
         # ---- halting aggregate: score(G) at the new assignment (Eq. 9) --
-        sel = jnp.take_along_axis(total, new_labels[:, None], axis=1)[:, 0]
+        # total[v, new_labels[v]] == tot_best where migrating else tot_cur
+        sel = jnp.where(migrate, tot_best, tot_cur)
         if valid is not None:
             sel = jnp.where(valid, sel, 0.0)
         score_g = reduce_(jnp.sum(sel))                    # aggregator
@@ -418,6 +514,37 @@ def make_vertex_update(cfg) -> Callable:
         n_mig = reduce_(jnp.sum(migrate).astype(jnp.int32))
         mig_mass = reduce_(jnp.sum(mig_deg))
         return new_labels, new_loads, score_g, n_mig, mig_mass
+
+    return propose, finish
+
+
+def make_vertex_update(cfg) -> Callable:
+    """The per-vertex two-phase update (Eqs. 7-8, 11-12) as a pure function.
+
+    Shared verbatim by the single-device iteration and the per-shard
+    sharded iteration, which is what makes every engine an oracle of the
+    others.  The caller supplies whatever slice of the vertex set it owns
+    plus the matching noise/u draws and the Eq. 5 capacity ``C`` (a
+    traced scalar, so graph growth never forces a recompile).  Composed
+    from ``make_update_parts`` -- the same two halves a fused score
+    backend splits across its kernel and the XLA epilogue -- so the
+    dense-scores and fused paths walk identical trajectories.
+
+    ``valid`` masks padding vertices introduced by the shape-bucket /
+    sharded layouts; pads never migrate and contribute nothing to any
+    aggregate.  (``None`` statically skips the masking ops.  Tie-break
+    noise is drawn over the padded set, so trajectories are
+    deterministic PER padded layout -- see ``graph.pad_graph``.)
+    """
+    propose, finish = make_update_parts(
+        cfg.k, degree_weighted=cfg.migration_weighting == "edges",
+        current_bonus=cfg.current_bonus)
+
+    def update(scores, labels, deg_w, loads, noise, u, valid, reduce_, C):
+        best, tot_best, tot_cur, m_partial = propose(
+            scores, labels, deg_w, loads, noise, valid, C)
+        return finish(best, tot_best, tot_cur, m_partial, labels, deg_w,
+                      loads, u, valid, reduce_, C)
 
     return update
 
@@ -437,34 +564,43 @@ def _halting_update(best_score, stall, score_g, eps, halt_window):
     return new_best, new_stall, new_stall >= halt_window
 
 
-def _bind_iterate(cfg, scores_fn: Callable) -> Callable:
+def _bind_iterate(cfg, scores_fn: Callable, fused: bool = False) -> Callable:
     """One LPA iteration in bind-argument form (graph data as arguments).
 
     ``iterate(labels, loads, key, bind) -> (labels, loads, score_g,
     n_migrations, migration_mass)``.  Noise/u are drawn over the padded
     vertex set, so for a fixed padded layout the host loop, the fused
     runner and a 1-device sharded mesh consume identical streams.
+
+    With ``fused=True``, ``scores_fn`` is the backend's whole-update
+    closure (``make_fused_update``): it consumes the same noise/u/valid
+    arrays and returns the iteration outputs directly -- the (V_pad, k)
+    score matrix never materializes.
     """
     k, tie = cfg.k, cfg.tie_noise
-    update = make_vertex_update(cfg)
+    update = None if fused else make_vertex_update(cfg)
 
     def iterate(labels, loads, key, bind: GraphBind):
-        scores = scores_fn(labels, *bind.score)            # (V_pad, k) f32
         v_pad = labels.shape[0]
         k_noise, k_mig = jax.random.split(key)
         noise = jax.random.uniform(k_noise, (v_pad, k), jnp.float32,
                                    0.0, tie)
         u = jax.random.uniform(k_mig, (v_pad,), jnp.float32)
         valid = jnp.arange(v_pad, dtype=jnp.int32) < bind.num_real
+        if fused:
+            return scores_fn(labels, labels, bind.deg_w, loads, noise, u,
+                             valid, lambda x: x, bind.capacity,
+                             *bind.score)
+        scores = scores_fn(labels, *bind.score)            # (V_pad, k) f32
         return update(scores, labels, bind.deg_w, loads, noise, u, valid,
                       lambda x: x, bind.capacity)
 
     return iterate
 
 
-def _bind_step(cfg, scores_fn: Callable) -> Callable:
+def _bind_step(cfg, scores_fn: Callable, fused: bool = False) -> Callable:
     """Jittable ``(SpinnerState, GraphBind) -> SpinnerState`` transition."""
-    iterate = _bind_iterate(cfg, scores_fn)
+    iterate = _bind_iterate(cfg, scores_fn, fused)
     eps = jnp.float32(cfg.eps)
     halt_window = cfg.halt_window
 
@@ -485,13 +621,25 @@ def _bind_step(cfg, scores_fn: Callable) -> Callable:
     return step_fn
 
 
-def _scores_for(cfg, opts: EngineOptions,
-                score_fn: Optional[Callable]) -> Tuple[Callable, tuple]:
-    """(traced scores closure, static signature) for single-device runs."""
+def _update_for(cfg, opts: EngineOptions, score_fn: Optional[Callable]
+                ) -> Tuple[Callable, tuple, bool]:
+    """(traced closure, static signature, fused?) for single-device runs.
+
+    Non-fused: the backend's ``make_scores`` closure (or a custom
+    ``score_fn``, which is single-phase dense by contract and therefore
+    pins fused off).  Fused: the backend's ``make_fused_update`` whole-
+    iteration closure.  The fused flag is part of every program cache
+    key, so the two paths never share an executable.
+    """
     if score_fn is not None:
-        return (lambda labels, *unused: score_fn(labels)), ("custom",)
+        return (lambda labels, *unused: score_fn(labels)), ("custom",), False
     backend = opts.backend()
-    return backend.make_scores(cfg.k), backend.signature()
+    if opts.resolved_fused_update() == "on":
+        fn = backend.make_fused_update(
+            cfg.k, degree_weighted=cfg.migration_weighting == "edges",
+            current_bonus=float(cfg.current_bonus))
+        return fn, backend.signature(), True
+    return backend.make_scores(cfg.k), backend.signature(), False
 
 
 # ---------------------------------------------------------------------------
@@ -500,35 +648,35 @@ def _scores_for(cfg, opts: EngineOptions,
 
 def _iterate_program(cfg, opts, score_fn=None) -> Program:
     """``run(labels, loads, key, bind)`` -- the host loop's jitted step."""
-    scores_fn, sig = _scores_for(cfg, opts, score_fn)
+    scores_fn, sig, fused = _update_for(cfg, opts, score_fn)
 
     def build():
-        return jax.jit(_bind_iterate(cfg, scores_fn))
+        return jax.jit(_bind_iterate(cfg, scores_fn, fused))
 
     if score_fn is not None:
         return Program(run=build())
-    return _program(("iterate", _static_cfg(cfg), sig), build)
+    return _program(("iterate", _static_cfg(cfg), sig, fused), build)
 
 
 def _state_step_program(cfg, opts, score_fn=None) -> Program:
     """``run(state, bind)`` -- one state transition (make_step_fn)."""
-    scores_fn, sig = _scores_for(cfg, opts, score_fn)
+    scores_fn, sig, fused = _update_for(cfg, opts, score_fn)
 
     def build():
-        return jax.jit(_bind_step(cfg, scores_fn))
+        return jax.jit(_bind_step(cfg, scores_fn, fused))
 
     if score_fn is not None:
         return Program(run=build())
-    return _program(("state_step", _static_cfg(cfg), sig), build)
+    return _program(("state_step", _static_cfg(cfg), sig, fused), build)
 
 
 def _fused_program(cfg, opts, score_fn=None) -> Program:
     """``run(state, bind)`` -- the whole run as one while_loop dispatch."""
-    scores_fn, sig = _scores_for(cfg, opts, score_fn)
+    scores_fn, sig, fused = _update_for(cfg, opts, score_fn)
     max_iters = cfg.max_iters
 
     def build():
-        step_fn = _bind_step(cfg, scores_fn)
+        step_fn = _bind_step(cfg, scores_fn, fused)
 
         def cond_fn(s: SpinnerState):
             return jnp.logical_and(jnp.logical_not(s.halted),
@@ -543,17 +691,17 @@ def _fused_program(cfg, opts, score_fn=None) -> Program:
 
     if score_fn is not None:
         return Program(run=build())
-    return _program(("fused", _static_cfg(cfg), sig), build)
+    return _program(("fused", _static_cfg(cfg), sig, fused), build)
 
 
 def _chunked_program(cfg, opts, chunk_size: int, record: bool,
                      has_edges: bool, score_fn=None) -> Program:
     """``run(state, bind) -> (state, records)`` -- one guarded scan chunk."""
-    scores_fn, sig = _scores_for(cfg, opts, score_fn)
+    scores_fn, sig, fused = _update_for(cfg, opts, score_fn)
     max_iters = cfg.max_iters
 
     def build():
-        step_fn = _bind_step(cfg, scores_fn)
+        step_fn = _bind_step(cfg, scores_fn, fused)
 
         @jax.jit
         def run(state: SpinnerState, bind: GraphBind):
@@ -594,8 +742,8 @@ def _chunked_program(cfg, opts, chunk_size: int, record: bool,
 
     if score_fn is not None:
         return Program(run=build())
-    return _program(("chunked", _static_cfg(cfg), sig, chunk_size, record,
-                     has_edges), build)
+    return _program(("chunked", _static_cfg(cfg), sig, fused, chunk_size,
+                     record, has_edges), build)
 
 
 # ---------------------------------------------------------------------------
@@ -628,6 +776,8 @@ def make_host_step(graph: Graph, cfg, opts: EngineOptions = _UNPADDED_OPTS,
     """
     if score_fn is not None:
         opts = dataclasses.replace(opts, pad="none")
+    else:
+        opts = _autotuned(graph, cfg, opts)
     bind, padded = _single_bind(graph, cfg, opts, score_fn=score_fn)
     prog = _iterate_program(cfg, opts, score_fn)
 
@@ -680,6 +830,8 @@ def make_fused_runner(graph: Graph, cfg,
     """
     if score_fn is not None:
         opts = dataclasses.replace(opts, pad="none")
+    else:
+        opts = _autotuned(graph, cfg, opts)
     bind, padded = _single_bind(graph, cfg, opts, score_fn=score_fn)
     prog = _fused_program(cfg, opts, score_fn)
     return _pad_slice_runner(prog, bind, padded, graph.num_vertices)
@@ -718,6 +870,8 @@ def make_chunked_runner(graph: Graph, cfg, chunk_size: int = DEFAULT_CHUNK,
     """
     if score_fn is not None:
         opts = dataclasses.replace(opts, pad="none")
+    else:
+        opts = _autotuned(graph, cfg, opts)
     has_edges = graph.src.size > 0
     bind, padded = _single_bind(graph, cfg, opts,
                                 hist=record and has_edges,
@@ -814,7 +968,8 @@ _DEFAULT_MESH: Optional[Mesh] = None
 
 def make_sharded_step_fn(cfg, axis: str, ndev: int, v_local: int, plan,
                          scores, noise_mode: str,
-                         overlap: bool = False) -> Callable:
+                         overlap: bool = False,
+                         fused: bool = False) -> Callable:
     """Per-device jittable sharded transition, parameterized by the plan.
 
     Runs INSIDE ``shard_map`` over ``axis``: ``state.labels`` arrives as
@@ -840,6 +995,14 @@ def make_sharded_step_fn(cfg, axis: str, ndev: int, v_local: int, plan,
     dataflow-independent and XLA's latency-hiding scheduler can overlap
     wire and compute.  Both schedules are bit-identical (the integer
     edge weights make the f32 partial sums exact).
+
+    Fused (``fused=True``): ``scores`` is the backend's whole-iteration
+    closure (``make_sharded_fused_update``; under overlap the
+    ``(interior_fn, frontier_fn)`` split form, where the interior phase
+    returns a RAW tiled score partial and the frontier megakernel seeds
+    its accumulator with it).  The closure consumes the exact same
+    noise/u/valid slices and the psum reducer the dense path hands to
+    ``make_vertex_update``, so the trajectory is bit-identical.
 
     Closes over static shape ints only (``ndev``, ``v_local``, the plan's
     signature) -- capacity, the real vertex count and every edge array
@@ -878,11 +1041,9 @@ def make_sharded_step_fn(cfg, axis: str, ndev: int, v_local: int, plan,
                                           *plan_blocks)
             partial = interior_fn(state.labels, *score_blocks)
             lookup, aux, xbytes = plan.finish_exchange(pending)
-            scores_v = frontier_fn(partial, lookup, *score_blocks)
         else:
             lookup, aux, xbytes = plan.exchange(state.labels, aux, axis,
                                                 *plan_blocks)
-            scores_v = scores(lookup, *score_blocks)       # (v_local, k)
         off = jax.lax.axis_index(axis) * v_local
         if noise_mode == "folded":
             k_dev = jax.random.fold_in(k_it, jax.lax.axis_index(axis))
@@ -898,9 +1059,19 @@ def make_sharded_step_fn(cfg, axis: str, ndev: int, v_local: int, plan,
             noise = jax.lax.dynamic_slice_in_dim(noise_full, off, v_local, 0)
             u = jax.lax.dynamic_slice_in_dim(u_full, off, v_local, 0)
         valid = off + jnp.arange(v_local, dtype=jnp.int32) < num_real
-        labels, loads, score_g, n_mig, mig_mass = update(
-            scores_v, state.labels, deg_l, state.loads, noise, u, valid,
-            psum, capacity)
+        if fused:
+            fused_fn = frontier_fn if overlap else scores
+            head = (partial, lookup) if overlap else (lookup,)
+            labels, loads, score_g, n_mig, mig_mass = fused_fn(
+                *head, state.labels, deg_l, state.loads, noise, u, valid,
+                psum, capacity, *score_blocks)
+        else:
+            scores_v = (frontier_fn(partial, lookup, *score_blocks)
+                        if overlap else
+                        scores(lookup, *score_blocks))     # (v_local, k)
+            labels, loads, score_g, n_mig, mig_mass = update(
+                scores_v, state.labels, deg_l, state.loads, noise, u,
+                valid, psum, capacity)
         best, stall, halted = _halting_update(
             state.best_score, state.stall, score_g, eps, halt_window)
         return SpinnerState(
@@ -918,10 +1089,11 @@ def _sharded_program(cfg, opts: EngineOptions, mesh: Mesh, axis: str,
                      plan_sig: tuple, n_score: int,
                      score_fn: Optional[Callable] = None,
                      single_step: bool = False,
-                     overlap: bool = False) -> Program:
+                     overlap: bool = False,
+                     fused: bool = False) -> Program:
     """The compiled sharded runner (or one-iteration step) for a static
     (cfg, backend, mesh, axis, plan signature, noise mode, overlap
-    schedule) tuple.
+    schedule, fused-update) tuple.
 
     Traces against an array-free ``plan_from_signature`` view, so the
     program closes over shape ints only and is shared by every graph
@@ -937,15 +1109,24 @@ def _sharded_program(cfg, opts: EngineOptions, mesh: Mesh, axis: str,
         scores_sig = backend.signature()
     kind = "sharded_step" if single_step else "sharded"
     key = (kind, _static_cfg(cfg), scores_sig, mesh, axis, plan_sig,
-           noise_mode, overlap)
+           noise_mode, overlap, fused)
     max_iters = cfg.max_iters
 
     def build():
         plan = comm.plan_from_signature(plan_sig)
         v_local = plan_sig[2] if plan_sig[0] != "allgather" \
             else plan_sig[2] // ndev
+        deg_weighted = cfg.migration_weighting == "edges"
         if score_fn is not None:
             scores = lambda lookup, *blocks: score_fn(lookup, *blocks)
+        elif fused and overlap:
+            scores = opts.backend().make_sharded_fused_update_split(
+                cfg.k, v_local, degree_weighted=deg_weighted,
+                current_bonus=float(cfg.current_bonus))
+        elif fused:
+            scores = opts.backend().make_sharded_fused_update(
+                cfg.k, v_local, degree_weighted=deg_weighted,
+                current_bonus=float(cfg.current_bonus))
         elif overlap:
             scores = opts.backend().make_sharded_scores_split(cfg.k,
                                                               v_local)
@@ -953,7 +1134,7 @@ def _sharded_program(cfg, opts: EngineOptions, mesh: Mesh, axis: str,
             scores = opts.backend().make_sharded_scores(cfg.k, v_local)
         step_fn = make_sharded_step_fn(cfg, axis, ndev, v_local, plan,
                                        scores, noise_mode,
-                                       overlap=overlap)
+                                       overlap=overlap, fused=fused)
 
         def cond_fn(carry):
             s = carry[0]
@@ -1022,11 +1203,14 @@ def _sharded_parts(graph: Graph, cfg, opts: EngineOptions, mesh: Mesh,
     if single_step:
         opts = dataclasses.replace(opts, label_exchange="allgather",
                                    overlap="off")
+    ndev = mesh.shape[axis]
+    if score_fn is None:
+        opts = _autotuned(graph, cfg, opts, ndev=ndev)
     padded, num_real = padded_view(graph, opts)
     pad = opts.pad == "bucket"
-    ndev = mesh.shape[axis]
     # custom score closures are single-phase by contract
     overlap = (opts.resolved_overlap(ndev) == "on" and score_fn is None)
+    fused = score_fn is None and opts.resolved_fused_update() == "on"
     sg = shard_layout(padded, ndev, pad=pad)
     plan = comm.make_exchange_plan(opts.resolved_label_exchange(ndev), sg,
                                    delta_cap=opts.delta_cap, pad=pad)
@@ -1038,11 +1222,16 @@ def _sharded_parts(graph: Graph, cfg, opts: EngineOptions, mesh: Mesh,
         # sweep (eps/seed/max_iters/...) over one graph shares one build,
         # and so do the allgather/delta plans (both index with sg.dst)
         dst_layout = "halo" if plan.dst_index is not sg.dst else "global"
-        args_of = (backend.sharded_graph_args_split if overlap
-                   else backend.sharded_graph_args)
+        if fused:
+            args_of = (backend.sharded_fused_graph_args_split if overlap
+                       else backend.sharded_fused_graph_args)
+        else:
+            args_of = (backend.sharded_graph_args_split if overlap
+                       else backend.sharded_graph_args)
         score_args = _graph_cached(
             _SCORE_ARG_CACHE, sg,
-            ("sharded", backend.signature(), dst_layout, pad, overlap),
+            ("sharded", backend.signature(), dst_layout, pad, overlap,
+             fused),
             lambda: tuple(args_of(sg, cfg.k, plan.dst_index, pad=pad)))
     else:
         # custom closures get the XLA backend's edge layout (same arrays,
@@ -1052,7 +1241,8 @@ def _sharded_parts(graph: Graph, cfg, opts: EngineOptions, mesh: Mesh,
             sg, cfg.k, plan.dst_index)
     prog = _sharded_program(cfg, opts, mesh, axis, plan.signature(),
                             len(score_args), score_fn,
-                            single_step=single_step, overlap=overlap)
+                            single_step=single_step, overlap=overlap,
+                            fused=fused)
     args = (jnp.float32(cfg.capacity(graph)), jnp.int32(num_real),
             device_upload(sg, "deg_w")) + tuple(score_args) \
         + tuple(plan.device_args())

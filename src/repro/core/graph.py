@@ -229,6 +229,32 @@ class TiledCSR:
     perm: np.ndarray        # int32 (V,) original vertex -> tiled row
     inv_perm: np.ndarray    # int32 (V_pad,) tiled row -> original vertex (or -1)
     padded_v: int
+    deg_t: np.ndarray = None  # f32 (num_tiles, tile_v) weighted degrees in
+                              # tiled row order (0 on pad rows) -- the fused
+                              # vertex-update kernel's per-tile deg_w view
+
+
+def round_robin_perm(deg_w: np.ndarray, tile_v: int) -> np.ndarray:
+    """Degree-balanced vertex -> tiled-row permutation.
+
+    Round-robins vertices (sorted by weighted degree, descending) across
+    ``ceil(V / tile_v)`` tiles so hub vertices spread out and per-tile edge
+    counts even up; ``rank[i]`` (the i-th largest degree) lands at row
+    ``(i % num_tiles) * tile_v + (i // num_tiles)``.  Exposed so the
+    overlap split can tile the interior and frontier edge segments against
+    ONE shared permutation (``ext_perm`` below) and hand the fused kernel a
+    single per-tile degree/label/noise layout.
+    """
+    V = int(np.asarray(deg_w).shape[0])
+    num_tiles = max(1, -(-V // tile_v))
+    if V <= tile_v:
+        return np.arange(V, dtype=np.int32)
+    rank = np.argsort(-deg_w, kind="stable")
+    # i // num_tiles <= (V-1) // num_tiles < tile_v, so no tile overflows.
+    i = np.arange(V, dtype=np.int64)
+    rows = np.empty(V, dtype=np.int64)
+    rows[rank] = (i % num_tiles) * tile_v + (i // num_tiles)
+    return rows.astype(np.int32)
 
 
 def build_tiled_csr(graph: Graph, tile_v: int = 128, tile_e: int = 128,
@@ -244,7 +270,8 @@ def build_tiled_csr(graph: Graph, tile_v: int = 128, tile_e: int = 128,
 def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
                       weight: np.ndarray, deg_w: np.ndarray, *,
                       tile_v: int, tile_e: int,
-                      balance_by_degree: bool, pad_chunks: int = 1
+                      balance_by_degree: bool, pad_chunks: int = 1,
+                      ext_perm: Optional[np.ndarray] = None
                       ) -> TiledCSR:
     """Tile a raw (src, dst, weight) edge list over ``V`` source rows.
 
@@ -252,22 +279,20 @@ def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
     (``build_sharded_tiled_csr``), where ``dst`` carries exchange-plan
     lookup indices rather than vertex ids and therefore cannot live in a
     ``Graph`` (whose invariants demand symmetric edges with dst < V).
+
+    ``ext_perm`` overrides the vertex -> tiled-row permutation, so two
+    edge segments of the same vertex range (the overlap schedule's
+    interior/frontier split) can share one row layout and their kernel
+    outputs add without any re-permutation.
     """
     num_tiles = max(1, -(-V // tile_v))
     padded_v = num_tiles * tile_v
 
-    if balance_by_degree and V > tile_v:
-        # Round-robin vertices (sorted by degree, desc) across tiles so hub
-        # vertices spread out and per-tile edge counts even up.
-        rank = np.argsort(-deg_w, kind="stable")
-        # rank[i] is the vertex with i-th largest degree; place it at row
-        # (i % num_tiles) * tile_v + (i // num_tiles): round-robin across
-        # tiles.  i // num_tiles <= (V-1) // num_tiles < tile_v, so no tile
-        # ever overflows.
-        i = np.arange(V, dtype=np.int64)
-        rows = np.empty(V, dtype=np.int64)
-        rows[rank] = (i % num_tiles) * tile_v + (i // num_tiles)
-        perm = rows.astype(np.int32)
+    if ext_perm is not None:
+        perm = np.asarray(ext_perm, dtype=np.int32)
+        assert perm.shape == (V,)
+    elif balance_by_degree:
+        perm = round_robin_perm(deg_w, tile_v)
     else:
         perm = np.arange(V, dtype=np.int32)
 
@@ -308,9 +333,12 @@ def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
         dstA[t, :nc].reshape(-1)[:n] = flat_d
         wA[t, :nc].reshape(-1)[:n] = flat_w
         del pad
+    deg_t = np.zeros(padded_v, dtype=np.float32)
+    deg_t[perm] = np.asarray(deg_w[:V], dtype=np.float32)
     return TiledCSR(tile_v=tile_v, tile_e=tile_e, num_tiles=num_tiles,
                     max_chunks=max_chunks, src_local=src_local, dst=dstA,
-                    weight=wA, perm=perm, inv_perm=inv_perm, padded_v=padded_v)
+                    weight=wA, perm=perm, inv_perm=inv_perm, padded_v=padded_v,
+                    deg_t=deg_t.reshape(num_tiles, tile_v))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -335,12 +363,18 @@ class ShardedTiledCSR:
     dst: np.ndarray         # int32 (ndev, num_tiles, max_chunks, tile_e)
     weight: np.ndarray      # float32 (ndev, num_tiles, max_chunks, tile_e)
     perm: np.ndarray        # int32 (ndev, v_per_dev) local vertex -> tiled row
+    inv_perm: np.ndarray = None  # int32 (ndev, num_tiles * tile_v) tiled row
+                                 # -> local vertex (or -1 on pad rows)
+    deg_t: np.ndarray = None     # f32 (ndev, num_tiles, tile_v) weighted
+                                 # degrees in tiled row order (0 on pads)
 
 
 def build_sharded_tiled_csr(sg, dst_index: Optional[np.ndarray] = None,
                             tile_v: int = 128, tile_e: int = 128,
                             balance_by_degree: bool = True,
-                            pad_chunks: int = 1) -> ShardedTiledCSR:
+                            pad_chunks: int = 1,
+                            ext_perm: Optional[np.ndarray] = None
+                            ) -> ShardedTiledCSR:
     """Retile a ``ShardedGraph``'s edge shards for the Pallas kernel.
 
     ``dst_index`` overrides the global destination ids (e.g. with an
@@ -348,6 +382,9 @@ def build_sharded_tiled_csr(sg, dst_index: Optional[np.ndarray] = None,
     ``build_tiled_csr`` over a per-shard view (local source ids, the
     shard's slice of the weighted degrees), so the kernel launched inside
     ``shard_map`` sees exactly the layout the single-device kernel does.
+    ``ext_perm`` (``(ndev, v_per_dev)``) pins every shard's row
+    permutation, letting two edge segments of one shard share a layout
+    (see ``_tile_edge_arrays``).
     """
     ndev, vl = sg.ndev, sg.v_per_dev
     dsts = sg.dst if dst_index is None else np.asarray(dst_index)
@@ -359,18 +396,24 @@ def build_sharded_tiled_csr(sg, dst_index: Optional[np.ndarray] = None,
             dsts[p][real].astype(np.int32),
             sg.weight[p][real].astype(np.float32), sg.deg_w[p],
             tile_v=tile_v, tile_e=tile_e,
-            balance_by_degree=balance_by_degree, pad_chunks=pad_chunks))
+            balance_by_degree=balance_by_degree, pad_chunks=pad_chunks,
+            ext_perm=None if ext_perm is None else ext_perm[p]))
     T = max(t.num_tiles for t in tiles)
     C = max(t.max_chunks for t in tiles)
     src_local = np.zeros((ndev, T, C, tile_e), np.int32)
     dstA = np.zeros((ndev, T, C, tile_e), np.int32)
     wA = np.zeros((ndev, T, C, tile_e), np.float32)
     perm = np.zeros((ndev, vl), np.int32)
+    inv = np.full((ndev, T * tile_v), -1, np.int32)
+    deg_t = np.zeros((ndev, T, tile_v), np.float32)
     for p, t in enumerate(tiles):
         src_local[p, : t.num_tiles, : t.max_chunks] = t.src_local
         dstA[p, : t.num_tiles, : t.max_chunks] = t.dst
         wA[p, : t.num_tiles, : t.max_chunks] = t.weight
         perm[p] = t.perm
+        inv[p, : t.padded_v] = t.inv_perm
+        deg_t[p, : t.num_tiles] = t.deg_t
     return ShardedTiledCSR(ndev=ndev, tile_v=tile_v, tile_e=tile_e,
                            num_tiles=T, max_chunks=C, src_local=src_local,
-                           dst=dstA, weight=wA, perm=perm)
+                           dst=dstA, weight=wA, perm=perm, inv_perm=inv,
+                           deg_t=deg_t)

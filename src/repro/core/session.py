@@ -230,7 +230,10 @@ class PartitionSession:
             self._track(prog)
             v_pad = _engine.sharded_v_pad(graph, opts, mesh, opts.axis)
         else:
-            _, padded = _engine._single_bind(graph, cfg, opts, hist=True)
+            # warm the arg cache the runner will actually read: the tile
+            # autotuner may rebind (tile_v, tile_e) on the backend
+            opts_t = _engine._autotuned(graph, cfg, opts)
+            _, padded = _engine._single_bind(graph, cfg, opts_t, hist=True)
             v_pad = padded.num_vertices
         labels, _, _ = prepare_init(
             graph, cfg, np.zeros(graph.num_vertices, np.int32))
@@ -303,6 +306,16 @@ class PartitionSession:
             "staged": (self._staged.num_vertices
                        if self._staged is not None else None),
         }
+        ndev = (opts.mesh.shape[opts.axis] if opts.mesh is not None else 1)
+        opts_t = _engine._autotuned(graph, self.cfg, opts, ndev=ndev)
+        backend = opts_t.backend()
+        d["score_backend"] = backend.name
+        d["fused_update"] = opts_t.resolved_fused_update()
+        if backend.name == "pallas":
+            from repro.kernels.ops import round_up
+            d["tile_config"] = {"tile_v": backend.tile_v,
+                                "tile_e": backend.tile_e,
+                                "k_pad": round_up(max(self.cfg.k, 1), 128)}
         if self._last is not None:
             d["last"] = {"iterations": self._last.iterations,
                          "halted": self._last.halted,
@@ -312,7 +325,7 @@ class PartitionSession:
             from .distributed import comm_stats, shard_layout
             sg = shard_layout(padded, opts.mesh.shape[opts.axis],
                               pad=opts.pad == "bucket")
-            d["exchange"] = comm_stats(sg, self.cfg, opts)
+            d["exchange"] = comm_stats(sg, self.cfg, opts, graph=padded)
         return d
 
     # -- internals ---------------------------------------------------------

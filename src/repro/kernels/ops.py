@@ -22,10 +22,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import (Graph, TiledCSR, build_sharded_tiled_csr,
-                              build_tiled_csr)
+                              build_tiled_csr, round_robin_perm)
 
 from . import ref
-from .spinner_scores import scores_from_tiles, spinner_scores_pallas
+from .spinner_scores import (fused_update_from_tiles, scores_from_tiles,
+                             spinner_scores_pallas)
 
 
 def _default_interpret() -> bool:
@@ -106,8 +107,25 @@ class ScoreBackend(Protocol):
         exact, so interior + frontier is bit-identical to the
         single-phase sum.
 
-    ``build`` / ``build_sharded`` are the legacy closure forms (args
-    baked in), kept for standalone callers.
+    A backend may ADDITIONALLY implement the FUSED vertex-update protocol
+    (``EngineOptions.fused_update``): ``make_fused_update(k, *,
+    degree_weighted, current_bonus)`` returns a whole-iteration closure
+    ``fused(lookup, labels, deg_w, loads, noise, u, valid, reduce_, C,
+    *fused_graph_args) -> (new_labels, new_loads, score_g, n_mig,
+    mig_mass)`` matching ``engine.make_vertex_update``'s output contract
+    bit for bit, but free to keep the (V, k) score matrix out of HBM
+    (the Pallas megakernel does).  The sharded forms
+    ``make_sharded_fused_update(k, v_local, ...)`` /
+    ``make_sharded_fused_update_split(k, v_local, ...)`` mirror the
+    scores/scores_split pair (the split interior returns a RAW partial in
+    whatever layout the backend's frontier closure expects), with
+    ``sharded_fused_graph_args`` / ``sharded_fused_graph_args_split``
+    building their per-graph arrays.  ``fused_auto = True`` opts the
+    backend into ``fused_update="auto"`` selection.
+
+    The legacy ``build`` / ``build_sharded`` closure forms (args baked
+    in) are RETIRED: every in-repo caller uses the split protocol above,
+    and the base class methods below raise with a pointer at it.
     """
 
     name: str
@@ -130,11 +148,14 @@ class ScoreBackend(Protocol):
     def sharded_graph_args_split(self, sg, k: int, dst_index: np.ndarray,
                                  pad: bool = False) -> tuple: ...
 
-    def build(self, graph: Graph, k: int
-              ) -> Callable[[jax.Array], jax.Array]: ...
 
-    def build_sharded(self, sg, k: int, dst_index: np.ndarray
-                      ) -> tuple: ...
+def _legacy_build_error(name: str) -> NotImplementedError:
+    return NotImplementedError(
+        f"ScoreBackend.{name} was retired: the baked-in closure form kept "
+        "per-graph arrays alive inside compiled programs.  Use the split "
+        "protocol instead -- make_scores(k) / graph_args(graph, k, pad) "
+        "(or the sharded/fused variants) -- and pass the args explicitly; "
+        "see the ScoreBackend docstring in repro.kernels.ops.")
 
 
 def _split_dst_views(sg, dst_index) -> tuple:
@@ -223,14 +244,87 @@ class XlaScatterBackend:
                 jnp.asarray(sg.src_local[:, e:]), jnp.asarray(d_fro),
                 jnp.asarray(sg.weight[:, e:]))
 
-    def build(self, graph: Graph, k: int) -> Callable[[jax.Array], jax.Array]:
-        args = self.graph_args(graph, k)
-        fn = self.make_scores(k)
-        return lambda labels: fn(labels, *args)
+    # ---- fused vertex update: scatter scores + the reference halves ----
+    # XLA has no VMEM residency to exploit, so the "fused" form is simply
+    # the scatter-add composed with engine.make_update_parts -- the
+    # reference implementation every fused kernel is measured against.
+    fused_auto = False
 
-    def build_sharded(self, sg, k: int, dst_index: np.ndarray) -> tuple:
-        args = self.sharded_graph_args(sg, k, dst_index)
-        return args, self.make_sharded_scores(k, sg.v_per_dev)
+    def make_fused_update(self, k: int, *, degree_weighted: bool,
+                          current_bonus: float) -> Callable:
+        from repro.core.engine import make_update_parts   # lazy: no cycle
+        propose, finish = make_update_parts(
+            k, degree_weighted=degree_weighted, current_bonus=current_bonus)
+
+        def fused(lookup, labels, deg_w, loads, noise, u, valid, reduce_,
+                  C, src, dst, w):
+            scores = ref.spinner_scores_ref(lookup, src, dst, w,
+                                            labels.shape[0], k)
+            best, tb, tc, m = propose(scores, labels, deg_w, loads, noise,
+                                      valid, C)
+            return finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
+                          reduce_, C)
+        return fused
+
+    def fused_graph_args(self, graph: Graph, k: int,
+                         pad: bool = False) -> tuple:
+        return self.graph_args(graph, k, pad=pad)
+
+    def make_sharded_fused_update(self, k: int, v_local: int, *,
+                                  degree_weighted: bool,
+                                  current_bonus: float) -> Callable:
+        from repro.core.engine import make_update_parts
+        propose, finish = make_update_parts(
+            k, degree_weighted=degree_weighted, current_bonus=current_bonus)
+
+        def fused(lookup, labels, deg_w, loads, noise, u, valid, reduce_,
+                  C, src_local, dst_idx, w):
+            nbr = lookup[dst_idx]
+            scores = jnp.zeros((v_local, k),
+                               jnp.float32).at[src_local, nbr].add(w)
+            best, tb, tc, m = propose(scores, labels, deg_w, loads, noise,
+                                      valid, C)
+            return finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
+                          reduce_, C)
+        return fused
+
+    def sharded_fused_graph_args(self, sg, k: int, dst_index: np.ndarray,
+                                 pad: bool = False) -> tuple:
+        return self.sharded_graph_args(sg, k, dst_index, pad=pad)
+
+    def make_sharded_fused_update_split(self, k: int, v_local: int, *,
+                                        degree_weighted: bool,
+                                        current_bonus: float) -> tuple:
+        from repro.core.engine import make_update_parts
+        propose, finish = make_update_parts(
+            k, degree_weighted=degree_weighted, current_bonus=current_bonus)
+
+        def interior(labels_local, src_i, dst_i, w_i, src_f, dst_f, w_f):
+            nbr = labels_local[dst_i]
+            return jnp.zeros((v_local, k),
+                             jnp.float32).at[src_i, nbr].add(w_i)
+
+        def frontier(partial, lookup, labels, deg_w, loads, noise, u,
+                     valid, reduce_, C, src_i, dst_i, w_i, src_f, dst_f,
+                     w_f):
+            scores = partial.at[src_f, lookup[dst_f]].add(w_f)
+            best, tb, tc, m = propose(scores, labels, deg_w, loads, noise,
+                                      valid, C)
+            return finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
+                          reduce_, C)
+
+        return interior, frontier
+
+    def sharded_fused_graph_args_split(self, sg, k: int,
+                                       dst_index: np.ndarray,
+                                       pad: bool = False) -> tuple:
+        return self.sharded_graph_args_split(sg, k, dst_index, pad=pad)
+
+    def build(self, graph: Graph, k: int):
+        raise _legacy_build_error("build")
+
+    def build_sharded(self, sg, k: int, dst_index: np.ndarray):
+        raise _legacy_build_error("build_sharded")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -321,14 +415,127 @@ class PallasTiledBackend:
                                        st_f.src_local, st_f.dst,
                                        st_f.weight, st_f.perm)))
 
-    def build(self, graph: Graph, k: int) -> Callable[[jax.Array], jax.Array]:
-        args = self.graph_args(graph, k)
-        fn = self.make_scores(k)
-        return lambda labels: fn(labels, *args)
+    # ---- fused vertex update: the megakernel (scores never hit HBM) ----
+    # The (tile_v, k_pad) block stays in VMEM from edge reduction through
+    # the Eq. 7-8 argmax proposal; only (tile_v,) vectors and the (1,
+    # k_pad) M(l) partial come back.  The Eq. 11-12 migration test runs as
+    # an XLA epilogue (engine.make_update_parts' ``finish``) because the
+    # acceptance probability needs the globally reduced M(l).
+    fused_auto = True
 
-    def build_sharded(self, sg, k: int, dst_index: np.ndarray) -> tuple:
-        args = self.sharded_graph_args(sg, k, dst_index)
-        return args, self.make_sharded_scores(k, sg.v_per_dev)
+    def make_fused_update(self, k: int, *, degree_weighted: bool,
+                          current_bonus: float) -> Callable:
+        from repro.core.engine import make_update_parts   # lazy: no cycle
+        _, finish = make_update_parts(
+            k, degree_weighted=degree_weighted, current_bonus=current_bonus)
+        k_pad = round_up(max(k, 1), 128)
+        interpret = self._interpret()
+
+        def fused(lookup, labels, deg_w, loads, noise, u, valid, reduce_,
+                  C, src_local, dst, w, perm, inv_perm, deg_t):
+            best, tb, tc, m = fused_update_from_tiles(
+                lookup, labels, deg_t, noise, valid, loads / C,
+                src_local, dst, w, perm, inv_perm, tile_v=self.tile_v,
+                k_pad=k_pad, k=k, current_bonus=current_bonus,
+                degree_weighted=degree_weighted, interpret=interpret)
+            return finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
+                          reduce_, C)
+        return fused
+
+    def fused_graph_args(self, graph: Graph, k: int,
+                         pad: bool = False) -> tuple:
+        tiled = build_tiled_csr(graph, tile_v=self.tile_v,
+                                tile_e=self.tile_e,
+                                pad_chunks=4 if pad else 1)
+        return tuple(map(jnp.asarray, (tiled.src_local, tiled.dst,
+                                       tiled.weight, tiled.perm,
+                                       tiled.inv_perm, tiled.deg_t)))
+
+    def make_sharded_fused_update(self, k: int, v_local: int, *,
+                                  degree_weighted: bool,
+                                  current_bonus: float) -> Callable:
+        # per-shard arrays are exactly a single-device tiling of the
+        # shard's local vertex range: same closure
+        return self.make_fused_update(k, degree_weighted=degree_weighted,
+                                      current_bonus=current_bonus)
+
+    def sharded_fused_graph_args(self, sg, k: int, dst_index: np.ndarray,
+                                 pad: bool = False) -> tuple:
+        st = build_sharded_tiled_csr(sg, dst_index, tile_v=self.tile_v,
+                                     tile_e=self.tile_e,
+                                     pad_chunks=4 if pad else 1)
+        return tuple(map(jnp.asarray, (st.src_local, st.dst, st.weight,
+                                       st.perm, st.inv_perm, st.deg_t)))
+
+    def make_sharded_fused_update_split(self, k: int, v_local: int, *,
+                                        degree_weighted: bool,
+                                        current_bonus: float) -> tuple:
+        """Overlap form: the interior kernel runs while the exchange is in
+        flight and returns its RAW tiled (T * tile_v, k_pad) partial; the
+        frontier megakernel seeds its VMEM accumulator with that partial
+        (``acc_init``), which is row-compatible because both segments are
+        tiled against ONE shared permutation (``ext_perm``)."""
+        from repro.core.engine import make_update_parts
+        _, finish = make_update_parts(
+            k, degree_weighted=degree_weighted, current_bonus=current_bonus)
+        k_pad = round_up(max(k, 1), 128)
+        interpret = self._interpret()
+
+        def interior(labels_local, si, di, wi, sf, df, wf, perm, inv_perm,
+                     deg_t):
+            return spinner_scores_pallas(si, labels_local[di], wi,
+                                         tile_v=self.tile_v, k_pad=k_pad,
+                                         interpret=interpret)
+
+        def frontier(partial, lookup, labels, deg_w, loads, noise, u,
+                     valid, reduce_, C, si, di, wi, sf, df, wf, perm,
+                     inv_perm, deg_t):
+            best, tb, tc, m = fused_update_from_tiles(
+                lookup, labels, deg_t, noise, valid, loads / C,
+                sf, df, wf, perm, inv_perm, tile_v=self.tile_v,
+                k_pad=k_pad, k=k, current_bonus=current_bonus,
+                degree_weighted=degree_weighted, interpret=interpret,
+                acc_init=partial)
+            return finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
+                          reduce_, C)
+
+        return interior, frontier
+
+    def sharded_fused_graph_args_split(self, sg, k: int,
+                                       dst_index: np.ndarray,
+                                       pad: bool = False) -> tuple:
+        e = sg.e_interior
+        d_int, d_fro = _split_dst_views(sg, dst_index)
+        # one degree-balanced row layout shared by both segment tilings,
+        # so interior partial rows line up with the frontier accumulator
+        ext = np.stack([round_robin_perm(sg.deg_w[p], self.tile_v)
+                        for p in range(sg.ndev)])
+        seg_i = dataclasses.replace(sg, src_local=sg.src_local[:, :e],
+                                    dst=sg.dst[:, :e],
+                                    weight=sg.weight[:, :e], edge_perm=None)
+        seg_f = dataclasses.replace(sg, src_local=sg.src_local[:, e:],
+                                    dst=sg.dst[:, e:],
+                                    weight=sg.weight[:, e:], edge_perm=None)
+        st_i = build_sharded_tiled_csr(seg_i, d_int, tile_v=self.tile_v,
+                                       tile_e=self.tile_e,
+                                       pad_chunks=4 if pad else 1,
+                                       ext_perm=ext)
+        st_f = build_sharded_tiled_csr(seg_f, d_fro, tile_v=self.tile_v,
+                                       tile_e=self.tile_e,
+                                       pad_chunks=4 if pad else 1,
+                                       ext_perm=ext)
+        # shared layout -> one perm/inv_perm/deg_t triple serves both
+        return tuple(map(jnp.asarray, (st_i.src_local, st_i.dst,
+                                       st_i.weight,
+                                       st_f.src_local, st_f.dst,
+                                       st_f.weight, st_f.perm,
+                                       st_f.inv_perm, st_f.deg_t)))
+
+    def build(self, graph: Graph, k: int):
+        raise _legacy_build_error("build")
+
+    def build_sharded(self, sg, k: int, dst_index: np.ndarray):
+        raise _legacy_build_error("build_sharded")
 
 
 SCORE_BACKENDS = {

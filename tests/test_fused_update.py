@@ -1,0 +1,329 @@
+"""Fused Pallas vertex-update megakernel (PR 6).
+
+Four pillars:
+
+  * fused-vs-split bit parity: ``EngineOptions(fused_update="on")`` runs
+    the whole Eq. 7-8 + Eq. 11-12 vertex update through the backend's
+    fused entry (the Pallas megakernel keeps the (V_pad, k_pad) score
+    block in VMEM) and must walk BIT-IDENTICAL trajectories to
+    ``fused_update="off"`` for every engine, exchange plan and overlap
+    schedule -- in-process single-device and on a 1-device mesh here, on
+    real 2/4/8-device meshes in the subprocess tests -- including the
+    edge cases k not a multiple of 128, hub-heavy degree skew, and
+    graphs smaller than one tile;
+  * the tile autotuner: deterministic (same graph + seed -> same chosen
+    config), memoized per shape bucket, and surfaced through
+    ``PartitionSession.stats()`` / ``comm_stats`` -- with a warm
+    same-bucket ``adapt()`` still performing zero new compiles;
+  * option plumbing: ``fused_update`` / ``autotune`` validation, the
+    auto-selection rule (Pallas opts in via ``fused_auto``, XLA stays on
+    its scatter path), and a clear error for backends without the fused
+    entry;
+  * retirement of the legacy ``ScoreBackend.build`` / ``build_sharded``
+    closure forms.
+
+Each test uses a unique ``max_iters`` so its programs are private in the
+global program cache and compile counts cannot be perturbed by other
+tests.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (EngineOptions, SpinnerConfig, engine, generators,
+                        partition)
+from repro.core.graph import add_edges
+from repro.core.session import PartitionSession
+from repro.kernels import autotune
+from repro.kernels.ops import SCORE_BACKENDS, PallasTiledBackend
+from repro.launch.mesh import make_partition_mesh
+
+from test_distributed import run_devices_subprocess
+
+
+@pytest.fixture(scope="module")
+def ws_graph():
+    return generators.watts_strogatz(300, 6, 0.2, seed=3)
+
+
+@pytest.fixture(scope="module")
+def mesh1():
+    return make_partition_mesh(1)
+
+
+def _assert_same(a, b):
+    np.testing.assert_array_equal(np.asarray(a.labels),
+                                  np.asarray(b.labels))
+    np.testing.assert_array_equal(np.asarray(a.loads), np.asarray(b.loads))
+    assert a.iterations == b.iterations
+    assert a.halted == b.halted
+
+
+def _run_pair(graph, cfg, *, eng="fused", backend="pallas", **opt_kw):
+    res = {}
+    for fu in ("off", "on"):
+        opts = EngineOptions(score_backend=backend, fused_update=fu,
+                             **opt_kw)
+        res[fu] = partition(graph, cfg, record_history=False, engine=eng,
+                            options=opts)
+    return res["off"], res["on"]
+
+
+class TestSingleDeviceParity:
+    @pytest.mark.parametrize("eng", ["fused", "chunked", "host"])
+    @pytest.mark.parametrize("backend", ["pallas", "xla"])
+    def test_engines(self, ws_graph, eng, backend):
+        cfg = SpinnerConfig(k=5, max_iters=82, seed=7)
+        off, on = _run_pair(ws_graph, cfg, eng=eng, backend=backend)
+        _assert_same(off, on)
+
+    def test_hub_heavy_skew(self):
+        """Preferential attachment concentrates degree on a few hubs;
+        the round-robin tile balancing must keep the megakernel exact."""
+        g = generators.powerlaw_ba(500, 5, seed=9)
+        cfg = SpinnerConfig(k=7, max_iters=83, seed=2)
+        _assert_same(*_run_pair(g, cfg))
+
+    def test_smaller_than_one_tile(self):
+        """V=40 < tile_v=128: a single partially-valid tile."""
+        g = generators.watts_strogatz(40, 4, 0.3, seed=5)
+        cfg = SpinnerConfig(k=3, max_iters=84, seed=1)
+        _assert_same(*_run_pair(g, cfg))
+
+    def test_k_not_multiple_of_128(self):
+        """k=130 -> k_pad=256: the pad columns must stay masked out of
+        the in-kernel argmax and the M(l) partial."""
+        g = generators.watts_strogatz(300, 6, 0.2, seed=8)
+        cfg = SpinnerConfig(k=130, max_iters=85, seed=4)
+        _assert_same(*_run_pair(g, cfg))
+
+
+class TestMeshParity:
+    """1-device mesh: every exchange plan and both overlap schedules must
+    reproduce the single-device fused-off trajectory bit for bit."""
+
+    @pytest.mark.parametrize("plan", ["allgather", "halo", "delta"])
+    @pytest.mark.parametrize("ov", ["off", "on"])
+    def test_plans_and_overlap(self, ws_graph, mesh1, plan, ov):
+        cfg = SpinnerConfig(k=5, max_iters=86, seed=7)
+        base = partition(ws_graph, cfg, record_history=False,
+                         engine="fused",
+                         options=EngineOptions(score_backend="pallas",
+                                               fused_update="off"))
+        for backend in ("pallas", "xla"):
+            r = partition(ws_graph, cfg, record_history=False,
+                          engine="sharded", mesh=mesh1,
+                          options=EngineOptions(score_backend=backend,
+                                                label_exchange=plan,
+                                                overlap=ov,
+                                                fused_update="on"))
+            _assert_same(base, r)
+
+
+class TestOptions:
+    def test_bogus_mode_rejected(self):
+        with pytest.raises(ValueError, match="fused_update"):
+            EngineOptions(fused_update="bogus").resolved_fused_update()
+        with pytest.raises(ValueError, match="autotune"):
+            EngineOptions(autotune="bogus").resolved_autotune()
+
+    def test_auto_selection(self):
+        # Pallas advertises fused_auto; XLA's scatter path gains nothing
+        assert EngineOptions(
+            score_backend="pallas").resolved_fused_update() == "on"
+        assert EngineOptions(
+            score_backend="xla").resolved_fused_update() == "off"
+        assert EngineOptions(score_backend="xla",
+                             fused_update="on"
+                             ).resolved_fused_update() == "on"
+        assert EngineOptions(score_backend="pallas",
+                             fused_update="off"
+                             ).resolved_fused_update() == "off"
+
+    def test_backend_without_fused_entry(self):
+        class Bare:
+            name = "bare"
+
+            def signature(self):
+                return ("bare",)
+
+        opts = EngineOptions(score_backend=Bare(), fused_update="on")
+        with pytest.raises(ValueError, match="make_fused_update"):
+            opts.resolved_fused_update()
+        # auto degrades to off instead of raising
+        assert dataclasses.replace(
+            opts, fused_update="auto").resolved_fused_update() == "off"
+
+
+class TestLegacyBuildRetired:
+    @pytest.mark.parametrize("backend", ["xla", "pallas"])
+    def test_build_raises(self, ws_graph, backend):
+        b = SCORE_BACKENDS[backend]
+        with pytest.raises(NotImplementedError, match="retired"):
+            b.build(ws_graph, 4)
+        with pytest.raises(NotImplementedError, match="retired"):
+            b.build_sharded(None, 4, None)
+
+
+class TestAutotune:
+    def test_deterministic_choice(self):
+        g1 = generators.watts_strogatz(700, 8, 0.2, seed=13)
+        g2 = generators.watts_strogatz(700, 8, 0.2, seed=13)
+        c1 = autotune.choose_tile_config(g1, 8)
+        c2 = autotune.choose_tile_config(g2, 8)
+        assert c1 == c2
+        assert c1[:2] in tuple(c[:2] for c in autotune.CANDIDATES) or \
+            c1[:2] in autotune.CANDIDATES
+        assert c1[2] == 128
+
+    def test_sweep_covers_candidates(self):
+        g = generators.powerlaw_ba(400, 6, seed=3)
+        rows = autotune.sweep(g, 16)
+        assert len(rows) == len(autotune.CANDIDATES)
+        costs = [r["cost_s"] for r in rows]
+        chosen = autotune.choose_tile_config(g, 16)
+        assert chosen[:2] == (rows[int(np.argmin(costs))]["tile_v"],
+                              rows[int(np.argmin(costs))]["tile_e"])
+
+    def test_modeled_traffic_removes_score_roundtrip(self):
+        split, fused = autotune.modeled_traffic(1024, 8192, 128)
+        vk = 1024 * 128 * 4
+        assert sum(split.values()) - sum(fused.values()) == 2 * vk
+        assert "score_write" not in fused and "score_read" not in fused
+
+    def test_applied_through_options(self, ws_graph):
+        cfg = SpinnerConfig(k=5, max_iters=87, seed=7)
+        opts = EngineOptions(score_backend="pallas", autotune="on")
+        tuned = engine._autotuned(ws_graph, cfg, opts)
+        b = tuned.backend()
+        padded, _ = engine.padded_view(ws_graph, opts)
+        want = autotune.choose_tile_config(padded, cfg.k)
+        assert (b.tile_v, b.tile_e) == want[:2]
+        # explicit instances pin their config under "auto"...
+        pinned = EngineOptions(
+            score_backend=PallasTiledBackend(tile_v=256, tile_e=128))
+        assert engine._autotuned(ws_graph, cfg, pinned) is pinned
+        # ...and are tuned under "on"
+        forced = dataclasses.replace(pinned, autotune="on")
+        fb = engine._autotuned(ws_graph, cfg, forced).backend()
+        assert (fb.tile_v, fb.tile_e) == want[:2]
+
+    def test_off_leaves_options_alone(self, ws_graph):
+        cfg = SpinnerConfig(k=5, max_iters=88, seed=7)
+        opts = EngineOptions(score_backend="pallas", autotune="off")
+        assert engine._autotuned(ws_graph, cfg, opts) is opts
+
+
+def _grow(graph, n_edges=30, new_vertices=2, seed=1):
+    """A same-bucket growth of ``graph`` (a few edges + vertices)."""
+    rng = np.random.default_rng(seed)
+    v = graph.num_vertices
+    return add_edges(graph, rng.integers(0, v, n_edges),
+                     rng.integers(0, v, n_edges),
+                     num_vertices=v + new_vertices)
+
+
+@pytest.fixture(scope="module")
+def session_graph():
+    # mid-bucket (V, E): _grow() stays in the same shape bucket
+    return generators.watts_strogatz(600, 8, 0.2, seed=11)
+
+
+class TestSessionIntegration:
+    def test_warm_adapt_zero_compiles_with_autotune(self, session_graph):
+        """Same shape bucket -> same memoized tile choice -> zero new
+        compiles on a warm fused+autotuned adapt (the determinism
+        guarantee the autotuner exists to protect)."""
+        cfg = SpinnerConfig(k=5, max_iters=89, seed=7)
+        opts = EngineOptions(score_backend="pallas", fused_update="on",
+                             autotune="on")
+        with PartitionSession(session_graph, cfg, opts) as s:
+            base = s.partition(record_history=False)
+            g2 = _grow(session_graph)
+            assert (engine.graph_buckets(g2)
+                    == engine.graph_buckets(session_graph))
+            before = s.compiles
+            warm = s.adapt(g2, record_history=False)
+            assert s.compiles == before, "autotuned warm adapt recompiled"
+            assert warm.iterations > 0 and base.iterations > 0
+
+    def test_stats_surface_tile_config(self, ws_graph):
+        cfg = SpinnerConfig(k=5, max_iters=90, seed=7)
+        opts = EngineOptions(score_backend="pallas")
+        with PartitionSession(ws_graph, cfg, opts) as s:
+            d = s.stats()
+            assert d["score_backend"] == "pallas"
+            assert d["fused_update"] == "on"       # pallas auto-opts in
+            tc = d["tile_config"]
+            padded, _ = engine.padded_view(ws_graph, opts)
+            assert (tc["tile_v"], tc["tile_e"], tc["k_pad"]) == \
+                autotune.choose_tile_config(padded, cfg.k)
+
+    def test_mesh_stats_surface_via_comm_stats(self, ws_graph, mesh1):
+        cfg = SpinnerConfig(k=5, max_iters=91, seed=7)
+        opts = EngineOptions(score_backend="pallas", engine="sharded",
+                             mesh=mesh1)
+        with PartitionSession(ws_graph, cfg, opts) as s:
+            d = s.stats()
+            ex = d["exchange"]
+            assert ex["score_backend"] == "pallas"
+            assert ex["fused_update"] == "on"
+            assert set(ex["tile_config"]) == {"tile_v", "tile_e", "k_pad"}
+
+    def test_xla_stats_have_no_tile_config(self, ws_graph):
+        cfg = SpinnerConfig(k=5, max_iters=92, seed=7)
+        with PartitionSession(ws_graph, cfg,
+                              EngineOptions(score_backend="xla")) as s:
+            d = s.stats()
+            assert d["score_backend"] == "xla"
+            assert d["fused_update"] == "off"
+            assert "tile_config" not in d
+
+
+FUSED_MULTIDEV = """
+import numpy as np
+from repro.core import EngineOptions, SpinnerConfig, generators, partition
+from repro.launch.mesh import make_partition_mesh
+
+g = generators.watts_strogatz(401, 8, 0.2, seed=11)
+cfg = SpinnerConfig(k=5, max_iters={max_iters}, seed=7)
+for ndev in (2, 4, 8):
+    mesh = make_partition_mesh(ndev)
+    base = partition(g, cfg, record_history=False, engine="sharded",
+                     mesh=mesh,
+                     options=EngineOptions(score_backend="{backend}",
+                                           label_exchange="allgather",
+                                           overlap="off",
+                                           fused_update="off"))
+    for plan in ("allgather", "halo", "delta"):
+        for ov in ("off", "on"):
+            r = partition(g, cfg, record_history=False, engine="sharded",
+                          mesh=mesh,
+                          options=EngineOptions(score_backend="{backend}",
+                                                label_exchange=plan,
+                                                overlap=ov,
+                                                fused_update="on"))
+            np.testing.assert_array_equal(np.asarray(base.labels),
+                                          np.asarray(r.labels))
+            np.testing.assert_array_equal(np.asarray(base.loads),
+                                          np.asarray(r.loads))
+            assert base.iterations == r.iterations, (ndev, plan, ov)
+print("FUSED MULTIDEV {backend} OK")
+"""
+
+
+@pytest.mark.slow
+def test_fused_multidev_xla():
+    r = run_devices_subprocess(FUSED_MULTIDEV.format(backend="xla",
+                                                     max_iters=40))
+    assert r.returncode == 0, r.stderr
+    assert "FUSED MULTIDEV xla OK" in r.stdout
+
+
+@pytest.mark.slow
+def test_fused_multidev_pallas():
+    r = run_devices_subprocess(FUSED_MULTIDEV.format(backend="pallas",
+                                                     max_iters=18))
+    assert r.returncode == 0, r.stderr
+    assert "FUSED MULTIDEV pallas OK" in r.stdout
