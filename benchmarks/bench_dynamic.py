@@ -9,10 +9,76 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import SpinnerConfig, adapt, metrics, partition
+from repro.core import (EngineOptions, SpinnerConfig, adapt, metrics,
+                        open_session, partition)
 from repro.core.graph import add_edges
 
 from .common import emit, get_graph, timed
+
+
+def _delta_sweep(quick: bool) -> list:
+    """Delta-proportional adapt: warm ``adapt(edge_updates=...)`` latency
+    and frontier active-vertex fraction vs a full re-adapt, per |delta|.
+
+    Three sessions walk the same delta stream in lockstep (their labels
+    are bit-identical by the parity tests): ``s`` takes the on-device
+    fast path, ``f`` reconverges with ``frontier=True``, and ``o`` is
+    the classic full re-adapt oracle on the rebuilt host graph.
+    """
+    g = get_graph("clustered-64k")
+    V = g.num_vertices
+    cfg = SpinnerConfig(k=32, seed=0, max_iters=60 if quick else 150)
+    opts = EngineOptions(engine="fused")
+    rng = np.random.default_rng(7)
+    sizes = [16, 256] if quick else [16, 256, 4096,
+                                     g.num_undirected_edges // 4]
+    s = open_session(g, cfg, opts)
+    f = open_session(g, cfg, opts)
+    o = open_session(g, cfg, opts)
+    s.partition(); s.adapt()
+    f.partition(); f.adapt()
+    o.partition(); o.adapt()
+    # one throwaway batch warms the merge/loads/frontier programs so the
+    # sweep below measures the steady serving state
+    warm = (rng.integers(0, V, 16), rng.integers(0, V, 16))
+    s.adapt(edge_updates=warm)
+    f.adapt(edge_updates=warm, frontier=True)
+    cur = add_edges(g, *warm)
+    o.adapt(new_graph=cur)
+    rows = []
+    for m in sizes:
+        batch = (rng.integers(0, V, m), rng.integers(0, V, m))
+        before = s.stats()["delta"]["fast_adapts"]
+        r_fast, t_fast = timed(s.adapt, edge_updates=batch)
+        st = s.stats()["delta"]
+        fast_path = st["fast_adapts"] == before + 1
+        r_front, t_front = timed(f.adapt, edge_updates=batch,
+                                 frontier=True)
+        cur = add_edges(cur, *batch)
+        r_full, t_full = timed(o.adapt, new_graph=cur)
+        active = r_front.scored_vertices / max(1.0, r_front.iterations * V)
+        rows.append({
+            "name": f"dynamic/delta_{m}",
+            "us_per_call": t_fast * 1e6,
+            "derived": f"t_full_us={t_full * 1e6:.0f};"
+                       f"t_frontier_us={t_front * 1e6:.0f};"
+                       f"speedup_vs_full={t_full / max(t_fast, 1e-9):.2f}x;"
+                       f"active_fraction={active:.4f};"
+                       f"fast_path={fast_path};"
+                       f"upload_bytes={st['last_upload_bytes']};"
+                       f"iters={r_fast.iterations}v{r_full.iterations}",
+            "delta_edges": m,
+            "t_fast_us": t_fast * 1e6,
+            "t_frontier_us": t_front * 1e6,
+            "t_full_us": t_full * 1e6,
+            "active_fraction": active,
+            "fast_path": fast_path,
+            "upload_bytes": st["last_upload_bytes"],
+            "frontier_scored_per_iter": list(r_front.scored_per_iter),
+            "labels_match_full": bool(
+                np.array_equal(r_fast.labels, r_full.labels)),
+        })
+    return rows
 
 
 def run(quick: bool = False) -> list:
@@ -64,6 +130,7 @@ def run(quick: bool = False) -> list:
             "phi_adaptive": metrics.phi(g2, adapted.labels),
             "rho_adaptive": metrics.rho(g2, adapted.labels, 32),
         })
+    rows.extend(_delta_sweep(quick))
     emit(rows, "bench_dynamic")
     return rows
 

@@ -40,7 +40,17 @@ def main() -> None:
     failures = []
     for name in selected:
         try:
-            suites[name](quick=args.quick)
+            rows = suites[name](quick=args.quick)
+            if name == "dynamic":
+                # the perf-trajectory artifact the delta-adapt work is
+                # tracked by: machine-readable, at the repo root
+                import json
+                import os
+                root = os.path.dirname(os.path.dirname(
+                    os.path.abspath(__file__)))
+                with open(os.path.join(root, "BENCH_dynamic.json"),
+                          "w") as fh:
+                    json.dump(rows, fh, indent=1, default=float)
         except Exception as e:  # keep the suite running; report at the end
             import traceback
             traceback.print_exc()

@@ -1,9 +1,12 @@
 """Spinner core: the paper's contribution as a composable JAX module."""
-from . import comm, engine, generators, graph, incremental, metrics, session
+from . import comm, delta, engine, generators, graph, incremental, metrics, \
+    session
+from .delta import DeltaTracker, DeviceDelta, apply_delta, check_edge_updates
 from .engine import (EngineOptions, SpinnerState, make_fused_runner,
-                     make_chunked_runner, make_iteration, make_sharded_runner,
+                     make_chunked_runner, make_frontier_runner,
+                     make_iteration, make_sharded_runner,
                      make_step_fn, make_vertex_update, run_chunked, run_fused,
-                     run_sharded)
+                     run_frontier, run_sharded, run_sharded_frontier)
 from .graph import (Graph, TiledCSR, add_edges, build_tiled_csr, from_edges,
                     pad_graph, shape_bucket)
 from .incremental import adapt, elastic_relabel, extend_labels, resize
@@ -20,13 +23,16 @@ __all__ = [
     "pad_graph", "shape_bucket",
     "SpinnerConfig", "SpinnerDeprecationWarning", "EngineOptions",
     "PartitionResult", "PartitionSession", "open_session", "SpinnerState",
+    "DeltaTracker", "DeviceDelta", "apply_delta", "check_edge_updates",
     "partition", "prepare_init", "resolve_options", "make_step",
     "make_step_fn", "make_iteration", "make_vertex_update",
-    "make_fused_runner", "make_chunked_runner", "make_sharded_runner",
-    "run_fused", "run_chunked", "run_sharded", "init_labels",
+    "make_fused_runner", "make_chunked_runner", "make_frontier_runner",
+    "make_sharded_runner",
+    "run_fused", "run_chunked", "run_sharded", "run_frontier",
+    "run_sharded_frontier", "init_labels",
     "compute_loads", "adapt", "resize", "elastic_relabel", "extend_labels",
     "phi", "phi_weighted", "rho", "score_global", "comm_volume",
     "frontier_fraction",
-    "partitioning_difference", "summarize", "comm", "engine", "generators",
-    "graph", "metrics", "incremental", "session",
+    "partitioning_difference", "summarize", "comm", "delta", "engine",
+    "generators", "graph", "metrics", "incremental", "session",
 ]

@@ -241,6 +241,17 @@ class ExchangePlan:
         return self.finish_exchange(
             self.start_exchange(labels_local, aux, axis, *args))
 
+    def prime(self, labels_local: jax.Array, axis: str, *args):
+        """Bootstrap ``(lookup, aux, wire_bytes)`` before an iteration loop.
+
+        The frontier engine diffs consecutive lookup arrays to expand the
+        active set, so it needs a pre-loop lookup of the *initial* labels.
+        This is ``init_aux`` plus one regular exchange; plans with a
+        cheaper bootstrap can override it.
+        """
+        aux = self.init_aux(labels_local, axis, *args)
+        return self.exchange(labels_local, aux, axis, *args)
+
 
 class AllGatherPlan(ExchangePlan):
     """Full label vector every iteration -- the bit-compatible oracle."""

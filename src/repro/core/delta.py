@@ -1,0 +1,465 @@
+"""On-device CSR delta merge: the ``adapt(edge_updates=...)`` fast path.
+
+Spinner's operational pitch is cheap adaptation -- "efficiently adapts the
+partitioning" upon graph changes (Section 3.4) -- but a naive adapt pays a
+host-side O(E) rebuild (``graph.add_edges`` -> ``from_edges``) plus an
+O(E) re-upload for ANY delta.  This module makes a warm delta cost
+O(|delta| log E) on the host and O(|delta|) on the wire:
+
+  * ``DeltaTracker`` -- the host-side pair ledger.  Built once per session
+    graph (the one O(E) cold cost: a sorted canonical-pair key index over
+    the base edge list), it folds each ``(src, dst)`` batch through the
+    EXACT ``add_edges`` weight semantics (Eq. 3 direction counting,
+    including the reconstruction convention that a weight-1 pair stands
+    for its canonical lo->hi direction) and emits the per-batch
+    ``BatchPlan``: the symmetric weight-DELTA entries to append, the
+    per-vertex degree increments, and the endpoints whose scores changed.
+    Appended entries are PARALLEL edges carrying the weight delta; the
+    integer Eq. 3 weights make every scatter-add sum exact, so a layout
+    holding ``(u, v, 1)`` in a base slot and ``(u, v, 1)`` in a slack slot
+    is score-for-score bit-identical to a rebuilt layout holding
+    ``(u, v, 2)``.
+  * ``DeviceDelta`` -- the session's resident merged arrays for one
+    engine mode, plus the host slot bookkeeping over the layout's slack
+    regions (``pad_graph``'s tail filler, the tiled CSR's per-tile tail
+    slack, the sharded layout's per-segment tails).  ``plan_slots``
+    assigns flat scatter indices for a batch (or reports slack overflow,
+    upon which the session falls back to the bit-identical host rebuild)
+    and ``apply_batch`` runs the engine's ``("delta_merge",)`` program --
+    a shape-bucketed scatter, so every same-sized batch reuses one
+    compiled entry and only O(|delta|) bytes cross the wire.
+
+The session layer (``repro.core.session``) owns eligibility, fallback and
+the oracle contract; this module is pure mechanism and is the coalescing
+primitive the multi-tenant scheduler follow-on builds on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph, shape_bucket
+
+# Batch arrays are padded to a bucketed length so every same-bucket batch
+# shares one compiled merge entry; sentinel indices (== the target's flat
+# size) are dropped by the scatter's mode="drop".
+BATCH_FLOOR = 64
+
+
+def check_edge_updates(src, dst, num_vertices: int,
+                       new_num_vertices: Optional[int] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+    """Validate an ``edge_updates`` batch; returns int32 (src, dst).
+
+    Rejects mismatched lengths, non-integer dtypes, negative ids and ids
+    beyond the (possibly grown) vertex count with a clear ``ValueError``
+    -- previously these flowed into the CSR build and either failed
+    obscurely or silently grew the vertex set.
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    if src.ndim != 1 or dst.ndim != 1:
+        raise ValueError(
+            "edge_updates src/dst must be 1-D index arrays; got shapes "
+            f"{src.shape} and {dst.shape}")
+    if src.shape[0] != dst.shape[0]:
+        raise ValueError(
+            f"edge_updates src/dst length mismatch: {src.shape[0]} src "
+            f"vs {dst.shape[0]} dst entries")
+    for name, a in (("src", src), ("dst", dst)):
+        if a.size and not np.issubdtype(a.dtype, np.integer):
+            raise ValueError(
+                f"edge_updates {name} must be integer vertex ids; got "
+                f"dtype {a.dtype}")
+    bound = max(int(num_vertices), int(new_num_vertices or 0))
+    if src.size:
+        lo = int(min(src.min(), dst.min()))
+        hi = int(max(src.max(), dst.max()))
+        if lo < 0:
+            raise ValueError(
+                f"edge_updates contain a negative vertex id ({lo})")
+        if hi >= bound:
+            raise ValueError(
+                f"edge_updates reference vertex {hi} but the graph has "
+                f"{num_vertices} vertices"
+                + ("" if new_num_vertices is None else
+                   f" (growing to {new_num_vertices})")
+                + "; pass num_vertices to grow the vertex set explicitly")
+    return src.astype(np.int32), dst.astype(np.int32)
+
+
+@dataclasses.dataclass
+class BatchPlan:
+    """One batch folded to its append-delta form (see ``DeltaTracker``)."""
+
+    src: np.ndarray        # int32 (2 * changed_pairs,) entries to append
+    dst: np.ndarray        # int32, symmetric counterparts interleaved
+    dw: np.ndarray         # f32 weight DELTA carried by each entry
+    touched: np.ndarray    # int32 unique endpoints of changed pairs
+    pair_keys: np.ndarray  # int64 canonical keys of changed pairs
+    pair_w: np.ndarray     # f32 NEW total weight of changed pairs
+    tw_delta: float        # total_weight change (2 * sum of pair deltas)
+
+    @property
+    def num_entries(self) -> int:
+        return int(self.src.shape[0])
+
+
+class DeltaTracker:
+    """Host ledger of pair weights across a session's pending deltas.
+
+    ``plan(src, dst)`` is pure; ``commit(plan)`` folds a successfully
+    merged batch into the overlay so later batches see it (sequential
+    per-batch semantics, matching a chain of ``add_edges`` calls).
+    """
+
+    def __init__(self, graph: Graph):
+        V = graph.num_vertices
+        half = graph.src < graph.dst
+        # graph arrays are lexsorted by (src, dst), so the canonical-half
+        # keys come out sorted: one O(E) pass, then O(log E) lookups
+        self.num_vertices = V
+        self.canon_keys = (graph.src[half].astype(np.int64) * V
+                           + graph.dst[half])
+        self.canon_w = graph.weight[half].astype(np.float64)
+        self.pairs: dict = {}          # canonical key -> overlaid weight
+        self.total_weight = float(graph.total_weight)
+
+    def _current_w(self, keys: np.ndarray) -> np.ndarray:
+        w = np.zeros(keys.size, np.float64)
+        if self.canon_keys.size:
+            pos = np.searchsorted(self.canon_keys, keys)
+            pos_c = np.minimum(pos, self.canon_keys.size - 1)
+            found = self.canon_keys[pos_c] == keys
+            w[found] = self.canon_w[pos_c[found]]
+        for i, key in enumerate(keys):
+            ov = self.pairs.get(int(key))
+            if ov is not None:
+                w[i] = ov
+        return w
+
+    def plan(self, src: np.ndarray, dst: np.ndarray) -> BatchPlan:
+        V = self.num_vertices
+        keep = src != dst                       # self-loops never count
+        src, dst = src[keep], dst[keep]
+        empty = BatchPlan(
+            src=np.zeros(0, np.int32), dst=np.zeros(0, np.int32),
+            dw=np.zeros(0, np.float32), touched=np.zeros(0, np.int32),
+            pair_keys=np.zeros(0, np.int64), pair_w=np.zeros(0, np.float32),
+            tw_delta=0.0)
+        if src.size == 0:
+            return empty
+        # dedupe directed edges within the batch (from_edges semantics)
+        dirkey = np.unique(src.astype(np.int64) * V + dst)
+        s = dirkey // V
+        d = dirkey % V
+        lo = np.minimum(s, d)
+        hi = np.maximum(s, d)
+        is_canon = s < d
+        uniq, inv = np.unique(lo * V + hi, return_inverse=True)
+        has_canon = np.zeros(uniq.size, bool)
+        has_rev = np.zeros(uniq.size, bool)
+        np.logical_or.at(has_canon, inv, is_canon)
+        np.logical_or.at(has_rev, inv, ~is_canon)
+        w0 = self._current_w(uniq)
+        # add_edges reconstructs a weight-1 pair as its canonical lo->hi
+        # direction, so: canonical exists iff w0 >= 1, reverse iff w0 == 2
+        new_w = (((w0 >= 1) | has_canon).astype(np.float64)
+                 + ((w0 >= 2) | has_rev).astype(np.float64))
+        change = new_w > w0
+        if not change.any():
+            return empty
+        uniq, w0, new_w = uniq[change], w0[change], new_w[change]
+        dw_pair = (new_w - w0).astype(np.float32)
+        p_lo = (uniq // V).astype(np.int32)
+        p_hi = (uniq % V).astype(np.int32)
+        # each changed pair appends BOTH directed entries carrying dw
+        e_src = np.stack([p_lo, p_hi], axis=1).reshape(-1)
+        e_dst = np.stack([p_hi, p_lo], axis=1).reshape(-1)
+        e_dw = np.stack([dw_pair, dw_pair], axis=1).reshape(-1)
+        return BatchPlan(
+            src=e_src, dst=e_dst, dw=e_dw,
+            touched=np.unique(e_src).astype(np.int32),
+            pair_keys=uniq, pair_w=new_w.astype(np.float32),
+            tw_delta=float(2.0 * dw_pair.sum()))
+
+    def commit(self, plan: BatchPlan) -> None:
+        for key, w in zip(plan.pair_keys, plan.pair_w):
+            self.pairs[int(key)] = float(w)
+        self.total_weight += plan.tw_delta
+
+
+# ---------------------------------------------------------------------------
+# Device-resident merged arrays + slack-slot bookkeeping per engine mode
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DeviceDelta:
+    """The session's merged device arrays for one engine mode.
+
+    ``score`` mirrors the score backend's arg tuple structure exactly and
+    ``deg_w`` the engine's degree array, so a hand-built ``GraphBind`` /
+    sharded arg tuple over these arrays drops into the SAME compiled
+    programs the session's regular runs use.  The remaining fields are
+    host-side slot state over the layout's slack regions.
+    """
+
+    mode: str                  # single_xla | single_pallas | sharded_xla
+    score: tuple               # merged backend edge arrays (jnp)
+    deg_w: jax.Array           # merged degrees: (v_pad,) or (ndev, v_l)
+    coo: tuple = ()            # single_pallas: merged COO (src, dst) for
+                               # the frontier expansion index
+    # --- single-device COO (and the pallas frontier COO) ---
+    next_slot: int = 0         # first free tail slot of the padded COO
+    e_capacity: int = 0        # total COO slots (the edge bucket)
+    # --- single_pallas tiled layout ---
+    tile_v: int = 0
+    region: int = 0            # max_chunks * tile_e slots per tile
+    perm: Optional[np.ndarray] = None     # (V,) vertex -> tiled row
+    fill: Optional[np.ndarray] = None     # (T,) occupied slots per tile
+    # --- sharded_xla layout ---
+    v_per_dev: int = 0
+    e_shard: int = 0
+    e_interior: int = 0
+    int_fill: Optional[np.ndarray] = None  # (ndev,) abs col of int. slack
+    fro_fill: Optional[np.ndarray] = None  # (ndev,) abs col of fro. slack
+
+
+def init_single_xla(score_args: tuple, deg_w: jax.Array,
+                    num_entries: int) -> DeviceDelta:
+    """Mode A: the padded COO upload; slack = pad_graph's tail filler."""
+    src, dst, w = score_args
+    return DeviceDelta(mode="single_xla", score=(src, dst, w), deg_w=deg_w,
+                       next_slot=int(num_entries),
+                       e_capacity=int(src.shape[0]))
+
+
+def init_single_pallas(score_args: tuple, deg_w: jax.Array, coo: tuple,
+                       tiled_meta, num_entries: int) -> DeviceDelta:
+    """Mode B: the fused tiled layout; slack = per-tile tail slots.
+
+    ``tiled_meta`` is the host ``TiledCSR`` whose jnp mirror ``score_args``
+    is (same deterministic build); ``coo`` is the padded COO (src, dst)
+    pair that doubles as the frontier expansion index, merged in lockstep
+    so expansion sees appended edges.
+    """
+    return DeviceDelta(
+        mode="single_pallas", score=tuple(score_args), deg_w=deg_w,
+        coo=tuple(coo), next_slot=int(num_entries),
+        e_capacity=int(coo[0].shape[0]), tile_v=int(tiled_meta.tile_v),
+        region=int(tiled_meta.max_chunks * tiled_meta.tile_e),
+        perm=np.asarray(tiled_meta.perm),
+        fill=np.asarray(tiled_meta.fill, dtype=np.int64).copy())
+
+
+def init_sharded_xla(score_args: tuple, deg_w: jax.Array, sg) -> DeviceDelta:
+    """Mode C: the sharded [interior | frontier] layout; slack = both
+    segment tails of every device row (segment identity is irrelevant off
+    the overlap schedule, which the fast path pins off)."""
+    return DeviceDelta(
+        mode="sharded_xla", score=tuple(score_args), deg_w=deg_w,
+        v_per_dev=int(sg.v_per_dev), e_shard=int(sg.src_local.shape[1]),
+        e_interior=int(sg.e_interior),
+        int_fill=np.asarray(sg.interior_counts, np.int64).copy(),
+        fro_fill=(int(sg.e_interior)
+                  + np.asarray(sg.frontier_counts, np.int64)).copy())
+
+
+def _bucket_pad(arrs, n: int, sentinel: int):
+    """Pad batch arrays to a shape bucket; index arrays get the dropped
+    sentinel, value arrays zero."""
+    m = shape_bucket(max(n, 1), BATCH_FLOOR)
+    out = []
+    for a, is_idx in arrs:
+        padded = np.full(m, sentinel if is_idx else 0,
+                         dtype=a.dtype if a.size else
+                         (np.int64 if is_idx else np.float32))
+        padded[:n] = a
+        out.append(padded)
+    return out
+
+
+def plan_slots(dd: DeviceDelta, plan: BatchPlan):
+    """Flat scatter slots for a batch, or None if slack would overflow.
+
+    Pure: commits nothing.  Returns ``(slots, commit)`` where ``commit()``
+    advances the host fill state after a successful device merge.
+    """
+    n = plan.num_entries
+    e_src = plan.src.astype(np.int64)
+    if dd.mode == "single_xla":
+        if dd.next_slot + n > dd.e_capacity:
+            return None
+        slots = dd.next_slot + np.arange(n, dtype=np.int64)
+
+        def commit():
+            dd.next_slot += n
+
+        return (slots,), commit
+    if dd.mode == "single_pallas":
+        if dd.next_slot + n > dd.e_capacity:
+            return None
+        rows = dd.perm[plan.src].astype(np.int64)
+        tiles = rows // dd.tile_v
+        counts = np.bincount(tiles, minlength=dd.fill.shape[0])
+        if np.any(dd.fill + counts > dd.region):
+            return None
+        order = np.argsort(tiles, kind="stable")
+        ts = tiles[order]
+        csum = np.cumsum(counts) - counts
+        within = np.arange(n, dtype=np.int64) - csum[ts]
+        tile_slots = np.empty(n, dtype=np.int64)
+        tile_slots[order] = ts * dd.region + dd.fill[ts] + within
+        coo_slots = dd.next_slot + np.arange(n, dtype=np.int64)
+
+        def commit():
+            dd.fill += counts
+            dd.next_slot += n
+
+        return (tile_slots, coo_slots), commit
+    if dd.mode == "sharded_xla":
+        dev = e_src // dd.v_per_dev
+        ndev = dd.int_fill.shape[0]
+        counts = np.bincount(dev, minlength=ndev)
+        int_avail = dd.e_interior - dd.int_fill
+        fro_avail = dd.e_shard - dd.fro_fill
+        if np.any(counts > int_avail + fro_avail):
+            return None
+        order = np.argsort(dev, kind="stable")
+        ds = dev[order]
+        csum = np.cumsum(counts) - counts
+        within = np.arange(n, dtype=np.int64) - csum[ds]
+        in_interior = within < int_avail[ds]
+        col = np.where(in_interior, dd.int_fill[ds] + within,
+                       dd.fro_fill[ds] + within - int_avail[ds])
+        slots = np.empty(n, dtype=np.int64)
+        slots[order] = ds * dd.e_shard + col
+
+        def commit():
+            used_int = np.minimum(counts, int_avail)
+            dd.int_fill += used_int
+            dd.fro_fill += counts - used_int
+
+        return (slots,), commit
+    raise ValueError(f"unknown DeviceDelta mode {dd.mode!r}")
+
+
+def apply_batch(dd: DeviceDelta, plan: BatchPlan, slotting,
+                merge_run) -> Tuple[DeviceDelta, int]:
+    """Scatter one planned batch into the merged arrays on device.
+
+    ``merge_run`` is the engine's ``("delta_merge",)`` program callable.
+    Returns the updated ``DeviceDelta`` (fresh jnp arrays, functional
+    update) and the batch upload byte count -- O(|delta|), the transfer
+    the session's ``stats()`` counters account.
+    """
+    slots, commit = slotting
+    n = plan.num_entries
+    src32 = plan.src.astype(np.int32)
+    dst32 = plan.dst.astype(np.int32)
+    dw32 = plan.dw.astype(np.float32)
+    host_arrays = []
+
+    def dev(a):
+        host_arrays.append(a)
+        return jnp.asarray(a)
+
+    if dd.mode == "single_xla":
+        (coo_slots,) = slots
+        idx = dev(_bucket_pad([(coo_slots, True)], n,
+                              int(dd.score[0].size))[0])
+        vs, vd, vw = (dev(a) for a in _bucket_pad(
+            [(src32, False), (dst32, False), (dw32, False)], n, 0))
+        set_groups = ((dd.score, idx, (vs, vd, vw)),)
+        didx = dev(_bucket_pad([(plan.src.astype(np.int64), True)], n,
+                               int(dd.deg_w.size))[0])
+        add_groups = ((dd.deg_w, didx, vw),)
+        (new_score,), (new_deg,) = merge_run(set_groups, add_groups)
+        out = dataclasses.replace(dd, score=tuple(new_score),
+                                  deg_w=new_deg)
+    elif dd.mode == "single_pallas":
+        tile_slots, coo_slots = slots
+        sl_local = (dd.perm[plan.src] % dd.tile_v).astype(np.int32)
+        t_idx = dev(_bucket_pad([(tile_slots, True)], n,
+                                int(dd.score[0].size))[0])
+        c_idx = dev(_bucket_pad([(coo_slots, True)], n,
+                                int(dd.coo[0].size))[0])
+        v_sl, v_s, v_d, v_w = (dev(a) for a in _bucket_pad(
+            [(sl_local, False), (src32, False), (dst32, False),
+             (dw32, False)], n, 0))
+        # tiled (src_local, dst, weight) share tile slots; the COO mirror
+        # (frontier expansion index) shares its own tail slots
+        set_groups = (
+            ((dd.score[0], dd.score[1], dd.score[2]), t_idx,
+             (v_sl, v_d, v_w)),
+            (dd.coo, c_idx, (v_s, v_d)),
+        )
+        row_idx = dev(_bucket_pad(
+            [(dd.perm[plan.src].astype(np.int64), True)], n,
+            int(dd.score[5].size))[0])
+        deg_idx = dev(_bucket_pad([(plan.src.astype(np.int64), True)], n,
+                                  int(dd.deg_w.size))[0])
+        add_groups = ((dd.score[5], row_idx, v_w),
+                      (dd.deg_w, deg_idx, v_w))
+        (tiled3, coo2), (new_deg_t, new_deg) = merge_run(set_groups,
+                                                         add_groups)
+        out = dataclasses.replace(
+            dd, score=tuple(tiled3) + dd.score[3:5] + (new_deg_t,),
+            coo=tuple(coo2), deg_w=new_deg)
+    elif dd.mode == "sharded_xla":
+        (flat_slots,) = slots
+        sl_local = (plan.src.astype(np.int64) % dd.v_per_dev
+                    ).astype(np.int32)
+        idx = dev(_bucket_pad([(flat_slots, True)], n,
+                              int(dd.score[0].size))[0])
+        v_sl, v_d, v_w = (dev(a) for a in _bucket_pad(
+            [(sl_local, False), (dst32, False), (dw32, False)], n, 0))
+        set_groups = ((dd.score, idx, (v_sl, v_d, v_w)),)
+        # deg_w is (ndev, v_per_dev) over contiguous ranges: flat id = u
+        didx = dev(_bucket_pad([(plan.src.astype(np.int64), True)], n,
+                               int(dd.deg_w.size))[0])
+        add_groups = ((dd.deg_w, didx, v_w),)
+        (new_score,), (new_deg,) = merge_run(set_groups, add_groups)
+        out = dataclasses.replace(dd, score=tuple(new_score),
+                                  deg_w=new_deg)
+    else:
+        raise ValueError(f"unknown DeviceDelta mode {dd.mode!r}")
+    # commit AFTER a successful scatter but BEFORE snapshotting the host
+    # slot state into the returned DeviceDelta (commit mutates dd's
+    # fill/next_slot fields in place)
+    commit()
+    out = dataclasses.replace(
+        out, next_slot=dd.next_slot, fill=dd.fill,
+        int_fill=dd.int_fill, fro_fill=dd.fro_fill)
+    return out, int(sum(a.nbytes for a in host_arrays))
+
+
+def apply_delta(tracker: DeltaTracker, dd: DeviceDelta, src, dst,
+                merge_run):
+    """The one-call coalescing primitive: plan a ``(src, dst)`` batch
+    against the pair ledger, assign slack slots, scatter it into the
+    resident device arrays, and commit the ledger.
+
+    Returns ``(new_dd, plan, uploaded_bytes)``, or ``None`` when the
+    batch would overflow the layout's slack (nothing is committed; the
+    caller rebuilds from the logical edge list -- bit-identically,
+    because appended delta entries carry exact integer weight sums).
+    This is the primitive a multi-tenant delta scheduler coalesces
+    through: batches validated with ``check_edge_updates`` fold
+    sequentially with ``add_edges`` union semantics.
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    plan = tracker.plan(src, dst)
+    nbytes = 0
+    if plan.num_entries:
+        slotting = plan_slots(dd, plan)
+        if slotting is None:
+            return None
+        dd, nbytes = apply_batch(dd, plan, slotting, merge_run)
+    tracker.commit(plan)
+    return dd, plan, nbytes

@@ -104,18 +104,19 @@ def shard_graph(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
     from .graph import shape_bucket
     v_per_dev = -(-graph.num_vertices // ndev)
     v_pad = v_per_dev * ndev
-    owner = graph.src // v_per_dev
-    frontier = (graph.dst // v_per_dev) != owner
+    # weight-0 edges (pad_graph's bucket-filler self-loops) are dropped
+    # from the layout entirely: they are exact no-ops for every consumer,
+    # and excluding them keeps each (device, segment) run's unused slots
+    # at the TAIL -- a contiguous per-segment append region the on-device
+    # delta merge can scatter new edges into (see repro.core.delta)
+    real = graph.weight > 0
+    owner_all = graph.src // v_per_dev
+    frontier_all = (graph.dst // v_per_dev) != owner_all
+    oidx_all = np.arange(graph.src.shape[0], dtype=np.int32)
+    owner, frontier = owner_all[real], frontier_all[real]
     n_int = np.bincount(owner[~frontier], minlength=ndev).astype(np.int64)
     n_fro = np.bincount(owner[frontier], minlength=ndev).astype(np.int64)
-    # reported counts exclude weight-0 edges (pad_graph's bucket-filler
-    # self-loops), so frontier_fraction reflects the REAL graph; the
-    # layout itself still allocates slots for every incoming edge
-    real = graph.weight > 0
-    int_counts = np.bincount(owner[real & ~frontier],
-                             minlength=ndev).astype(np.int64)
-    fro_counts = np.bincount(owner[real & frontier],
-                             minlength=ndev).astype(np.int64)
+    int_counts, fro_counts = n_int, n_fro
     e_int = int(n_int.max()) if n_int.size else 0
     e_fro = int(n_fro.max()) if n_fro.size else 0
     if e_int + e_fro == 0:
@@ -134,8 +135,10 @@ def shard_graph(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
     # stable sort by (owner, frontier flag): per device, the interior run
     # comes first, each run in CSR order
     order = np.argsort(owner.astype(np.int64) * 2 + frontier, kind="stable")
-    s, d, ww = graph.src[order], graph.dst[order], graph.weight[order]
-    oidx = np.arange(graph.src.shape[0], dtype=np.int32)[order]
+    s = graph.src[real][order]
+    d = graph.dst[real][order]
+    ww = graph.weight[real][order]
+    oidx = oidx_all[real][order]
     starts = np.zeros(2 * ndev + 1, np.int64)
     np.cumsum(np.stack([n_int, n_fro], axis=1).reshape(-1), out=starts[1:])
     for p in range(ndev):

@@ -322,6 +322,7 @@ class GraphBind(NamedTuple):
     num_real: jax.Array        # int32 scalar: vertices < num_real are real
     score: tuple               # score backend's edge arrays
     hist: tuple = ()           # (src, dst, w, ideal, real_e) for history
+    frontier: tuple = ()       # (src, dst) COO expansion index, frontier mode
 
 
 # ---------------------------------------------------------------------------
@@ -376,7 +377,8 @@ def pad_labels(labels: jax.Array, v_pad: int) -> jax.Array:
 
 def _single_bind(graph: Graph, cfg, opts: EngineOptions,
                  hist: bool = False,
-                 score_fn: Optional[Callable] = None
+                 score_fn: Optional[Callable] = None,
+                 frontier: bool = False
                  ) -> Tuple[GraphBind, Graph]:
     """Build (or fetch cached pieces of) the bind for a one-device run."""
     padded, num_real = padded_view(graph, opts)
@@ -399,10 +401,15 @@ def _single_bind(graph: Graph, cfg, opts: EngineOptions,
                      jnp.float32(graph.num_directed_entries))
     else:
         hist_args = ()
+    # The padded COO (cached upload) doubles as the frontier expansion
+    # index: pad entries are weight-0 self-loops on pad vertices, which
+    # never change label, so they can never activate anything.
+    frontier_args = device_edges(padded)[:2] if frontier else ()
     return GraphBind(deg_w=deg_w,
                      capacity=jnp.float32(cfg.capacity(graph)),
                      num_real=jnp.int32(num_real),
-                     score=score_args, hist=hist_args), padded
+                     score=score_args, hist=hist_args,
+                     frontier=frontier_args), padded
 
 
 def _autotuned(graph: Graph, cfg, opts: EngineOptions,
@@ -744,6 +751,222 @@ def _chunked_program(cfg, opts, chunk_size: int, record: bool,
         return Program(run=build())
     return _program(("chunked", _static_cfg(cfg), sig, fused, chunk_size,
                      record, has_edges), build)
+
+
+# ---------------------------------------------------------------------------
+# Frontier mode: dirty-set LPA reconvergence (delta-proportional compute)
+# ---------------------------------------------------------------------------
+# After a small edge delta on a converged partition, only the endpoints of
+# changed edges can want to move -- and migrations propagate label changes
+# one hop per iteration.  Frontier mode exploits that: the step scores only
+# the ACTIVE vertex set (valid &= active), expands it along edges out of
+# vertices that changed label, and halts when no active vertex wants to
+# move.  Inactive vertices keep their labels and contribute nothing to any
+# aggregate, so under the fused Pallas backend whole tiles without active
+# vertices skip their edge reduction entirely (the tile-activity bitmap in
+# kernels/spinner_scores); the XLA backend keeps dense compute but the same
+# masked semantics.  On a base labeling that is a fixed point robust to the
+# delta's load perturbation the final labels are bit-identical to a full
+# re-adapt (the oracle); the per-iteration scored-vertex counts come back
+# as a (max_iters,) history for sub-linearity reporting.
+
+
+def _frontier_update_for(cfg, opts: EngineOptions
+                         ) -> Tuple[Callable, tuple, bool]:
+    """(traced closure, signature, fused?) for frontier-mode runs.
+
+    The fused form asks the backend for its ``frontier=True`` variant,
+    which additionally returns the post-proposal ``want`` mask (the
+    drain-halting signal) and -- for the Pallas backend -- skips tiles
+    with no active vertex.
+    """
+    backend = opts.backend()
+    if opts.resolved_fused_update() == "on":
+        fn = backend.make_fused_update(
+            cfg.k, degree_weighted=cfg.migration_weighting == "edges",
+            current_bonus=float(cfg.current_bonus), frontier=True)
+        return fn, backend.signature(), True
+    return backend.make_scores(cfg.k), backend.signature(), False
+
+
+def _bind_frontier_step(cfg, scores_fn: Callable, fused: bool) -> Callable:
+    """One frontier-mode LPA iteration over ``(state, active, hist)``.
+
+    Identical update math to ``_bind_step`` except ``valid`` is
+    additionally masked by the active set, halting is drain-based
+    (no active vertex wants to move) rather than score-stall, and the
+    active set for the next iteration is ``want | touched`` where
+    ``touched`` marks endpoints of edges whose other endpoint changed
+    label this iteration.  Noise/u are still drawn over the FULL padded
+    vertex set, so on a converged base the frontier trajectory replays
+    the oracle's migration decisions bit for bit.
+    """
+    k, tie = cfg.k, cfg.tie_noise
+    eps = jnp.float32(cfg.eps)
+    halt_window = cfg.halt_window
+    propose, finish = make_update_parts(
+        k, degree_weighted=cfg.migration_weighting == "edges",
+        current_bonus=cfg.current_bonus)
+
+    def step_fn(carry, bind: GraphBind):
+        state, active, hist = carry
+        key, k_it = jax.random.split(state.key)
+        v_pad = state.labels.shape[0]
+        k_noise, k_mig = jax.random.split(k_it)
+        noise = jax.random.uniform(k_noise, (v_pad, k), jnp.float32,
+                                   0.0, tie)
+        u = jax.random.uniform(k_mig, (v_pad,), jnp.float32)
+        valid = (jnp.arange(v_pad, dtype=jnp.int32) < bind.num_real) \
+            & active
+        if fused:
+            labels, loads, score_g, n_mig, mig_mass, want = scores_fn(
+                state.labels, state.labels, bind.deg_w, state.loads,
+                noise, u, valid, lambda x: x, bind.capacity, *bind.score)
+        else:
+            scores = scores_fn(state.labels, *bind.score)
+            best, tot_best, tot_cur, m_partial = propose(
+                scores, state.labels, bind.deg_w, state.loads, noise,
+                valid, bind.capacity)
+            want = (best != state.labels) & valid
+            labels, loads, score_g, n_mig, mig_mass = finish(
+                best, tot_best, tot_cur, m_partial, state.labels,
+                bind.deg_w, state.loads, u, valid, lambda x: x,
+                bind.capacity)
+        src, dst = bind.frontier
+        changed = (labels != state.labels).astype(jnp.int32)
+        touched = jnp.zeros((v_pad,), jnp.int32).at[src].max(
+            changed[dst]) > 0
+        hist = hist.at[state.iteration].set(
+            jnp.sum(valid.astype(jnp.float32)))
+        best_s, stall, _ = _halting_update(
+            state.best_score, state.stall, score_g, eps, halt_window)
+        new_state = SpinnerState(
+            labels=labels, loads=loads, key=key,
+            best_score=best_s, stall=stall,
+            iteration=state.iteration + 1,
+            halted=jnp.sum(want.astype(jnp.int32)) == 0,
+            total_messages=state.total_messages + mig_mass,
+            score=score_g, migrations=n_mig, message_mass=mig_mass,
+            exchanged_bytes=state.exchanged_bytes)
+        return new_state, want | touched, hist
+
+    return step_fn
+
+
+def _frontier_program(cfg, opts: EngineOptions) -> Program:
+    """``run(state, active, bind) -> (state, scored_hist)``: the frontier
+    loop as one while_loop dispatch.  ``scored_hist`` is the (max_iters,)
+    per-iteration count of scored (valid & active) vertices, 0 past the
+    final iteration."""
+    scores_fn, sig, fused = _frontier_update_for(cfg, opts)
+    max_iters = cfg.max_iters
+
+    def build():
+        step_fn = _bind_frontier_step(cfg, scores_fn, fused)
+
+        def cond_fn(carry):
+            s = carry[0]
+            return jnp.logical_and(jnp.logical_not(s.halted),
+                                   s.iteration < max_iters)
+
+        @jax.jit
+        def run(state: SpinnerState, active, bind: GraphBind):
+            hist0 = jnp.zeros((max_iters,), jnp.float32)
+            state, _, hist = jax.lax.while_loop(
+                cond_fn, lambda c: step_fn(c, bind),
+                (state, active, hist0))
+            return state, hist
+
+        return run
+
+    return _program(("frontier", _static_cfg(cfg), sig, fused), build)
+
+
+def make_frontier_runner(graph: Graph, cfg,
+                         opts: EngineOptions = _DEFAULT_OPTS) -> Callable:
+    """``runner(state, active) -> (state, scored_hist)`` over the padded
+    layout; accepts state/active over the REAL vertex set."""
+    opts = _autotuned(graph, cfg, opts)
+    bind, padded = _single_bind(graph, cfg, opts, frontier=True)
+    prog = _frontier_program(cfg, opts)
+    v_pad, num_real = padded.num_vertices, graph.num_vertices
+
+    def runner(state: SpinnerState, active):
+        state = state._replace(labels=pad_labels(state.labels, v_pad))
+        active = jnp.asarray(active, jnp.bool_)
+        pad = v_pad - active.shape[0]
+        if pad:
+            active = jnp.concatenate(
+                [active, jnp.zeros((pad,), jnp.bool_)])
+        out, hist = prog.run(state, active, bind)
+        return out._replace(labels=out.labels[:num_real]), hist
+
+    runner.program = prog
+    runner.v_pad = v_pad
+    return runner
+
+
+def run_frontier(graph: Graph, cfg, labels, loads, key, active,
+                 opts: EngineOptions = _DEFAULT_OPTS,
+                 on_program: Optional[Callable] = None):
+    """Frontier-mode run to drain: ``(state, scored_hist)``."""
+    runner = make_frontier_runner(graph, cfg, opts)
+    if on_program is not None:
+        on_program(runner.program)
+    return runner(init_state(labels, loads, key), active)
+
+
+# ---------------------------------------------------------------------------
+# On-device delta merge programs (the adapt(edge_updates=...) fast path)
+# ---------------------------------------------------------------------------
+
+def _merge_program() -> Program:
+    """``run(set_groups, add_groups)``: scatter a delta batch into resident
+    device arrays.
+
+    ``set_groups`` is a tuple of ``(arrays, idx, vals)`` where every array
+    in ``arrays`` receives ``vals[i]`` at the shared flat slots ``idx``
+    (the slack/filler slots of a padded edge layout); ``add_groups`` is a
+    tuple of ``(array, idx, inc)`` flat scatter-adds (per-vertex degree
+    updates).  Batches are shape-bucketed by the caller with
+    out-of-range sentinel indices, which ``mode="drop"`` discards -- so
+    one compiled entry serves every batch in a size bucket.
+    """
+
+    def build():
+        @jax.jit
+        def run(set_groups, add_groups):
+            merged = tuple(
+                tuple(a.reshape(-1).at[idx].set(v, mode="drop")
+                      .reshape(a.shape) for a, v in zip(arrays, vals))
+                for arrays, idx, vals in set_groups)
+            bumped = tuple(
+                a.reshape(-1).at[idx].add(inc, mode="drop").reshape(a.shape)
+                for a, idx, inc in add_groups)
+            return merged, bumped
+
+        return run
+
+    return _program(("delta_merge",), build)
+
+
+def _loads_program(k: int) -> Program:
+    """``run(labels, deg_w) -> (k,) loads``: compute_loads on device.
+
+    Bit-identical to ``spinner.compute_loads`` over the real graph: pads
+    carry zero degree, and the integer-valued f32 degrees make the
+    scatter-add exact under any ordering.
+    """
+
+    def build():
+        @jax.jit
+        def run(labels, deg_w):
+            return jnp.zeros((k,), jnp.float32).at[labels.reshape(-1)].add(
+                deg_w.reshape(-1))
+
+        return run
+
+    return _program(("delta_loads", k), build)
 
 
 # ---------------------------------------------------------------------------
@@ -1247,6 +1470,236 @@ def _sharded_parts(graph: Graph, cfg, opts: EngineOptions, mesh: Mesh,
             device_upload(sg, "deg_w")) + tuple(score_args) \
         + tuple(plan.device_args())
     return sg, plan, prog, args
+
+
+def make_sharded_frontier_step_fn(cfg, axis: str, ndev: int, v_local: int,
+                                  plan, scores, noise_mode: str,
+                                  fused: bool = False) -> Callable:
+    """Frontier-mode per-device sharded transition.
+
+    Same exchange/noise/update structure as ``make_sharded_step_fn``
+    (non-overlapped schedule) with the frontier additions: ``valid`` is
+    masked by the local active set, the next active set is the
+    post-proposal ``want`` mask, expansion rides the LOOKUP DIFF -- the
+    carry keeps the previous iteration's lookup array and any local
+    vertex with an edge whose remote endpoint's looked-up label changed
+    is re-activated (the plan-agnostic analogue of the single-device
+    ``changed[dst]`` gather; works for allgather/delta's global mirror
+    and halo's fixed boundary-slot layout alike).  Halting is
+    psum-reduced drain: no device has an active vertex that wants to
+    move.  The carry is ``(state, aux, active, prev_lookup, hist)``.
+
+    The score backend's first two edge blocks must be the XLA layout's
+    ``(src_local, dst_index)`` pair -- they double as the expansion
+    index, which is why sharded frontier mode is XLA-backend-only.
+    """
+    k = cfg.k
+    v_pad = ndev * v_local
+    eps = jnp.float32(cfg.eps)
+    halt_window = cfg.halt_window
+    propose, finish = make_update_parts(
+        k, degree_weighted=cfg.migration_weighting == "edges",
+        current_bonus=cfg.current_bonus)
+
+    def psum(x):
+        return jax.lax.psum(x, axis)
+
+    def step_fn(carry, capacity, num_real, deg_l, score_blocks,
+                plan_blocks):
+        state, aux, active, prev_lookup, hist = carry
+        key, k_it = jax.random.split(state.key)
+        lookup, aux, xbytes = plan.exchange(state.labels, aux, axis,
+                                            *plan_blocks)
+        # Expand: re-activate local endpoints of edges whose remote
+        # endpoint changed label last iteration (pad edges point at a
+        # fixed in-range slot, so a spurious hit only re-activates an
+        # already-active migrant -- conservative, never unsound).
+        src_local, dst_idx = score_blocks[0], score_blocks[1]
+        changed_dst = (lookup[dst_idx] != prev_lookup[dst_idx]
+                       ).astype(jnp.int32)
+        touched = jnp.zeros((v_local,), jnp.int32).at[src_local].max(
+            changed_dst) > 0
+        active = active | touched
+        off = jax.lax.axis_index(axis) * v_local
+        if noise_mode == "folded":
+            k_dev = jax.random.fold_in(k_it, jax.lax.axis_index(axis))
+            k_noise, k_mig = jax.random.split(k_dev)
+            noise = jax.random.uniform(k_noise, (v_local, k), jnp.float32,
+                                       0.0, cfg.tie_noise)
+            u = jax.random.uniform(k_mig, (v_local,), jnp.float32)
+        else:
+            k_noise, k_mig = jax.random.split(k_it)
+            noise_full = jax.random.uniform(k_noise, (v_pad, k),
+                                            jnp.float32, 0.0,
+                                            cfg.tie_noise)
+            u_full = jax.random.uniform(k_mig, (v_pad,), jnp.float32)
+            noise = jax.lax.dynamic_slice_in_dim(noise_full, off, v_local,
+                                                 0)
+            u = jax.lax.dynamic_slice_in_dim(u_full, off, v_local, 0)
+        valid = (off + jnp.arange(v_local, dtype=jnp.int32) < num_real) \
+            & active
+        if fused:
+            labels, loads, score_g, n_mig, mig_mass, want = scores(
+                lookup, state.labels, deg_l, state.loads, noise, u, valid,
+                psum, capacity, *score_blocks)
+        else:
+            scores_v = scores(lookup, *score_blocks)
+            best, tot_best, tot_cur, m_partial = propose(
+                scores_v, state.labels, deg_l, state.loads, noise, valid,
+                capacity)
+            want = (best != state.labels) & valid
+            labels, loads, score_g, n_mig, mig_mass = finish(
+                best, tot_best, tot_cur, m_partial, state.labels, deg_l,
+                state.loads, u, valid, psum, capacity)
+        hist = hist.at[state.iteration].set(
+            psum(jnp.sum(valid.astype(jnp.float32))))
+        n_want = psum(jnp.sum(want.astype(jnp.int32)))
+        best_s, stall, _ = _halting_update(
+            state.best_score, state.stall, score_g, eps, halt_window)
+        new_state = SpinnerState(
+            labels=labels, loads=loads, key=key,
+            best_score=best_s, stall=stall,
+            iteration=state.iteration + 1, halted=n_want == 0,
+            total_messages=state.total_messages + mig_mass,
+            score=score_g, migrations=n_mig, message_mass=mig_mass,
+            exchanged_bytes=state.exchanged_bytes + xbytes)
+        return new_state, aux, want, lookup, hist
+
+    return step_fn
+
+
+def _sharded_frontier_program(cfg, opts: EngineOptions, mesh: Mesh,
+                              axis: str, plan_sig: tuple, n_score: int,
+                              fused: bool = False) -> Program:
+    """``run(state, active, capacity, num_real, deg_w, *score, *plan)
+    -> (state, scored_hist)``: the sharded frontier loop in one
+    shard_map(while_loop) dispatch, primed with a pre-loop exchange of
+    the initial labels (``ExchangePlan.prime``)."""
+    from . import comm                                    # sibling, no cycle
+    noise_mode = opts.resolved_sharded_noise()
+    ndev = mesh.shape[axis]
+    backend = opts.backend()
+    key = ("sharded_frontier", _static_cfg(cfg), backend.signature(), mesh,
+           axis, plan_sig, noise_mode, fused)
+    max_iters = cfg.max_iters
+
+    def build():
+        plan = comm.plan_from_signature(plan_sig)
+        v_local = plan_sig[2] if plan_sig[0] != "allgather" \
+            else plan_sig[2] // ndev
+        deg_weighted = cfg.migration_weighting == "edges"
+        if fused:
+            scores = backend.make_sharded_fused_update(
+                cfg.k, v_local, degree_weighted=deg_weighted,
+                current_bonus=float(cfg.current_bonus), frontier=True)
+        else:
+            scores = backend.make_sharded_scores(cfg.k, v_local)
+        step_fn = make_sharded_frontier_step_fn(
+            cfg, axis, ndev, v_local, plan, scores, noise_mode,
+            fused=fused)
+
+        def cond_fn(carry):
+            s = carry[0]
+            return jnp.logical_and(jnp.logical_not(s.halted),
+                                   s.iteration < max_iters)
+
+        plan_specs = tuple(plan.arg_specs(axis))
+        strip = (True,) * n_score + tuple(s == PartitionSpec(axis)
+                                          for s in plan_specs)
+
+        def run_local(state, active, capacity, num_real, deg_l, *rest):
+            blocks = tuple(r[0] if s else r for r, s in zip(rest, strip))
+            score_blocks, plan_blocks = blocks[:n_score], blocks[n_score:]
+            dl = deg_l[0]
+            prev_lookup, aux0, b0 = plan.prime(state.labels, axis,
+                                               *plan_blocks)
+            state = state._replace(
+                exchanged_bytes=state.exchanged_bytes + b0)
+
+            def body(carry):
+                return step_fn(carry, capacity, num_real, dl,
+                               score_blocks, plan_blocks)
+
+            carry = (state, aux0, active, prev_lookup,
+                     jnp.zeros((max_iters,), jnp.float32))
+            carry = jax.lax.while_loop(cond_fn, body, carry)
+            return carry[0], carry[4]
+
+        spec = state_partition_spec(axis)
+        rep = PartitionSpec()
+        arg_specs = (PartitionSpec(axis), rep, rep, PartitionSpec(axis)) \
+            + (PartitionSpec(axis),) * n_score + plan_specs
+        return jax.jit(shard_map(
+            run_local, mesh=mesh, in_specs=(spec,) + arg_specs,
+            out_specs=(spec, rep), check_rep=False))
+
+    return _program(key, build)
+
+
+def _sharded_frontier_parts(graph: Graph, cfg, opts: EngineOptions,
+                            mesh: Mesh, axis: str):
+    """Layout/plan/program/args for a sharded frontier run.
+
+    Frontier mode pins the non-overlapped schedule (the expansion diff
+    needs the whole lookup before scoring) and the XLA score backend
+    (its COO edge blocks double as the expansion index).
+    """
+    from . import comm                                    # sibling, no cycle
+    from .distributed import device_upload, shard_layout  # layout layer
+    opts = dataclasses.replace(opts, overlap="off")
+    ndev = mesh.shape[axis]
+    opts = _autotuned(graph, cfg, opts, ndev=ndev)
+    backend = opts.backend()
+    if getattr(backend, "name", None) != "xla":
+        raise ValueError(
+            "frontier mode on the sharded engine requires the XLA score "
+            "backend (its (src_local, dst_index) edge blocks double as "
+            "the frontier expansion index); got "
+            f"{getattr(backend, 'name', backend)!r}")
+    padded, num_real = padded_view(graph, opts)
+    pad = opts.pad == "bucket"
+    fused = opts.resolved_fused_update() == "on"
+    sg = shard_layout(padded, ndev, pad=pad)
+    plan = comm.make_exchange_plan(opts.resolved_label_exchange(ndev), sg,
+                                   delta_cap=opts.delta_cap, pad=pad)
+    dst_layout = "halo" if plan.dst_index is not sg.dst else "global"
+    args_of = (backend.sharded_fused_graph_args if fused
+               else backend.sharded_graph_args)
+    score_args = _graph_cached(
+        _SCORE_ARG_CACHE, sg,
+        ("sharded", backend.signature(), dst_layout, pad, False, fused),
+        lambda: tuple(args_of(sg, cfg.k, plan.dst_index, pad=pad)))
+    prog = _sharded_frontier_program(cfg, opts, mesh, axis,
+                                     plan.signature(), len(score_args),
+                                     fused=fused)
+    args = (jnp.float32(cfg.capacity(graph)), jnp.int32(num_real),
+            device_upload(sg, "deg_w")) + tuple(score_args) \
+        + tuple(plan.device_args())
+    return sg, plan, prog, args
+
+
+def run_sharded_frontier(graph: Graph, cfg, labels, loads, key, active,
+                         mesh: Optional[Mesh] = None, axis: str = "data",
+                         opts: EngineOptions = _DEFAULT_OPTS,
+                         on_program: Optional[Callable] = None):
+    """Sharded frontier-mode run to drain: ``(state, scored_hist)``.
+
+    ``state.labels`` comes back PADDED (slice ``[:graph.num_vertices]``);
+    ``active`` is a bool mask over the real vertex set.
+    """
+    if mesh is None:
+        mesh = _default_partition_mesh()
+    sg, plan, prog, args = _sharded_frontier_parts(graph, cfg, opts, mesh,
+                                                   axis)
+    if on_program is not None:
+        on_program(prog)
+    v_pad = sg.num_vertices
+    active = jnp.asarray(active, jnp.bool_)
+    pad = v_pad - active.shape[0]
+    if pad:
+        active = jnp.concatenate([active, jnp.zeros((pad,), jnp.bool_)])
+    state = init_state(pad_labels(labels, v_pad), loads, key)
+    return prog.run(state, active, *args)
 
 
 def make_sharded_runner(graph: Graph, cfg, mesh: Mesh, axis: str = "data",

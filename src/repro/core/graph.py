@@ -232,6 +232,10 @@ class TiledCSR:
     deg_t: np.ndarray = None  # f32 (num_tiles, tile_v) weighted degrees in
                               # tiled row order (0 on pad rows) -- the fused
                               # vertex-update kernel's per-tile deg_w view
+    fill: np.ndarray = None   # int64 (num_tiles,) occupied slots per tile;
+                              # slots [fill[t], max_chunks * tile_e) of tile
+                              # t's flat region are weight-0 slack the delta
+                              # merge may claim (see repro.core.delta)
 
 
 def round_robin_perm(deg_w: np.ndarray, tile_v: int) -> np.ndarray:
@@ -259,19 +263,22 @@ def round_robin_perm(deg_w: np.ndarray, tile_v: int) -> np.ndarray:
 
 def build_tiled_csr(graph: Graph, tile_v: int = 128, tile_e: int = 128,
                     balance_by_degree: bool = True,
-                    pad_chunks: int = 1) -> TiledCSR:
+                    pad_chunks: int = 1,
+                    min_total_slots: int = 0) -> TiledCSR:
     return _tile_edge_arrays(graph.num_vertices, graph.src, graph.dst,
                              graph.weight, graph.deg_w, tile_v=tile_v,
                              tile_e=tile_e,
                              balance_by_degree=balance_by_degree,
-                             pad_chunks=pad_chunks)
+                             pad_chunks=pad_chunks,
+                             min_total_slots=min_total_slots)
 
 
 def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
                       weight: np.ndarray, deg_w: np.ndarray, *,
                       tile_v: int, tile_e: int,
                       balance_by_degree: bool, pad_chunks: int = 1,
-                      ext_perm: Optional[np.ndarray] = None
+                      ext_perm: Optional[np.ndarray] = None,
+                      min_total_slots: int = 0
                       ) -> TiledCSR:
     """Tile a raw (src, dst, weight) edge list over ``V`` source rows.
 
@@ -284,6 +291,14 @@ def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
     edge segments of the same vertex range (the overlap schedule's
     interior/frontier split) can share one row layout and their kernel
     outputs add without any re-permutation.
+
+    Weight-0 entries (``pad_graph`` bucket filler) are dropped before
+    packing: they contribute nothing to any score, and skipping them
+    keeps every unused slot at the TAIL of its tile's flat region, so
+    the per-tile slack is a contiguous append region the on-device delta
+    merge can scatter new edges into.  ``min_total_slots`` floors the
+    total slot count (num_tiles * max_chunks * tile_e), guaranteeing the
+    layout carries at least the bucketed edge capacity in slack.
     """
     num_tiles = max(1, -(-V // tile_v))
     padded_v = num_tiles * tile_v
@@ -299,6 +314,10 @@ def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
     inv_perm = np.full(padded_v, -1, dtype=np.int32)
     inv_perm[perm] = np.arange(V, dtype=np.int32)
 
+    real = weight > 0
+    if not real.all():
+        src, dst, weight = src[real], dst[real], weight[real]
+
     new_src = perm[src]
     order = np.argsort(new_src, kind="stable")
     s = new_src[order]
@@ -309,6 +328,9 @@ def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
     counts = np.bincount(tile_of, minlength=num_tiles)
     chunks_per_tile = np.maximum(1, -(-counts // tile_e))
     max_chunks = int(chunks_per_tile.max())
+    if min_total_slots:
+        floor_chunks = -(-int(min_total_slots) // (num_tiles * tile_e))
+        max_chunks = max(max_chunks, floor_chunks)
     # pad_chunks > 1 rounds the chunk count up so the kernel's compile
     # shape stays stable as edges shift between tiles (session reuse)
     max_chunks = -(-max_chunks // pad_chunks) * pad_chunks
@@ -338,7 +360,8 @@ def _tile_edge_arrays(V: int, src: np.ndarray, dst: np.ndarray,
     return TiledCSR(tile_v=tile_v, tile_e=tile_e, num_tiles=num_tiles,
                     max_chunks=max_chunks, src_local=src_local, dst=dstA,
                     weight=wA, perm=perm, inv_perm=inv_perm, padded_v=padded_v,
-                    deg_t=deg_t.reshape(num_tiles, tile_v))
+                    deg_t=deg_t.reshape(num_tiles, tile_v),
+                    fill=counts.astype(np.int64))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -367,13 +390,16 @@ class ShardedTiledCSR:
                                  # -> local vertex (or -1 on pad rows)
     deg_t: np.ndarray = None     # f32 (ndev, num_tiles, tile_v) weighted
                                  # degrees in tiled row order (0 on pads)
+    fill: np.ndarray = None      # int64 (ndev, num_tiles) occupied slots per
+                                 # shard tile (tail slack = delta append room)
 
 
 def build_sharded_tiled_csr(sg, dst_index: Optional[np.ndarray] = None,
                             tile_v: int = 128, tile_e: int = 128,
                             balance_by_degree: bool = True,
                             pad_chunks: int = 1,
-                            ext_perm: Optional[np.ndarray] = None
+                            ext_perm: Optional[np.ndarray] = None,
+                            min_total_slots: int = 0
                             ) -> ShardedTiledCSR:
     """Retile a ``ShardedGraph``'s edge shards for the Pallas kernel.
 
@@ -397,7 +423,8 @@ def build_sharded_tiled_csr(sg, dst_index: Optional[np.ndarray] = None,
             sg.weight[p][real].astype(np.float32), sg.deg_w[p],
             tile_v=tile_v, tile_e=tile_e,
             balance_by_degree=balance_by_degree, pad_chunks=pad_chunks,
-            ext_perm=None if ext_perm is None else ext_perm[p]))
+            ext_perm=None if ext_perm is None else ext_perm[p],
+            min_total_slots=min_total_slots))
     T = max(t.num_tiles for t in tiles)
     C = max(t.max_chunks for t in tiles)
     src_local = np.zeros((ndev, T, C, tile_e), np.int32)
@@ -406,6 +433,7 @@ def build_sharded_tiled_csr(sg, dst_index: Optional[np.ndarray] = None,
     perm = np.zeros((ndev, vl), np.int32)
     inv = np.full((ndev, T * tile_v), -1, np.int32)
     deg_t = np.zeros((ndev, T, tile_v), np.float32)
+    fill = np.zeros((ndev, T), np.int64)
     for p, t in enumerate(tiles):
         src_local[p, : t.num_tiles, : t.max_chunks] = t.src_local
         dstA[p, : t.num_tiles, : t.max_chunks] = t.dst
@@ -413,7 +441,8 @@ def build_sharded_tiled_csr(sg, dst_index: Optional[np.ndarray] = None,
         perm[p] = t.perm
         inv[p, : t.padded_v] = t.inv_perm
         deg_t[p, : t.num_tiles] = t.deg_t
+        fill[p, : t.num_tiles] = t.fill
     return ShardedTiledCSR(ndev=ndev, tile_v=tile_v, tile_e=tile_e,
                            num_tiles=T, max_chunks=C, src_local=src_local,
                            dst=dstA, weight=wA, perm=perm, inv_perm=inv,
-                           deg_t=deg_t)
+                           deg_t=deg_t, fill=fill)

@@ -40,9 +40,24 @@ def extend_labels(prev_labels: np.ndarray, new_num_vertices: int) -> np.ndarray:
 
     ``partition`` assigns -1 entries to the least-loaded partition, matching
     Section 3.4 ("we assign them to the least loaded partition").
+
+    Contract: the vertex set may only GROW.  Section 3.4's incremental
+    restart carries the previous label of every surviving vertex, and
+    vertex ids are positional -- a smaller ``new_num_vertices`` cannot
+    say WHICH vertices were removed, so shrinking is rejected rather
+    than silently truncating the tail.  To remove vertices, rebuild the
+    graph with ``graph.remove_vertices`` (which returns the surviving-id
+    remap) and re-index the previous labels through that remap before
+    adapting.
     """
     prev = np.asarray(prev_labels, dtype=np.int32)
-    assert new_num_vertices >= prev.shape[0]
+    if new_num_vertices < prev.shape[0]:
+        raise ValueError(
+            f"extend_labels: new vertex count {new_num_vertices} is "
+            f"smaller than the previous labeling ({prev.shape[0]} "
+            "vertices); the incremental restart only supports a grown "
+            "vertex set -- remove vertices via graph.remove_vertices and "
+            "remap the previous labels through its survivor index first")
     out = np.full(new_num_vertices, -1, dtype=np.int32)
     out[: prev.shape[0]] = prev
     return out
@@ -55,6 +70,9 @@ def adapt(graph: Graph, prev_labels: np.ndarray, cfg: SpinnerConfig,
     Extra keyword arguments (``engine=``, ``chunk_size=``,
     ``record_history=``, ...) are forwarded to ``partition``; with the
     default ``engine="auto"`` a no-history adapt is one fused device call.
+
+    ``graph`` must contain at least as many vertices as ``prev_labels``
+    (see ``extend_labels``); a shrunk vertex set raises ``ValueError``.
     """
     init = extend_labels(prev_labels, graph.num_vertices)
     return partition(graph, cfg, init=init, **kw)

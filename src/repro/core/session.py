@@ -15,8 +15,8 @@ the XLA compile of the fused runner.
     with open_session(g, SpinnerConfig(k=32)) as s:
         res = s.partition()                  # cold: upload + compile
         while serving:
-            g = next_graph_snapshot()
-            res = s.adapt(g)                 # warm: zero new compiles
+            delta = next_edge_batch()
+            res = s.adapt(edge_updates=delta)    # warm: O(|delta|) cost
             if cluster_resized(new_k):
                 res = s.resize(new_k)        # new k: exactly one compile
 
@@ -24,13 +24,13 @@ Lifecycle: ``open (upload/bind lazily) -> partition / adapt / resize /
 update -> close``.  The session owns the (graph, config, options) triple,
 the previous stable labels (``adapt``/``resize`` default to them), and the
 set of compiled programs it has touched -- ``stats()`` reports shape
-buckets, per-session compile counts (via the programs' jit cache sizes)
-and the exchange-plan communication volumes.  ``stage(next_graph)``
-double-buffers the upload: it issues the NEXT snapshot's host->device
-transfers (asynchronously, overlapping in-flight device work) so the
-following ``adapt()`` consumes a device-resident bind with zero
-synchronous copies -- the serving-loop pattern ``res = s.adapt();
-s.stage(next); ... ; res = s.adapt()``.
+buckets, per-session compile counts (via the programs' jit cache sizes),
+the exchange-plan communication volumes, and the delta fast-path counters.
+``stage(next_graph)`` double-buffers the upload: it issues the NEXT
+snapshot's host->device transfers (asynchronously, overlapping in-flight
+device work) so the following ``adapt()`` consumes a device-resident bind
+with zero synchronous copies -- the serving-loop pattern ``res =
+s.adapt(); s.stage(next); ... ; res = s.adapt()``.
 
 Shape-bucketed compile reuse: with the default ``EngineOptions(pad=
 "bucket")`` every engine runs on a power-of-two-ish padded (V, E) layout
@@ -41,6 +41,32 @@ on a grown graph that stays inside its bucket re-uses the same executable
 bucket costs exactly one.  Because ``spinner.partition`` opens a throwaway
 session with the same defaults, a warm session call is bit-identical to
 the one-shot API on every engine and exchange plan.
+
+Delta-proportional adapt (the ``edge_updates`` fast path): a warm
+``adapt(edge_updates=(src, dst))`` that fits the layout's slack costs
+O(|delta|), not O(E).  The data path scatters the batch into the resident
+padded edge arrays on device (``repro.core.delta`` -- zero host CSR
+rebuild, zero O(E) re-upload, zero new compiles once the batch-size
+bucket is warm); the logical graph update is recorded in a pending log
+and only materialized on host when something genuinely needs the Graph
+object (a full ``partition()``, ``stage()``, a bucket-crossing delta, or
+slack overflow -- in which case the call falls back to the classic
+rebuild path, which is bit-identical by construction).  Eligible modes:
+single-device fused runs on the XLA backend, the Pallas backend with
+``fused_update="on"``, and the sharded engine on the XLA backend with the
+allgather/delta exchange plans and the non-overlapped schedule; anything
+else (halo's boundary-slot dst layout, the overlap split arrays, chunked/
+host engines, per-iteration history) takes the fallback and is counted in
+``stats()["delta"]["fallback_adapts"]``.
+
+Frontier reconvergence (``adapt(..., frontier=True)``): scores only the
+dirty vertex set -- endpoints of changed edges, expanded one hop per
+iteration along edges out of vertices that changed label -- and halts
+when no active vertex wants to move (see ``engine._frontier_program``).
+On a converged base labeling robust to the delta's load perturbation the
+final labels are bit-identical to a full re-adapt; the result carries
+``scored_vertices``/``scored_per_iter`` so callers can verify the scored
+fraction is sub-linear in V.
 """
 from __future__ import annotations
 
@@ -48,8 +74,10 @@ import dataclasses
 from typing import Callable, List, Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from . import delta as _delta
 from . import engine as _engine
 from . import metrics
 from .engine import EngineOptions
@@ -58,6 +86,29 @@ from .spinner import (PartitionResult, SpinnerConfig, prepare_init,
                       resolve_options)
 
 _ENGINES = ("auto", "fused", "sharded", "chunked", "host")
+
+
+@dataclasses.dataclass
+class _DeltaFast:
+    """The session's delta fast-path state (see ``repro.core.delta``).
+
+    Built lazily on the first eligible ``adapt(edge_updates=...)`` -- the
+    one O(E) cold cost (pair-key index + for Pallas a host retile whose
+    geometry mirrors the cached device upload).  ``merged`` counts the
+    prefix of the session's pending log already scattered into ``dd``.
+    """
+
+    mode: str                         # "single" | "sharded"
+    tracker: _delta.DeltaTracker
+    dd: _delta.DeviceDelta
+    opts_t: EngineOptions             # autotuned options the arrays match
+    v_pad: int
+    merged: int = 0
+    # sharded mode only
+    mesh: object = None
+    axis: str = "data"
+    plan: object = None
+    prog_full: object = None          # the regular (non-frontier) program
 
 
 class PartitionSession:
@@ -72,6 +123,14 @@ class PartitionSession:
     def __init__(self, graph: Graph, cfg: SpinnerConfig,
                  options: Optional[EngineOptions] = None):
         cfg, opts = resolve_options(cfg, options)
+        self._pending: List[tuple] = []   # validated directed delta batches
+        self._dirty: Optional[np.ndarray] = None  # endpoints since last run
+        self._delta: Optional[_DeltaFast] = None
+        self._fast_adapts = 0
+        self._fallback_adapts = 0
+        self._host_rebuilds = 0
+        self._delta_bytes_last = 0
+        self._delta_bytes_total = 0
         self.graph = graph
         self.cfg = cfg
         self.options = opts
@@ -82,6 +141,45 @@ class PartitionSession:
         self._runs = 0
         self._closed = False
 
+    # -- the logical graph (base + pending delta log) ----------------------
+
+    @property
+    def graph(self) -> Graph:
+        """The session's logical graph.  Reading it MATERIALIZES any
+        pending edge deltas into a host Graph (one ``add_edges`` rebuild
+        -- the cost the fast path defers); ``stats()`` reports the base
+        graph plus the pending-log counters without materializing."""
+        if self._pending:
+            self._materialize()
+        return self._graph
+
+    @graph.setter
+    def graph(self, g: Graph) -> None:
+        self._graph = g
+        self._pending = []
+        self._dirty = None
+        self._delta = None
+
+    def _materialize(self) -> None:
+        """Fold the pending delta log into a host Graph.  One coalesced
+        ``add_edges`` call: the union-of-directions weight semantics are
+        order-independent, so batching is exact."""
+        pending, self._pending = self._pending, []
+        if not pending:
+            return
+        src = np.concatenate([b[0] for b in pending])
+        dst = np.concatenate([b[1] for b in pending])
+        self._graph = add_edges(self._graph, src, dst)
+        self._host_rebuilds += 1
+        self._delta = None   # device arrays were keyed to the old base
+
+    def _mark_dirty(self, *vertex_sets) -> None:
+        if self._dirty is None:
+            self._dirty = np.zeros(self._graph.num_vertices, bool)
+        for vs in vertex_sets:
+            if len(vs):
+                self._dirty[np.asarray(vs)] = True
+
     # -- lifecycle ---------------------------------------------------------
 
     def close(self) -> None:
@@ -91,6 +189,9 @@ class PartitionSession:
         self._prev = None
         self._last = None
         self._staged = None
+        self._pending = []
+        self._delta = None
+        self._dirty = None
         self._closed = True
 
     def __enter__(self) -> "PartitionSession":
@@ -133,6 +234,7 @@ class PartitionSession:
               num_vertices: Optional[int] = None,
               record_history: Optional[bool] = None,
               callback: Optional[Callable[[int, dict], None]] = None,
+              frontier: Optional[bool] = None,
               ) -> PartitionResult:
         """Incremental restart (Section 3.4) from the previous labels.
 
@@ -145,12 +247,43 @@ class PartitionSession:
         session's shape bucket this performs ZERO new compilations; a
         staged snapshot additionally starts from device-resident edge
         arrays, with zero synchronous host->device copies on this call.
+
+        An ``edge_updates`` delta that fits the resident layout's slack
+        takes the O(|delta|) fast path (on-device scatter merge, no host
+        CSR rebuild, no O(E) re-upload -- see the module docstring for
+        eligibility); otherwise it falls back to the bit-identical
+        rebuild.  ``frontier=True`` reconverges only the dirty vertex
+        set and drain-halts (see the module docstring); the result's
+        ``scored_per_iter`` reports per-iteration scored-vertex counts.
         """
         self._check_open()
-        new_graph = self._graph_delta(new_graph, edge_updates, num_vertices)
-        prev = self._require_prev(prev)      # validate before rebinding
+        if new_graph is not None and edge_updates is not None:
+            raise ValueError("pass at most one of new_graph/edge_updates")
+        batch = None
+        if edge_updates is not None:
+            e_src, e_dst = edge_updates
+            e_src, e_dst = _delta.check_edge_updates(
+                e_src, e_dst, self._graph.num_vertices, num_vertices)
+            grows = (num_vertices is not None
+                     and num_vertices > self._graph.num_vertices)
+            if not grows:
+                prev_arr = self._require_prev(prev)
+                res = self._try_fast_adapt(e_src, e_dst, prev_arr,
+                                           frontier, record_history,
+                                           callback)
+                if res is not None:
+                    self._staged = None
+                    return res
+                self._fallback_adapts += 1
+            # fallback: the classic host rebuild (bit-identical oracle)
+            new_graph = add_edges(self.graph, e_src, e_dst,
+                                  num_vertices=num_vertices)
+            self._host_rebuilds += 1
+            batch = (e_src, e_dst)
+        prev = self._require_prev(prev)
         if new_graph is None and self._staged is not None:
             new_graph = self._staged
+        dirty, old_v = self._dirty, self._graph.num_vertices
         if new_graph is not None:
             # any rebinding -- staged or explicit -- supersedes a pending
             # staged snapshot, which was built against the graph this call
@@ -159,7 +292,31 @@ class PartitionSession:
             self.graph = new_graph
         from .incremental import extend_labels
         init = extend_labels(prev, self.graph.num_vertices)
+        if frontier:
+            active = self._frontier_active(dirty, old_v, batch,
+                                           full=batch is None)
+            return self._run_frontier(init, active, record_history,
+                                      callback)
         return self._run(init, record_history, callback)
+
+    def _frontier_active(self, dirty, old_v: int, batch,
+                         full: bool) -> np.ndarray:
+        """Initial active mask for a frontier fallback run: accumulated
+        dirty endpoints + this call's batch endpoints + grown vertices.
+        With no delta provenance at all (``full``) every vertex starts
+        active and frontier mode degenerates to drain-halting LPA."""
+        V = self._graph.num_vertices
+        active = np.zeros(V, bool)
+        if full and dirty is None:
+            active[:] = True
+            return active
+        if dirty is not None:
+            active[:dirty.shape[0]] = dirty
+        active[old_v:] = True
+        if batch is not None:
+            active[batch[0]] = True
+            active[batch[1]] = True
+        return active
 
     def stage(self, new_graph: Optional[Graph] = None, *,
               edge_updates: Optional[tuple] = None,
@@ -179,7 +336,9 @@ class PartitionSession:
         consumed by the next argument-less ``adapt()``; staging again
         replaces it, and any other rebinding (``update()``, an explicit
         ``adapt(new_graph=...)``/``adapt(edge_updates=...)``) discards
-        it, since it was built against the superseded graph.  Chainable.
+        it, since it was built against the superseded graph.  Staging
+        materializes any pending fast-path deltas first (the staged
+        snapshot is a full host Graph).  Chainable.
         """
         self._check_open()
         new_graph = self._graph_delta(new_graph, edge_updates, num_vertices)
@@ -191,15 +350,19 @@ class PartitionSession:
 
     def _graph_delta(self, new_graph: Optional[Graph], edge_updates,
                      num_vertices: Optional[int]) -> Optional[Graph]:
-        """Resolve the mutually-exclusive new_graph/edge_updates pair
-        (shared by ``adapt`` and ``stage`` so their semantics cannot
-        drift); ``edge_updates=(src, dst)`` extends the current graph."""
+        """Resolve the mutually-exclusive new_graph/edge_updates pair;
+        ``edge_updates=(src, dst)`` extends the current graph (validated:
+        out-of-range or negative ids and mismatched lengths raise
+        ``ValueError`` before any state changes)."""
         if new_graph is not None and edge_updates is not None:
             raise ValueError("pass at most one of new_graph/edge_updates")
         if edge_updates is not None:
             e_src, e_dst = edge_updates
+            e_src, e_dst = _delta.check_edge_updates(
+                e_src, e_dst, self._graph.num_vertices, num_vertices)
             new_graph = add_edges(self.graph, e_src, e_dst,
                                   num_vertices=num_vertices)
+            self._host_rebuilds += 1
         return new_graph
 
     def _prestage(self, graph: Graph) -> None:
@@ -270,12 +433,241 @@ class PartitionSession:
         """Apply a graph delta WITHOUT running; the next ``adapt()`` (or
         ``partition()``) sees the extended graph.  Discards any pending
         staged snapshot (it was built against the graph this call
-        replaces).  Chainable."""
+        replaces).
+
+        Same-vertex-set deltas are appended to the session's pending log
+        (validated immediately, materialized lazily) so a following
+        ``adapt(edge_updates=...)``/``adapt()`` chain stays on the
+        O(|delta|) fast path; a delta that grows the vertex set rebuilds
+        the host graph right away.  Chainable."""
         self._check_open()
         self._staged = None
-        self.graph = add_edges(self.graph, edge_src, edge_dst,
-                               directed=directed, num_vertices=num_vertices)
+        e_src, e_dst = _delta.check_edge_updates(
+            edge_src, edge_dst, self._graph.num_vertices, num_vertices)
+        if num_vertices is not None \
+                and num_vertices > self._graph.num_vertices:
+            self.graph = add_edges(self.graph, e_src, e_dst,
+                                   directed=directed,
+                                   num_vertices=num_vertices)
+            self._host_rebuilds += 1
+            return self
+        if not directed:
+            e_src, e_dst = (np.concatenate([e_src, e_dst]),
+                            np.concatenate([e_dst, e_src]))
+        self._pending.append((e_src, e_dst))
+        self._mark_dirty(e_src, e_dst)   # conservative: all endpoints
         return self
+
+    # -- the delta fast path ----------------------------------------------
+
+    def _fast_mode(self, record_history, callback) -> Optional[tuple]:
+        """(mode, mesh) when the session's configuration supports the
+        on-device delta merge, else None (-> classic fallback).  See the
+        module docstring for the eligible-mode table."""
+        opts, cfg = self.options, self.cfg
+        if opts.pad != "bucket":
+            return None                 # no slack region to merge into
+        if callback is not None or record_history is True:
+            return None                 # per-iteration visibility paths
+        if opts.mesh is not None or opts.engine == "sharded":
+            mesh = opts.mesh
+            if mesh is None:
+                mesh = _engine._default_partition_mesh()
+            ndev = mesh.shape[opts.axis]
+            opts_t = _engine._autotuned(self._graph, cfg, opts, ndev=ndev)
+            if getattr(opts_t.backend(), "name", None) != "xla":
+                return None             # sharded pallas retile is host-side
+            if opts_t.resolved_overlap(ndev) == "on":
+                return None             # overlap's split arrays differ
+            if opts_t.resolved_label_exchange(ndev) == "halo":
+                return None             # halo dst slots aren't global ids
+            return ("sharded", mesh)
+        if opts.engine not in ("auto", "fused"):
+            return None                 # chunked/host replay per-iteration
+        if opts.engine == "auto" and record_history is not False:
+            return None                 # auto+history resolves to chunked
+        opts_t = _engine._autotuned(self._graph, cfg, opts)
+        backend = opts_t.backend()
+        if getattr(backend, "name", None) == "pallas" \
+                and opts_t.resolved_fused_update() != "on":
+            return None                 # split pallas args carry no deg_t
+        return ("single", None)
+
+    def _delta_init(self, mode: str, mesh) -> _DeltaFast:
+        """Cold-start the fast path from the CURRENT base graph: pair-key
+        index + DeviceDelta over the resident (cached) device arrays.
+        O(E) host work, paid once per base graph."""
+        graph, cfg, opts = self._graph, self.cfg, self.options
+        tracker = _delta.DeltaTracker(graph)
+        if mode == "single":
+            opts_t = _engine._autotuned(graph, cfg, opts)
+            bind, padded = _engine._single_bind(graph, cfg, opts_t,
+                                                frontier=True)
+            backend = opts_t.backend()
+            if getattr(backend, "name", None) == "pallas":
+                from .graph import build_tiled_csr
+                # the host twin of the cached fused upload: same
+                # deterministic build, gives perm/fill/geometry
+                tiled = build_tiled_csr(
+                    padded, tile_v=backend.tile_v, tile_e=backend.tile_e,
+                    pad_chunks=4,
+                    min_total_slots=padded.num_directed_entries)
+                dd = _delta.init_single_pallas(
+                    bind.score, bind.deg_w, bind.frontier, tiled,
+                    graph.num_directed_entries)
+            else:
+                dd = _delta.init_single_xla(bind.score, bind.deg_w,
+                                            graph.num_directed_entries)
+            prog = _engine._fused_program(cfg, opts_t)
+            self._track(prog)
+            return _DeltaFast(mode="single", tracker=tracker, dd=dd,
+                              opts_t=opts_t, v_pad=padded.num_vertices,
+                              prog_full=prog)
+        ndev = mesh.shape[opts.axis]
+        opts_t = _engine._autotuned(graph, cfg, opts, ndev=ndev)
+        sg, plan, prog, args = _engine._sharded_parts(graph, cfg, opts_t,
+                                                      mesh, opts.axis)
+        self._track(prog)
+        n_plan = len(plan.device_args())
+        score_args = args[3:len(args) - n_plan] if n_plan \
+            else args[3:]
+        dd = _delta.init_sharded_xla(tuple(score_args), args[2], sg)
+        return _DeltaFast(mode="sharded", tracker=tracker, dd=dd,
+                          opts_t=opts_t, v_pad=sg.num_vertices,
+                          mesh=mesh, axis=opts.axis, plan=plan,
+                          prog_full=prog)
+
+    def _try_fast_adapt(self, e_src, e_dst, prev, frontier,
+                        record_history, callback
+                        ) -> Optional[PartitionResult]:
+        """The O(|delta|) adapt: merge on device, restart warm.  Returns
+        None when ineligible or when the batch overflows the layout's
+        slack (-> the caller rebuilds, bit-identically)."""
+        mode = self._fast_mode(record_history, callback)
+        if mode is None:
+            return None
+        if prev.shape[0] != self._graph.num_vertices:
+            return None     # shorter prev needs the -1/least-loaded init
+        if self._delta is None:
+            self._delta = self._delta_init(*mode)
+        fs = self._delta
+        mp = _engine._merge_program()
+        self._track(mp)
+        dd, tracker = fs.dd, fs.tracker
+        nbytes = 0
+        batches = self._pending[fs.merged:] + [(e_src, e_dst)]
+        for bs, bd in batches:
+            out = _delta.apply_delta(tracker, dd, bs, bd, mp.run)
+            if out is None:
+                return None          # slack overflow -> rebuild fallback
+            dd, plan, b = out
+            nbytes += b
+            self._mark_dirty(plan.touched)
+        self._pending.append((e_src, e_dst))
+        fs.dd, fs.merged = dd, len(self._pending)
+        self._delta_bytes_last = nbytes
+        self._delta_bytes_total += nbytes
+        self._fast_adapts += 1
+
+        cfg = self.cfg
+        V = self._graph.num_vertices
+        capacity = cfg.c * tracker.total_weight / cfg.k
+        key, _ = jax.random.split(jax.random.PRNGKey(cfg.seed))
+        lp = _engine._loads_program(cfg.k)
+        self._track(lp)
+        labels_p = _engine.pad_labels(jnp.asarray(prev, jnp.int32),
+                                      fs.v_pad)
+        loads = lp.run(labels_p, dd.deg_w)
+        state = _engine.init_state(labels_p, loads, key)
+        hist = None
+        if fs.mode == "single":
+            fused = fs.opts_t.resolved_fused_update() == "on"
+            exp = dd.coo if dd.mode == "single_pallas" else dd.score[:2]
+            bind = _engine.GraphBind(
+                deg_w=dd.deg_w, capacity=jnp.float32(capacity),
+                num_real=jnp.int32(V), score=dd.score,
+                frontier=exp if frontier else ())
+            if frontier:
+                prog = _engine._frontier_program(cfg, fs.opts_t)
+                self._track(prog)
+                state, hist = prog.run(state, self._active_mask(fs.v_pad),
+                                       bind)
+            else:
+                state = fs.prog_full.run(state, bind)
+            eng = "fused"
+        else:
+            args = (jnp.float32(capacity), jnp.int32(V), dd.deg_w) \
+                + tuple(dd.score) + tuple(fs.plan.device_args())
+            if frontier:
+                fused = fs.opts_t.resolved_fused_update() == "on"
+                prog = _engine._sharded_frontier_program(
+                    cfg, fs.opts_t, fs.mesh, fs.axis, fs.plan.signature(),
+                    len(dd.score), fused=fused)
+                self._track(prog)
+                state, hist = prog.run(state, self._active_mask(fs.v_pad),
+                                       *args)
+            else:
+                state = fs.prog_full.run(state, *args)
+            eng = "sharded"
+        res = self._finish_state(state, V, eng, hist)
+        self._dirty = None
+        return res
+
+    def _active_mask(self, v_pad: int) -> jax.Array:
+        active = np.zeros(v_pad, bool)
+        if self._dirty is not None:
+            active[:self._dirty.shape[0]] = self._dirty
+        return jnp.asarray(active)
+
+    def _finish_state(self, state, num_real: int, eng: str,
+                      hist) -> PartitionResult:
+        iters = int(state.iteration)
+        if hist is not None:
+            per_iter = tuple(float(x) for x in np.asarray(hist)[:iters])
+            scored = float(sum(per_iter))
+        else:
+            per_iter, scored = (), -1.0
+        res = PartitionResult(
+            labels=np.asarray(state.labels)[:num_real],
+            loads=np.asarray(state.loads), iterations=iters,
+            halted=bool(state.halted), history=[],
+            total_messages=float(state.total_messages), engine=eng,
+            exchanged_bytes=float(state.exchanged_bytes),
+            scored_vertices=scored, scored_per_iter=per_iter)
+        self._last = res
+        self._prev = res.labels
+        self._runs += 1
+        return res
+
+    def _run_frontier(self, init, active, record_history,
+                      callback) -> PartitionResult:
+        """Frontier reconvergence on a materialized graph (the fallback
+        compute path; the fast path drives the same programs off its
+        resident merged arrays)."""
+        if callback is not None or record_history is True:
+            raise ValueError(
+                "frontier=True records only per-iteration scored-vertex "
+                "counts (PartitionResult.scored_per_iter); run without "
+                "frontier for history/callbacks")
+        graph, opts, cfg = self.graph, self.options, self.cfg
+        if opts.engine in ("chunked", "host"):
+            raise ValueError(
+                f"frontier=True requires a while_loop engine (fused/"
+                f"sharded/auto), not engine={opts.engine!r}")
+        labels, loads, key = prepare_init(graph, cfg, init)
+        if opts.mesh is not None or opts.engine == "sharded":
+            state, hist = _engine.run_sharded_frontier(
+                graph, cfg, labels, loads, key, active, mesh=opts.mesh,
+                axis=opts.axis, opts=opts, on_program=self._track)
+            eng = "sharded"
+        else:
+            state, hist = _engine.run_frontier(
+                graph, cfg, labels, loads, key, active, opts=opts,
+                on_program=self._track)
+            eng = "fused"
+        res = self._finish_state(state, graph.num_vertices, eng, hist)
+        self._dirty = None
+        return res
 
     # -- introspection -----------------------------------------------------
 
@@ -286,10 +678,14 @@ class PartitionSession:
 
     def stats(self) -> dict:
         """Session state: shape buckets, compile/run counters, padded
-        layout, and (on a mesh) the exchange plan's wire volumes."""
+        layout, the delta fast-path counters, and (on a mesh) the
+        exchange plan's wire volumes.  Reads the BASE graph -- pending
+        fast-path deltas are reported under ``"delta"`` without forcing
+        a host materialization."""
         self._check_open()
-        graph, opts = self.graph, self.options
+        graph, opts = self._graph, self.options
         padded, _ = _engine.padded_view(graph, opts)
+        fs = self._delta
         d = {
             "num_vertices": graph.num_vertices,
             "num_directed_entries": graph.num_directed_entries,
@@ -305,6 +701,18 @@ class PartitionSession:
             "programs": len(self._programs),
             "staged": (self._staged.num_vertices
                        if self._staged is not None else None),
+            "delta": {
+                "pending_batches": len(self._pending),
+                "merged_batches": fs.merged if fs is not None else 0,
+                "fast_adapts": self._fast_adapts,
+                "fallback_adapts": self._fallback_adapts,
+                "host_rebuilds": self._host_rebuilds,
+                "last_upload_bytes": self._delta_bytes_last,
+                "upload_bytes_total": self._delta_bytes_total,
+                "tracked_total_weight": (
+                    fs.tracker.total_weight if fs is not None
+                    else float(graph.total_weight)),
+            },
         }
         ndev = (opts.mesh.shape[opts.axis] if opts.mesh is not None else 1)
         opts_t = _engine._autotuned(graph, self.cfg, opts, ndev=ndev)
@@ -320,7 +728,9 @@ class PartitionSession:
             d["last"] = {"iterations": self._last.iterations,
                          "halted": self._last.halted,
                          "engine": self._last.engine,
-                         "exchanged_bytes": self._last.exchanged_bytes}
+                         "exchanged_bytes": self._last.exchanged_bytes,
+                         "scored_vertices": self._last.scored_vertices,
+                         "scored_per_iter": self._last.scored_per_iter}
         if opts.mesh is not None:
             from .distributed import comm_stats, shard_layout
             sg = shard_layout(padded, opts.mesh.shape[opts.axis],
@@ -411,6 +821,7 @@ class PartitionSession:
         self._last = res
         self._prev = res.labels
         self._runs += 1
+        self._dirty = None     # a full run reconverges every vertex
         return res
 
     def _run_host(self, cfg, labels, loads, key, record_history: bool,

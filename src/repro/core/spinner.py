@@ -202,6 +202,10 @@ class PartitionResult:
     engine: str = "host"                # which runner produced this result
     exchanged_bytes: float = 0.0        # cumulative label-exchange wire bytes
                                         # (sharded engine only; see core.comm)
+    scored_vertices: float = -1.0       # total vertices scored across the run
+                                        # (frontier mode only; -1 = dense run)
+    scored_per_iter: tuple = ()         # frontier mode: scored-vertex count
+                                        # per iteration (sub-linearity report)
 
 
 def init_labels(graph: Graph, cfg: SpinnerConfig, key: jax.Array) -> jax.Array:

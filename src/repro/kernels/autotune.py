@@ -48,10 +48,16 @@ def round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def _padded_edges(deg: np.ndarray, tile_v: int, tile_e: int
-                  ) -> Tuple[int, int, int]:
+def _padded_edges(deg: np.ndarray, tile_v: int, tile_e: int,
+                  min_total: int = 0) -> Tuple[int, int, int]:
     """(T, C, e_pad) after round-robin degree balancing, matching
-    ``build_tiled_csr``'s chunk geometry for this degree sequence."""
+    ``build_tiled_csr``'s chunk geometry for this degree sequence.
+
+    ``min_total`` mirrors the build's ``min_total_slots`` floor: under
+    the bucketed session layout every tiling reserves at least the edge
+    bucket's worth of slots so the delta-merge append region survives
+    retiling, and the model must charge for those slots too.
+    """
     V = int(deg.shape[0])
     T = max(1, -(-V // tile_v))
     if V <= tile_v:
@@ -61,12 +67,14 @@ def _padded_edges(deg: np.ndarray, tile_v: int, tile_e: int
         counts = np.zeros(T, dtype=np.int64)
         np.add.at(counts, np.arange(V, dtype=np.int64) % T, d)
     C = max(1, -(-int(counts.max()) // tile_e))
+    if min_total:
+        C = max(C, -(-int(min_total) // (T * tile_e)))
     return T, C, T * C * tile_e
 
 
 def _shard_cost(deg: np.ndarray, tile_v: int, tile_e: int,
-                k_pad: int) -> float:
-    T, C, e_pad = _padded_edges(deg, tile_v, tile_e)
+                k_pad: int, min_total: int = 0) -> float:
+    T, C, e_pad = _padded_edges(deg, tile_v, tile_e, min_total)
     padded_v = T * tile_v
     flops = 2.0 * e_pad * (tile_v + k_pad)      # two one-hot matmuls
     hbm = e_pad * 12.0 + padded_v * k_pad * 4.0  # edge stream + noise
@@ -75,21 +83,33 @@ def _shard_cost(deg: np.ndarray, tile_v: int, tile_e: int,
 
 
 def _shard_degrees(graph, ndev: int):
-    deg = np.diff(np.asarray(graph.row_ptr)).astype(np.int64)
+    """Per-shard REAL entry counts (weight-0 filler never gets tiled)."""
+    src = np.asarray(graph.src)
+    w = np.asarray(graph.weight)
+    deg = np.bincount(src[w > 0], minlength=graph.num_vertices
+                      ).astype(np.int64)
     if ndev <= 1:
         return [deg]
     v_local = -(-deg.shape[0] // ndev)
     return [deg[p * v_local:(p + 1) * v_local] for p in range(ndev)]
 
 
+def _min_total(graph, ndev: int) -> int:
+    # the single-tiling build floors its slot count to the padded entry
+    # count (the delta append region); the per-shard build does not
+    return int(np.asarray(graph.src).shape[0]) if ndev <= 1 else 0
+
+
 def sweep(graph, k: int, ndev: int = 1) -> list:
     """All candidate costs (modeled seconds/iteration, max over shards)."""
     k_pad = round_up(max(k, 1), 128)
     shards = _shard_degrees(graph, ndev)
+    min_total = _min_total(graph, ndev)
     rows = []
     for tile_v, tile_e in CANDIDATES:
-        cost = max(_shard_cost(d, tile_v, tile_e, k_pad) for d in shards)
-        T, C, e_pad = _padded_edges(shards[0], tile_v, tile_e)
+        cost = max(_shard_cost(d, tile_v, tile_e, k_pad, min_total)
+                   for d in shards)
+        T, C, e_pad = _padded_edges(shards[0], tile_v, tile_e, min_total)
         rows.append({"tile_v": tile_v, "tile_e": tile_e, "k_pad": k_pad,
                      "cost_s": cost, "grid": T * C, "e_pad": e_pad})
     return rows
@@ -110,8 +130,10 @@ def choose_tile_config(graph, k: int, ndev: int = 1
         return hit
     best, best_cost = CANDIDATES[0], float("inf")
     shards = _shard_degrees(graph, ndev)
+    min_total = _min_total(graph, ndev)
     for tile_v, tile_e in CANDIDATES:
-        cost = max(_shard_cost(d, tile_v, tile_e, k_pad) for d in shards)
+        cost = max(_shard_cost(d, tile_v, tile_e, k_pad, min_total)
+                   for d in shards)
         if cost < best_cost:
             best, best_cost = (tile_v, tile_e), cost
     choice = (best[0], best[1], k_pad)

@@ -251,7 +251,8 @@ class XlaScatterBackend:
     fused_auto = False
 
     def make_fused_update(self, k: int, *, degree_weighted: bool,
-                          current_bonus: float) -> Callable:
+                          current_bonus: float,
+                          frontier: bool = False) -> Callable:
         from repro.core.engine import make_update_parts   # lazy: no cycle
         propose, finish = make_update_parts(
             k, degree_weighted=degree_weighted, current_bonus=current_bonus)
@@ -262,8 +263,13 @@ class XlaScatterBackend:
                                             labels.shape[0], k)
             best, tb, tc, m = propose(scores, labels, deg_w, loads, noise,
                                       valid, C)
-            return finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
-                          reduce_, C)
+            out = finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
+                         reduce_, C)
+            if frontier:
+                # the frontier runner needs the pre-throttle want mask to
+                # carry the active set forward and detect the drain
+                return out + ((best != labels) & valid,)
+            return out
         return fused
 
     def fused_graph_args(self, graph: Graph, k: int,
@@ -272,7 +278,8 @@ class XlaScatterBackend:
 
     def make_sharded_fused_update(self, k: int, v_local: int, *,
                                   degree_weighted: bool,
-                                  current_bonus: float) -> Callable:
+                                  current_bonus: float,
+                                  frontier: bool = False) -> Callable:
         from repro.core.engine import make_update_parts
         propose, finish = make_update_parts(
             k, degree_weighted=degree_weighted, current_bonus=current_bonus)
@@ -284,8 +291,11 @@ class XlaScatterBackend:
                                jnp.float32).at[src_local, nbr].add(w)
             best, tb, tc, m = propose(scores, labels, deg_w, loads, noise,
                                       valid, C)
-            return finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
-                          reduce_, C)
+            out = finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
+                         reduce_, C)
+            if frontier:
+                return out + ((best != labels) & valid,)
+            return out
         return fused
 
     def sharded_fused_graph_args(self, sg, k: int, dst_index: np.ndarray,
@@ -360,9 +370,13 @@ class PallasTiledBackend:
         return scores
 
     def graph_args(self, graph: Graph, k: int, pad: bool = False) -> tuple:
-        tiled = build_tiled_csr(graph, tile_v=self.tile_v,
-                                tile_e=self.tile_e,
-                                pad_chunks=4 if pad else 1)
+        # pad mode floors the total slot count at the bucketed edge
+        # capacity, so the tiled layout carries at least the COO bucket's
+        # slack for the on-device delta merge (see repro.core.delta)
+        tiled = build_tiled_csr(
+            graph, tile_v=self.tile_v, tile_e=self.tile_e,
+            pad_chunks=4 if pad else 1,
+            min_total_slots=graph.num_directed_entries if pad else 0)
         return tuple(map(jnp.asarray, (tiled.src_local, tiled.dst,
                                        tiled.weight, tiled.perm)))
 
@@ -424,7 +438,8 @@ class PallasTiledBackend:
     fused_auto = True
 
     def make_fused_update(self, k: int, *, degree_weighted: bool,
-                          current_bonus: float) -> Callable:
+                          current_bonus: float,
+                          frontier: bool = False) -> Callable:
         from repro.core.engine import make_update_parts   # lazy: no cycle
         _, finish = make_update_parts(
             k, degree_weighted=degree_weighted, current_bonus=current_bonus)
@@ -437,27 +452,34 @@ class PallasTiledBackend:
                 lookup, labels, deg_t, noise, valid, loads / C,
                 src_local, dst, w, perm, inv_perm, tile_v=self.tile_v,
                 k_pad=k_pad, k=k, current_bonus=current_bonus,
-                degree_weighted=degree_weighted, interpret=interpret)
-            return finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
-                          reduce_, C)
+                degree_weighted=degree_weighted, interpret=interpret,
+                frontier=frontier)
+            out = finish(best, tb, tc, m, labels, deg_w, loads, u, valid,
+                         reduce_, C)
+            if frontier:
+                return out + ((best != labels) & valid,)
+            return out
         return fused
 
     def fused_graph_args(self, graph: Graph, k: int,
                          pad: bool = False) -> tuple:
-        tiled = build_tiled_csr(graph, tile_v=self.tile_v,
-                                tile_e=self.tile_e,
-                                pad_chunks=4 if pad else 1)
+        tiled = build_tiled_csr(
+            graph, tile_v=self.tile_v, tile_e=self.tile_e,
+            pad_chunks=4 if pad else 1,
+            min_total_slots=graph.num_directed_entries if pad else 0)
         return tuple(map(jnp.asarray, (tiled.src_local, tiled.dst,
                                        tiled.weight, tiled.perm,
                                        tiled.inv_perm, tiled.deg_t)))
 
     def make_sharded_fused_update(self, k: int, v_local: int, *,
                                   degree_weighted: bool,
-                                  current_bonus: float) -> Callable:
+                                  current_bonus: float,
+                                  frontier: bool = False) -> Callable:
         # per-shard arrays are exactly a single-device tiling of the
         # shard's local vertex range: same closure
         return self.make_fused_update(k, degree_weighted=degree_weighted,
-                                      current_bonus=current_bonus)
+                                      current_bonus=current_bonus,
+                                      frontier=frontier)
 
     def sharded_fused_graph_args(self, sg, k: int, dst_index: np.ndarray,
                                  pad: bool = False) -> tuple:

@@ -134,7 +134,7 @@ def spinner_scores_pallas(src_local: jax.Array, dst_label: jax.Array,
 
 def _fused_kernel(*refs, tile_v: int, k_pad: int, k: int, nc: int,
                   current_bonus: float, degree_weighted: bool,
-                  has_init: bool):
+                  has_init: bool, has_act: bool = False):
     """Edge reduction + per-tile vertex update in one VMEM residency.
 
     Grid (T, C): chunk j accumulates its one-hot matmul into the scratch
@@ -143,16 +143,24 @@ def _fused_kernel(*refs, tile_v: int, k_pad: int, k: int, nc: int,
     (tile_v, k_pad) block ever leaving VMEM.  ``m_ref`` is a revisited
     (1, k_pad) output accumulating the migration-candidate mass M(l)
     across all tiles (zeroed on the very first grid step).
+
+    ``has_act`` threads the frontier mode's (T, 1) tile-activity bitmap:
+    a tile with no active vertex skips its matmul chain and final update
+    entirely and writes the safe proposal ``best = labels`` (a no-op for
+    the epilogue: ``want`` is already false for every inactive vertex),
+    ``tb = tc = 0``.  Inactive tiles therefore cost O(1) per chunk
+    instead of O(tile_e * (tile_v + k_pad)) -- the compute analogue of
+    the delta exchange plan.
     """
-    if has_init:
-        (src_ref, lbl_ref, w_ref, labels_ref, deg_ref, valid_ref,
-         pen_ref, noise_ref, init_ref, best_ref, tb_ref, tc_ref,
-         m_ref, acc_ref) = refs
-    else:
-        (src_ref, lbl_ref, w_ref, labels_ref, deg_ref, valid_ref,
-         pen_ref, noise_ref, best_ref, tb_ref, tc_ref, m_ref,
-         acc_ref) = refs
-        init_ref = None
+    n_in = 8 + int(has_init) + int(has_act)
+    in_refs = refs[:n_in]
+    best_ref, tb_ref, tc_ref, m_ref, acc_ref = refs[n_in:]
+    (src_ref, lbl_ref, w_ref, labels_ref, deg_ref, valid_ref,
+     pen_ref, noise_ref) = in_refs[:8]
+    pos = 8
+    init_ref = in_refs[pos] if has_init else None
+    pos += int(has_init)
+    act_ref = in_refs[pos] if has_act else None
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -166,18 +174,18 @@ def _fused_kernel(*refs, tile_v: int, k_pad: int, k: int, nc: int,
         acc_ref[...] = (init_ref[...] if init_ref is not None
                         else jnp.zeros_like(acc_ref))
 
-    sl = src_ref[0, 0, :]                             # (TILE_E,) int32
-    lbl = lbl_ref[0, 0, :]                            # (TILE_E,) int32
-    w = w_ref[0, 0, :]                                # (TILE_E,) f32
-    rows = jax.lax.broadcasted_iota(jnp.int32, (sl.shape[0], tile_v), 1)
-    onehot_v = (sl[:, None] == rows).astype(jnp.float32)
-    ecols = jax.lax.broadcasted_iota(jnp.int32, (lbl.shape[0], k_pad), 1)
-    onehot_l = (lbl[:, None] == ecols).astype(jnp.float32) * w[:, None]
-    acc_ref[...] += jax.lax.dot_general(
-        onehot_v, onehot_l, (((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    def _accumulate():
+        sl = src_ref[0, 0, :]                         # (TILE_E,) int32
+        lbl = lbl_ref[0, 0, :]                        # (TILE_E,) int32
+        w = w_ref[0, 0, :]                            # (TILE_E,) f32
+        rows = jax.lax.broadcasted_iota(jnp.int32, (sl.shape[0], tile_v), 1)
+        onehot_v = (sl[:, None] == rows).astype(jnp.float32)
+        ecols = jax.lax.broadcasted_iota(jnp.int32, (lbl.shape[0], k_pad), 1)
+        onehot_l = (lbl[:, None] == ecols).astype(jnp.float32) * w[:, None]
+        acc_ref[...] += jax.lax.dot_general(
+            onehot_v, onehot_l, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
 
-    @pl.when(j == nc - 1)
     def _vertex_update():
         scores = acc_ref[...]                         # (tile_v, k_pad)
         deg = deg_ref[0, :]                           # (tile_v,) f32
@@ -205,6 +213,30 @@ def _fused_kernel(*refs, tile_v: int, k_pad: int, k: int, nc: int,
         m_ref[0, :] += jnp.sum(
             jnp.where(hit & want[:, None], measure[:, None], 0.0), axis=0)
 
+    if has_act:
+        act = act_ref[0, 0] != 0
+
+        @pl.when(act)
+        def _accum_active():
+            _accumulate()
+
+        @pl.when((j == nc - 1) & act)
+        def _update_active():
+            _vertex_update()
+
+        @pl.when((j == nc - 1) & jnp.logical_not(act))
+        def _update_skipped():
+            # safe no-op proposal: epilogue sees want == False everywhere
+            best_ref[0, :] = labels_ref[0, :]
+            tb_ref[0, :] = jnp.zeros((tile_v,), jnp.float32)
+            tc_ref[0, :] = jnp.zeros((tile_v,), jnp.float32)
+    else:
+        _accumulate()
+
+        @pl.when(j == nc - 1)
+        def _update():
+            _vertex_update()
+
 
 def fused_update_pallas(src_local: jax.Array, dst_label: jax.Array,
                         w: jax.Array, labels_t: jax.Array,
@@ -213,7 +245,8 @@ def fused_update_pallas(src_local: jax.Array, dst_label: jax.Array,
                         tile_v: int, k_pad: int, k: int,
                         current_bonus: float, degree_weighted: bool,
                         interpret: bool = False,
-                        acc_init: jax.Array = None) -> tuple:
+                        acc_init: jax.Array = None,
+                        tile_act: jax.Array = None) -> tuple:
     """Launch the fused megakernel over one tiling (tiled row order).
 
     Args:
@@ -226,6 +259,8 @@ def fused_update_pallas(src_local: jax.Array, dst_label: jax.Array,
       noise_t: (T * tile_v, k_pad) f32 tie noise, tiled row order.
       acc_init: optional (T * tile_v, k_pad) f32 interior score partial
         (overlap schedule); the kernel seeds its accumulator with it.
+      tile_act: optional (T, 1) int32 frontier-mode activity bitmap;
+        tiles with 0 skip their matmuls and write no-op proposals.
     Returns:
       (best, tot_best, tot_cur, m_partial): (T, tile_v) int32 proposals,
       (T, tile_v) f32 totals at the proposal / the current label, and the
@@ -236,11 +271,13 @@ def fused_update_pallas(src_local: jax.Array, dst_label: jax.Array,
     kernel = functools.partial(
         _fused_kernel, tile_v=tile_v, k_pad=k_pad, k=k, nc=c,
         current_bonus=float(current_bonus),
-        degree_weighted=degree_weighted, has_init=acc_init is not None)
+        degree_weighted=degree_weighted, has_init=acc_init is not None,
+        has_act=tile_act is not None)
     edge_spec = pl.BlockSpec((1, 1, tile_e), lambda i, j: (i, j, 0))
     row_spec = pl.BlockSpec((1, tile_v), lambda i, j: (i, 0))
     mat_spec = pl.BlockSpec((tile_v, k_pad), lambda i, j: (i, 0))
     k_spec = pl.BlockSpec((1, k_pad), lambda i, j: (0, 0))
+    act_spec = pl.BlockSpec((1, 1), lambda i, j: (i, 0))
     in_specs = [edge_spec, edge_spec, edge_spec, row_spec, row_spec,
                 row_spec, k_spec, mat_spec]
     inputs = [src_local, dst_label, w, labels_t, deg_t, valid_t,
@@ -248,6 +285,9 @@ def fused_update_pallas(src_local: jax.Array, dst_label: jax.Array,
     if acc_init is not None:
         in_specs.append(mat_spec)
         inputs.append(acc_init)
+    if tile_act is not None:
+        in_specs.append(act_spec)
+        inputs.append(tile_act)
     return pl.pallas_call(
         kernel,
         grid=(t, c),
@@ -273,7 +313,8 @@ def fused_update_from_tiles(labels_lookup: jax.Array, labels: jax.Array,
                             inv_perm: jax.Array, *, tile_v: int,
                             k_pad: int, k: int, current_bonus: float,
                             degree_weighted: bool, interpret: bool = False,
-                            acc_init: jax.Array = None) -> tuple:
+                            acc_init: jax.Array = None,
+                            frontier: bool = False) -> tuple:
     """The fused vertex-update proposal over one tiling, in VERTEX order.
 
     Gathers destination labels via ``dst``, permutes labels/valid/noise
@@ -282,6 +323,14 @@ def fused_update_from_tiles(labels_lookup: jax.Array, labels: jax.Array,
     ``labels``/``noise``/``valid`` are over the caller's vertex range in
     ORIGINAL order -- the same arrays the split path consumes -- which is
     what keeps the fused trajectory bit-identical.
+
+    With ``frontier=True`` the caller's ``valid`` is the frontier mode's
+    ``valid & active`` mask; a (T, 1) tile-activity bitmap is derived
+    from its tiled view and handed to the kernel so all-inactive tiles
+    skip their matmul chain (see ``_fused_kernel``).  Bit parity with
+    the dense masked path holds because inactive vertices can never
+    migrate (``want`` is false) and their score contribution is zeroed
+    by the same ``valid`` mask in the epilogue.
 
     Returns ``(best, tot_best, tot_cur, m_partial)``: (V,) int32 / f32 /
     f32 vectors in vertex order plus the (k,) local M(l) partial, i.e.
@@ -297,10 +346,11 @@ def fused_update_from_tiles(labels_lookup: jax.Array, labels: jax.Array,
         noise = jnp.pad(noise, ((0, 0), (0, k_pad - k)))
         penalty = jnp.pad(penalty, (0, k_pad - k))
     noise_t = noise[inv_safe]
+    tile_act = jnp.max(valid_t, axis=1, keepdims=True) if frontier else None
     best_t, tb_t, tc_t, m = fused_update_pallas(
         src_local, dst_label, w, labels_t, jnp.asarray(deg_t), valid_t,
         penalty[None, :], noise_t, tile_v=tile_v, k_pad=k_pad, k=k,
         current_bonus=current_bonus, degree_weighted=degree_weighted,
-        interpret=interpret, acc_init=acc_init)
+        interpret=interpret, acc_init=acc_init, tile_act=tile_act)
     return (best_t.reshape(-1)[perm], tb_t.reshape(-1)[perm],
             tc_t.reshape(-1)[perm], m[0, :k])
