@@ -15,13 +15,13 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--suite", default=None,
                     help="quality|convergence|scalability|dynamic|elastic|"
-                         "apps|placement|kernel|engine|roofline")
+                         "apps|placement|kernel|engine|serve|roofline")
     args = ap.parse_args()
 
     from . import (bench_apps, bench_convergence, bench_dynamic,
                    bench_elastic, bench_engine, bench_kernel,
                    bench_placement, bench_quality, bench_scalability,
-                   roofline)
+                   bench_serve, roofline)
     suites = {
         "quality": bench_quality.run,          # Fig 3, Tables 1 & 3
         "convergence": bench_convergence.run,  # Fig 4
@@ -32,6 +32,7 @@ def main() -> None:
         "placement": bench_placement.run,      # beyond-paper
         "kernel": bench_kernel.run,            # Pallas kernel
         "engine": bench_engine.run,            # dispatch/overlap/staged
+        "serve": bench_serve.run,              # multi-tenant scheduler
         "roofline": roofline.run,              # deliverable (g)
     }
     selected = ([args.suite] if args.suite else list(suites))
@@ -41,14 +42,14 @@ def main() -> None:
     for name in selected:
         try:
             rows = suites[name](quick=args.quick)
-            if name == "dynamic":
-                # the perf-trajectory artifact the delta-adapt work is
-                # tracked by: machine-readable, at the repo root
+            if name in ("dynamic", "serve"):
+                # perf-trajectory artifacts (delta adapt, serving tier):
+                # machine-readable, at the repo root
                 import json
                 import os
                 root = os.path.dirname(os.path.dirname(
                     os.path.abspath(__file__)))
-                with open(os.path.join(root, "BENCH_dynamic.json"),
+                with open(os.path.join(root, f"BENCH_{name}.json"),
                           "w") as fh:
                     json.dump(rows, fh, indent=1, default=float)
         except Exception as e:  # keep the suite running; report at the end

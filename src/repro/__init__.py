@@ -1,2 +1,34 @@
-"""repro: Spinner (scalable graph partitioning) as a production JAX framework."""
+"""repro: Spinner (scalable graph partitioning) as a production JAX framework.
+
+The partitioning core is ``repro.core`` (engines, sessions, deltas) and
+the multi-tenant serving tier is ``repro.serve``.  The streaming-delta
+surface in one sketch::
+
+    from repro.core import SpinnerConfig, open_session
+    from repro.core import DeltaTracker, apply_delta   # re-exported
+
+    with open_session(graph, SpinnerConfig(k=16)) as s:
+        s.partition()
+        s.adapt(edge_updates=(src, dst))   # O(|delta|): one apply_delta
+
+and the serving tier, which coalesces queued deltas and batches
+same-bucket tenants into one device dispatch::
+
+    from repro.serve import PartitionScheduler
+
+    sched = PartitionScheduler(max_batch=8)
+    sched.add_tenant("a", graph, SpinnerConfig(k=16), partition=True)
+    tk = sched.submit("a", "edge_updates", edge_updates=(src, dst))
+    sched.drain()
+    labels = tk.result.labels
+
+``repro.serve`` is imported lazily so ``import repro`` stays light.
+"""
 __version__ = "0.1.0"
+
+
+def __getattr__(name):
+    if name in ("serve", "core"):
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,11 +1,14 @@
 """Spinner core: the paper's contribution as a composable JAX module."""
 from . import comm, delta, engine, generators, graph, incremental, metrics, \
     session
-from .delta import DeltaTracker, DeviceDelta, apply_delta, check_edge_updates
-from .engine import (EngineOptions, SpinnerState, make_fused_runner,
+from .delta import (DeltaTracker, DeviceDelta, apply_delta,
+                    check_edge_updates, coalesce_updates)
+from .engine import (EngineOptions, SpinnerState, batch_signature,
+                     make_fused_runner,
                      make_chunked_runner, make_frontier_runner,
                      make_iteration, make_sharded_runner,
-                     make_step_fn, make_vertex_update, run_chunked, run_fused,
+                     make_step_fn, make_vertex_update, run_batched,
+                     run_chunked, run_fused,
                      run_frontier, run_sharded, run_sharded_frontier)
 from .graph import (Graph, TiledCSR, add_edges, build_tiled_csr, from_edges,
                     pad_graph, shape_bucket)
@@ -24,6 +27,7 @@ __all__ = [
     "SpinnerConfig", "SpinnerDeprecationWarning", "EngineOptions",
     "PartitionResult", "PartitionSession", "open_session", "SpinnerState",
     "DeltaTracker", "DeviceDelta", "apply_delta", "check_edge_updates",
+    "coalesce_updates", "run_batched", "batch_signature",
     "partition", "prepare_init", "resolve_options", "make_step",
     "make_step_fn", "make_iteration", "make_vertex_update",
     "make_fused_runner", "make_chunked_runner", "make_frontier_runner",

@@ -92,6 +92,80 @@ def check_edge_updates(src, dst, num_vertices: int,
     return src.astype(np.int32), dst.astype(np.int32)
 
 
+def coalesce_updates(batches, dedupe: bool = True
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+    """Fold queued ``(src, dst)`` edge-update batches into ONE batch
+    whose single ``apply_delta`` is bit-identical to applying the
+    batches one by one.
+
+    This is the serving tier's request coalescing (``repro.serve``): N
+    queued edge-update requests against one graph collapse into a single
+    ``apply_delta`` plan -- one scatter, one reconvergence -- instead of
+    N.  Exactness needs care because Eq. 3's pair weights canonicalize
+    direction: ``add_edges`` (and the tracker mirroring it) stores a
+    weight-1 pair as its canonical ``lo->hi`` edge, so re-submitting the
+    SAME ``hi->lo`` edge in a LATER batch reads as the reverse direction
+    and bumps the pair to weight 2, while re-submitting ``lo->hi`` is a
+    no-op.  A plain concatenation dedupes that distinction away.
+
+    The coalesced batch therefore keeps, per canonical pair, the
+    direction(s) of the FIRST batch that contributed it, upgraded to
+    BOTH directions when any later batch re-contributes the
+    reverse-of-canonical direction.  For every prior pair weight (0, 1
+    or 2) this reproduces the sequential chain's final weight exactly,
+    so scores stay bit-identical (integer-valued f32 sums).  Self-loops
+    are dropped (they never count).  With ``dedupe=False`` the batches
+    are simply concatenated -- exact only when no pair repeats across
+    batches.
+    """
+    batches = [b for b in batches if b is not None]
+    if not batches:
+        return (np.zeros(0, np.int32), np.zeros(0, np.int32))
+    srcs = [np.asarray(b[0]) for b in batches]
+    dsts = [np.asarray(b[1]) for b in batches]
+    if not dedupe:
+        return np.concatenate(srcs), np.concatenate(dsts)
+    nonempty = [(s, d) for s, d in zip(srcs, dsts) if s.size]
+    if not nonempty:
+        return (np.zeros(0, np.int32), np.zeros(0, np.int32))
+    base = max(int(max(s.max(), d.max())) for s, d in nonempty) + 1
+    state: dict = {}               # canonical key -> 1 canon | 2 rev | 3
+    order: list = []               # canonical keys, first-arrival order
+    for s, d in nonempty:
+        s = s.astype(np.int64)
+        d = d.astype(np.int64)
+        keep = s != d
+        s, d = s[keep], d[keep]
+        if not s.size:
+            continue
+        lo = np.minimum(s, d)
+        hi = np.maximum(s, d)
+        uniq, inv = np.unique(lo * base + hi, return_inverse=True)
+        has_c = np.zeros(uniq.size, bool)
+        has_r = np.zeros(uniq.size, bool)
+        np.logical_or.at(has_c, inv, s < d)
+        np.logical_or.at(has_r, inv, s > d)
+        for k, hc, hr in zip(uniq.tolist(), has_c.tolist(),
+                             has_r.tolist()):
+            cur = state.get(k)
+            if cur is None:
+                state[k] = (1 if hc else 0) | (2 if hr else 0)
+                order.append(k)
+            elif hr and cur != 3:  # a later reverse edge bumps w 1 -> 2
+                state[k] = 3
+    out_s: list = []
+    out_d: list = []
+    for k in order:
+        lo, hi = divmod(k, base)
+        if state[k] & 1:
+            out_s.append(lo)
+            out_d.append(hi)
+        if state[k] & 2:
+            out_s.append(hi)
+            out_d.append(lo)
+    return np.asarray(out_s, np.int64), np.asarray(out_d, np.int64)
+
+
 @dataclasses.dataclass
 class BatchPlan:
     """One batch folded to its append-delta form (see ``DeltaTracker``)."""

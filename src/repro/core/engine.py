@@ -55,7 +55,8 @@ from __future__ import annotations
 
 import weakref
 import dataclasses
-from typing import Callable, List, NamedTuple, Optional, Tuple, Union
+from typing import (Callable, List, NamedTuple, Optional, Sequence, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -967,6 +968,125 @@ def _loads_program(k: int) -> Program:
         return run
 
     return _program(("delta_loads", k), build)
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-graph programs (the serving tier's same-bucket executor)
+# ---------------------------------------------------------------------------
+
+def batch_bucket(n: int) -> int:
+    """Power-of-two batch-size bucket (1, 2, 4, 8, ...): a fleet whose
+    size wobbles between dispatch rounds keeps hitting the same compiled
+    batched program instead of tracing one per batch size."""
+    n = max(int(n), 1)
+    return 1 << (n - 1).bit_length()
+
+
+def stack_states(states: Sequence[SpinnerState]) -> SpinnerState:
+    """Stack per-tenant states along a new leading batch dimension."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def stack_binds(binds: Sequence[GraphBind]) -> GraphBind:
+    """Stack same-shaped GraphBinds along a new leading batch dimension.
+
+    Requires identical tree structure and leaf shapes -- i.e. the graphs
+    share a padded (V, E) shape bucket and score-backend signature (see
+    ``batch_signature``).
+    """
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *binds)
+
+
+def index_state(states: SpinnerState, i: int) -> SpinnerState:
+    """Slice element ``i`` back out of a stacked batch of states."""
+    return jax.tree_util.tree_map(lambda x: x[i], states)
+
+
+def batch_signature(cfg, opts: EngineOptions, bind: GraphBind) -> tuple:
+    """Stackability key: two (cfg, opts, bind) triples with equal keys
+    resolve to the same batched program and stack leaf-for-leaf."""
+    shapes = tuple((tuple(x.shape), str(x.dtype))
+                   for x in jax.tree_util.tree_leaves(bind))
+    return (_static_cfg(cfg), opts.backend().signature(),
+            opts.resolved_fused_update() == "on", shapes)
+
+
+def _batched_program(cfg, opts: EngineOptions, nb: int) -> Program:
+    """``run(states, binds) -> states``: ``nb`` independent fused runs as
+    ONE while_loop dispatch over a leading batch dimension.
+
+    Per-element semantics are exactly the unbatched fused program's: the
+    loop continues while ANY element is still active, the shared step is
+    ``vmap`` of the same ``_bind_step`` transition, and an element that
+    has halted (or exhausted ``max_iters``) is frozen by a post-step
+    select -- its state stops changing at precisely the iteration where
+    its own ``while_loop`` would have exited, so every element's final
+    state is bit-identical to running it alone (a batch of 1 is
+    bit-identical to ``_fused_program``).
+    """
+    scores_fn, sig, fused = _update_for(cfg, opts, None)
+    max_iters = cfg.max_iters
+
+    def build():
+        step_fn = _bind_step(cfg, scores_fn, fused)
+
+        def active(s: SpinnerState):
+            return jnp.logical_and(jnp.logical_not(s.halted),
+                                   s.iteration < max_iters)
+
+        v_active = jax.vmap(active)
+        v_step = jax.vmap(step_fn)
+
+        def body(states: SpinnerState, binds: GraphBind) -> SpinnerState:
+            act = v_active(states)
+            new = v_step(states, binds)
+
+            def freeze(n, o):
+                return jnp.where(act.reshape((nb,) + (1,) * (n.ndim - 1)),
+                                 n, o)
+
+            return jax.tree_util.tree_map(freeze, new, states)
+
+        @jax.jit
+        def run(states: SpinnerState, binds: GraphBind) -> SpinnerState:
+            return jax.lax.while_loop(lambda s: jnp.any(v_active(s)),
+                                      lambda s: body(s, binds), states)
+
+        return run
+
+    return _program(("batched", _static_cfg(cfg), sig, fused, nb), build)
+
+
+def run_batched(items: Sequence[Tuple[SpinnerState, GraphBind]], cfg,
+                opts: EngineOptions = _DEFAULT_OPTS,
+                on_program: Optional[Callable] = None
+                ) -> List[SpinnerState]:
+    """Run independent same-shape ``(state, bind)`` fused work items as
+    ONE batched device dispatch; returns each item's final state.
+
+    All items must share one ``batch_signature`` (the serving scheduler
+    groups tenants by it).  The batch size is rounded up to a power-of-
+    two bucket; pad slots replicate item 0 pre-halted, so they are
+    frozen from the very first cond evaluation and cost a vector lane,
+    not a run.  States arrive and leave PADDED to the layout's vertex
+    bucket (``adapt_parts``/``commit_adapt`` on the session handle the
+    pad/slice).
+    """
+    nb_real = len(items)
+    if nb_real == 0:
+        return []
+    nb = batch_bucket(nb_real)
+    states = [s for s, _ in items]
+    binds = [b for _, b in items]
+    if nb > nb_real:
+        pad_state = states[0]._replace(halted=jnp.asarray(True))
+        states = states + [pad_state] * (nb - nb_real)
+        binds = binds + [binds[0]] * (nb - nb_real)
+    prog = _batched_program(cfg, opts, nb)
+    if on_program is not None:
+        on_program(prog)
+    out = prog.run(stack_states(states), stack_binds(binds))
+    return [index_state(out, i) for i in range(nb_real)]
 
 
 # ---------------------------------------------------------------------------

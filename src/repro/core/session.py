@@ -87,6 +87,12 @@ from .spinner import (PartitionResult, SpinnerConfig, prepare_init,
 
 _ENGINES = ("auto", "fused", "sharded", "chunked", "host")
 
+# The one closed-session error, shared by every entry point: the serving
+# tier (repro.serve) retires sessions aggressively and matches on this
+# message, so it must not vary by code path.
+_CLOSED_MSG = ("PartitionSession is closed; open a new session "
+               "(close() released its state and is idempotent)")
+
 
 @dataclasses.dataclass
 class _DeltaFast:
@@ -184,7 +190,15 @@ class PartitionSession:
 
     def close(self) -> None:
         """Release the session's references (programs stay in the global
-        cache for other sessions; graph uploads die with the graph)."""
+        cache for other sessions; graph uploads die with the graph).
+
+        Idempotent: closing an already-closed session is a no-op, so
+        schedulers that retire tenants aggressively (repro.serve) may
+        double-close without tracking state.  Every subsequent entry
+        point raises the same ``RuntimeError`` (one fixed message).
+        """
+        if self._closed:
+            return
         self._programs.clear()
         self._prev = None
         self._last = None
@@ -202,7 +216,7 @@ class PartitionSession:
 
     def _check_open(self) -> None:
         if self._closed:
-            raise RuntimeError("PartitionSession is closed")
+            raise RuntimeError(_CLOSED_MSG)
 
     # -- program / compile tracking ---------------------------------------
 
@@ -226,6 +240,7 @@ class PartitionSession:
                   callback: Optional[Callable[[int, dict], None]] = None,
                   ) -> PartitionResult:
         """Run to a stable state from ``init`` (or a fresh random start)."""
+        self._check_open()
         return self._run(init, record_history, callback)
 
     def adapt(self, new_graph: Optional[Graph] = None,
@@ -537,12 +552,12 @@ class PartitionSession:
                           mesh=mesh, axis=opts.axis, plan=plan,
                           prog_full=prog)
 
-    def _try_fast_adapt(self, e_src, e_dst, prev, frontier,
-                        record_history, callback
-                        ) -> Optional[PartitionResult]:
-        """The O(|delta|) adapt: merge on device, restart warm.  Returns
-        None when ineligible or when the batch overflows the layout's
-        slack (-> the caller rebuilds, bit-identically)."""
+    def _fast_prepare(self, e_src, e_dst, prev, record_history,
+                      callback) -> Optional[tuple]:
+        """The shared first half of the O(|delta|) adapt: merge (pending
+        log + this batch) into the resident device delta and build the
+        warm restart state.  Returns ``(fs, state)`` or None when
+        ineligible / on slack overflow (-> the caller rebuilds)."""
         mode = self._fast_mode(record_history, callback)
         if mode is None:
             return None
@@ -569,24 +584,45 @@ class PartitionSession:
         self._delta_bytes_total += nbytes
         self._fast_adapts += 1
 
-        cfg = self.cfg
-        V = self._graph.num_vertices
-        capacity = cfg.c * tracker.total_weight / cfg.k
-        key, _ = jax.random.split(jax.random.PRNGKey(cfg.seed))
-        lp = _engine._loads_program(cfg.k)
+        key, _ = jax.random.split(jax.random.PRNGKey(self.cfg.seed))
+        lp = _engine._loads_program(self.cfg.k)
         self._track(lp)
         labels_p = _engine.pad_labels(jnp.asarray(prev, jnp.int32),
                                       fs.v_pad)
-        loads = lp.run(labels_p, dd.deg_w)
-        state = _engine.init_state(labels_p, loads, key)
+        loads = lp.run(labels_p, fs.dd.deg_w)
+        return fs, _engine.init_state(labels_p, loads, key)
+
+    def _fast_bind(self, fs: _DeltaFast,
+                   frontier: bool) -> "_engine.GraphBind":
+        """The single-device GraphBind over the fast path's resident
+        merged arrays (row-for-row what ``_single_bind`` builds from a
+        rebuilt host graph)."""
+        cfg, dd = self.cfg, fs.dd
+        capacity = cfg.c * fs.tracker.total_weight / cfg.k
+        exp = dd.coo if dd.mode == "single_pallas" else dd.score[:2]
+        return _engine.GraphBind(
+            deg_w=dd.deg_w, capacity=jnp.float32(capacity),
+            num_real=jnp.int32(self._graph.num_vertices), score=dd.score,
+            frontier=exp if frontier else ())
+
+    def _try_fast_adapt(self, e_src, e_dst, prev, frontier,
+                        record_history, callback
+                        ) -> Optional[PartitionResult]:
+        """The O(|delta|) adapt: merge on device, restart warm.  Returns
+        None when ineligible or when the batch overflows the layout's
+        slack (-> the caller rebuilds, bit-identically)."""
+        out = self._fast_prepare(e_src, e_dst, prev, record_history,
+                                 callback)
+        if out is None:
+            return None
+        fs, state = out
+        cfg = self.cfg
+        V = self._graph.num_vertices
+        capacity = cfg.c * fs.tracker.total_weight / cfg.k
+        dd = fs.dd
         hist = None
         if fs.mode == "single":
-            fused = fs.opts_t.resolved_fused_update() == "on"
-            exp = dd.coo if dd.mode == "single_pallas" else dd.score[:2]
-            bind = _engine.GraphBind(
-                deg_w=dd.deg_w, capacity=jnp.float32(capacity),
-                num_real=jnp.int32(V), score=dd.score,
-                frontier=exp if frontier else ())
+            bind = self._fast_bind(fs, bool(frontier))
             if frontier:
                 prog = _engine._frontier_program(cfg, fs.opts_t)
                 self._track(prog)
@@ -610,6 +646,97 @@ class PartitionSession:
                 state = fs.prog_full.run(state, *args)
             eng = "sharded"
         res = self._finish_state(state, V, eng, hist)
+        self._dirty = None
+        return res
+
+    # -- scheduler-driven batched execution (repro.serve) ------------------
+
+    def batchable(self) -> bool:
+        """True when this session's adapts can ride the engine's batched
+        same-bucket runner (``engine.run_batched``): single-device fused
+        while_loop programs on the XLA score backend.  Sharded, chunked
+        and host sessions -- and Pallas backends, whose kernels are not
+        stacked under ``vmap`` here -- run serially through their own
+        programs instead (the scheduler falls back transparently)."""
+        self._check_open()
+        opts = self.options
+        if opts.mesh is not None or opts.engine not in ("auto", "fused"):
+            return False
+        return getattr(opts.backend(), "name", None) == "xla"
+
+    def batch_key(self) -> tuple:
+        """Cheap same-bucket compatibility key: two sessions whose keys
+        match produce stackable ``adapt_parts`` work items (one compiled
+        batched program, identical traced shapes).  Reads the BASE graph
+        (no pending-delta materialization)."""
+        self._check_open()
+        graph, cfg = self._graph, self.cfg
+        opts_t = _engine._autotuned(graph, cfg, self.options)
+        padded, _ = _engine.padded_view(graph, opts_t)
+        return (_engine._static_cfg(cfg), opts_t.backend().signature(),
+                opts_t.resolved_fused_update() == "on",
+                padded.num_vertices, padded.num_directed_entries)
+
+    def adapt_parts(self, edge_updates: Optional[tuple] = None,
+                    prev: Optional[np.ndarray] = None
+                    ) -> Optional[tuple]:
+        """Build -- without dispatching -- this session's next adapt as a
+        ``(state, bind, cfg, opts)`` work item for the engine's batched
+        same-bucket runner; the serving scheduler stacks items whose
+        ``engine.batch_signature`` matches and runs them as ONE device
+        call.  Returns None when the session is not ``batchable()``.
+
+        Mirrors ``adapt(record_history=False)`` exactly: an eligible
+        ``edge_updates`` delta takes the O(|delta|) merged-arrays fast
+        path (one ``apply_delta`` scatter for the whole -- possibly
+        coalesced -- batch); otherwise the classic rebuild produces the
+        same work item from the rebuilt graph's bind, bit-identically.
+        Feed the runner's output state to ``commit_adapt``; until then
+        the session's previous labels are unchanged.
+        """
+        self._check_open()
+        if not self.batchable():
+            return None
+        prev_arr = self._require_prev(prev)
+        if edge_updates is not None:
+            e_src, e_dst = _delta.check_edge_updates(
+                edge_updates[0], edge_updates[1],
+                self._graph.num_vertices, None)
+            out = self._fast_prepare(e_src, e_dst, prev_arr, False, None)
+            if out is not None:
+                self._staged = None
+                fs, state = out
+                return state, self._fast_bind(fs, False), self.cfg, \
+                    fs.opts_t
+            self._fallback_adapts += 1
+            new_graph = add_edges(self.graph, e_src, e_dst)
+            self._host_rebuilds += 1
+            self._staged = None
+            self.graph = new_graph
+        elif self._staged is not None:
+            staged, self._staged = self._staged, None
+            self.graph = staged
+        graph = self.graph     # materializes any pending delta log
+        from .incremental import extend_labels
+        init = extend_labels(prev_arr, graph.num_vertices)
+        cfg = self.cfg
+        labels, loads, key = prepare_init(graph, cfg, init)
+        opts_t = _engine._autotuned(graph, cfg, self.options)
+        bind, padded = _engine._single_bind(graph, cfg, opts_t)
+        state = _engine.init_state(
+            _engine.pad_labels(labels, padded.num_vertices), loads, key)
+        return state, bind, cfg, opts_t
+
+    def commit_adapt(self, state) -> PartitionResult:
+        """Record a batched runner's output state as this session's new
+        stable result -- the exact bookkeeping ``adapt`` performs after
+        its own dispatch (labels sliced to the real vertex set, previous
+        labels advanced, dirty set cleared).  Materializes the state to
+        host, so calling it after ``engine.run_batched`` blocks on the
+        batch; schedulers run their prefetch policies first."""
+        self._check_open()
+        res = self._finish_state(state, self._graph.num_vertices,
+                                 "fused", None)
         self._dirty = None
         return res
 

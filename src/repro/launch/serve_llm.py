@@ -1,6 +1,11 @@
-"""Batched serving driver: prefill a batch of prompts, then decode.
+"""Batched LLM-inference serving demo: prefill a batch of prompts, decode.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-1.6b \
+This is the MODELS side of the repo (transformer/RWKV archs from
+``repro.configs``) and has nothing to do with graph-partition serving --
+the multi-tenant partition scheduler lives in ``repro.serve``.  Renamed
+from ``repro.launch.serve`` so the two don't collide in docs/imports.
+
+    PYTHONPATH=src python -m repro.launch.serve_llm --arch rwkv6-1.6b \
         --reduced --batch 4 --prompt-len 32 --gen 16
 """
 from __future__ import annotations

@@ -1,0 +1,49 @@
+"""repro.serve: the multi-tenant partition serving tier.
+
+Spinner's § dynamicity positions partitioning as a continuously running
+cloud service.  This package is that service: a
+:class:`~repro.serve.scheduler.PartitionScheduler` holds many
+independent graphs (one :class:`~repro.core.session.PartitionSession`
+each) and drains a stream of ``partition`` / ``edge_updates`` /
+``adapt`` / ``resize`` requests through per-tenant delta coalescing
+(``repro.core.coalesce_updates`` -> one ``apply_delta`` scatter per
+window), same-bucket batched execution (``repro.core.run_batched`` --
+one ``vmap``'d while_loop dispatch for every tenant in a shape bucket,
+bit-identical per tenant to its own unbatched program), and prefetch
+policies that stage uploads and precompile resize targets off the
+critical path.
+
+::
+
+    import numpy as np
+    from repro.core import SpinnerConfig
+    from repro.serve import PartitionScheduler
+
+    sched = PartitionScheduler(max_batch=8)
+    sched.add_tenant("a", graph_a, SpinnerConfig(k=16), partition=True)
+    sched.add_tenant("b", graph_b, SpinnerConfig(k=16), partition=True)
+    sched.submit("a", "edge_updates", edge_updates=(src, dst))
+    sched.submit("a", "edge_updates", edge_updates=(src2, dst2))  # coalesces
+    tk = sched.submit("b", "adapt")
+    sched.drain()                       # one round, one batched dispatch
+    labels = tk.result.labels
+    print(sched.stats()["batch_occupancy"])
+
+Synthetic open-loop traffic (Poisson bursts, power-law tenant sizes)
+lives in :mod:`repro.serve.traffic`; ``benchmarks/bench_serve.py`` drives
+it and reports p50/p99 adapt latency, throughput, coalescing factor and
+batch occupancy.
+
+Not to be confused with ``repro.launch.serve_llm``, the unrelated
+LLM-inference serving demo on the models side of the repo.
+"""
+from .requests import KINDS, Tenant, Ticket
+from .scheduler import (KSweepPrecompile, PartitionScheduler, StagePrefetch,
+                        default_batch_min, default_policies)
+from . import traffic
+
+__all__ = [
+    "PartitionScheduler", "Ticket", "Tenant", "KINDS",
+    "StagePrefetch", "KSweepPrecompile", "default_policies",
+    "default_batch_min", "traffic",
+]
