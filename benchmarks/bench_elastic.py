@@ -2,8 +2,19 @@
 
 Paper numbers (Tuenti, 32 -> 32+n): +1 partition adapts 74% faster than
 scratch and moves < 17% of vertices (vs ~96% from scratch).
+
+``run_fault`` (the ``cluster`` suite, ``BENCH_cluster.json``) measures
+the failure side of the same elasticity story: a supervised run loses a
+worker mid-stream, recovers from the newest snapshot with zero
+intervention, and -- when capacity shrank -- resumes through the
+elastic ``resize``.  Reported per scenario: time-to-recover, snapshots
+written/restored, and post-recovery phi against the pre-fault and
+uninterrupted-baseline values.
 """
 from __future__ import annotations
+
+import tempfile
+import time
 
 from repro.core import SpinnerConfig, metrics, partition, resize
 
@@ -49,6 +60,77 @@ def run(quick: bool = False) -> list:
             "phi": metrics.phi(g, adapted.labels),
         })
     emit(rows, "bench_elastic")
+    return rows
+
+
+def run_fault(quick: bool = False) -> list:
+    """Fault-injection mode: supervised kill -> snapshot recovery."""
+    from repro.cluster import (ClusterSupervisorConfig, PartitionSupervisor,
+                               kill_worker_at)
+    from repro.core.session import PartitionSession
+
+    g = get_graph("smallworld-100k")
+    max_iters = 60 if quick else 120
+    scenarios = [
+        # (name, k0, ndev_before, ndev_after)  -- None = same capacity
+        ("same_capacity", 32, 1, None),
+        ("shrink_8_to_4", 32, 8, 4),
+    ]
+    work = [("partition", {})] + [("adapt", {})] * 2
+    rows = []
+    for name, k0, nd0, nd1 in scenarios:
+        cfg = SpinnerConfig(k=k0, seed=0, max_iters=max_iters)
+
+        def factory(ndev, cfg=cfg):
+            return g, cfg, None     # 1 physical device: ndev is logical
+
+        snap = tempfile.mkdtemp(prefix=f"bench_cluster_{name}_")
+        sup = PartitionSupervisor(
+            ClusterSupervisorConfig(snapshot_dir=snap), factory)
+        t0 = time.perf_counter()
+        session, results = sup.run(
+            work, ndev=nd0,
+            faults=[kill_worker_at(2, surviving_ndev=nd1)])
+        wall = time.perf_counter() - t0
+        st = sup.stats()
+        phi_pre = metrics.phi(g, results[0].labels)
+        phi_post = metrics.phi(g, session.labels)
+        k_final = st["k"]
+
+        # uninterrupted baseline at the post-recovery k
+        base = PartitionSession(
+            g, SpinnerConfig(k=k_final, seed=0, max_iters=max_iters))
+        phi_base = metrics.phi(
+            g, base.partition(record_history=False).labels)
+        base.close(), session.close()
+
+        recover_s = sum(st["recover_seconds"])
+        rows.append({
+            "name": f"cluster/{name}",
+            "us_per_call": recover_s * 1e6,    # time-to-recover
+            "derived": f"recover_s={recover_s:.3f};"
+                       f"snapshots_written={st['snapshots_written']};"
+                       f"snapshots_restored={st['snapshots_restored']};"
+                       f"phi_pre_fault={phi_pre:.3f};"
+                       f"phi_post_recovery={phi_post:.3f};"
+                       f"phi_uninterrupted={phi_base:.3f};"
+                       f"k_final={k_final};resized={st['resized_on_restore']}",
+            "time_to_recover_s": recover_s,
+            "wall_s": wall,
+            "restarts": st["restarts"],
+            "snapshots_written": st["snapshots_written"],
+            "snapshots_restored": st["snapshots_restored"],
+            "phi_pre_fault": phi_pre,
+            "phi_post_recovery": phi_post,
+            "phi_uninterrupted": phi_base,
+            "phi_vs_baseline": phi_post / max(phi_base, 1e-12),
+            "k_final": k_final,
+            "ndev_before": nd0,
+            "ndev_after": nd1 if nd1 is not None else nd0,
+            "resized": st["resized_on_restore"],
+        })
+        assert rows[-1]["phi_vs_baseline"] >= 0.98, rows[-1]
+    emit(rows, "bench_cluster")
     return rows
 
 

@@ -15,7 +15,8 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--suite", default=None,
                     help="quality|convergence|scalability|dynamic|elastic|"
-                         "apps|placement|kernel|engine|serve|roofline")
+                         "apps|placement|kernel|engine|serve|cluster|"
+                         "roofline")
     args = ap.parse_args()
 
     from . import (bench_apps, bench_convergence, bench_dynamic,
@@ -33,6 +34,7 @@ def main() -> None:
         "kernel": bench_kernel.run,            # Pallas kernel
         "engine": bench_engine.run,            # dispatch/overlap/staged
         "serve": bench_serve.run,              # multi-tenant scheduler
+        "cluster": bench_elastic.run_fault,    # fault-injected recovery
         "roofline": roofline.run,              # deliverable (g)
     }
     selected = ([args.suite] if args.suite else list(suites))
@@ -42,7 +44,7 @@ def main() -> None:
     for name in selected:
         try:
             rows = suites[name](quick=args.quick)
-            if name in ("dynamic", "serve"):
+            if name in ("dynamic", "serve", "cluster"):
                 # perf-trajectory artifacts (delta adapt, serving tier):
                 # machine-readable, at the repo root
                 import json

@@ -28,7 +28,7 @@ __version__ = "0.1.0"
 
 
 def __getattr__(name):
-    if name in ("serve", "core"):
+    if name in ("serve", "core", "cluster"):
         import importlib
         return importlib.import_module(f".{name}", __name__)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

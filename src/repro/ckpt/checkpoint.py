@@ -57,10 +57,25 @@ def save(directory: str, step: int, tree: PyTree) -> str:
 
 
 def latest_step(directory: str) -> Optional[int]:
+    """Newest complete step, garbage-collecting crashed half-saves.
+
+    A crash between :func:`save`'s tmp-dir write and its atomic rename
+    leaves a ``step_*.tmp`` directory behind.  Such a directory is never
+    a valid checkpoint (the rename IS the commit), so besides skipping
+    tmp dirs this sweeps them out -- the next writer would clobber its
+    own step's tmp anyway, but a crashed save for a step that is never
+    re-attempted would otherwise linger forever.
+    """
     if not os.path.isdir(directory):
         return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_") and not d.endswith(".tmp")]
+    steps = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_"):
+            continue
+        if d.endswith(".tmp"):
+            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+            continue
+        steps.append(int(d.split("_")[1]))
     return max(steps) if steps else None
 
 

@@ -1,0 +1,57 @@
+"""repro.cluster: the multi-process fault-tolerant partition runtime.
+
+Spinner's § dynamicity claim is partitioning on elastic, UNRELIABLE
+cloud capacity.  This package makes the repo's mesh real processes and
+makes losing one survivable:
+
+* :mod:`~repro.cluster.bootstrap` -- ``jax.distributed`` bring-up
+  (coordinator + N workers, subprocess-spawnable for tests/CI), the
+  local / process-spanning meshes, the coordination-service KV +
+  barrier surface, and per-host edge-shard IO (``write_edge_shards`` /
+  ``load_edge_shard`` feeding ``shard_graph(..., local_only=pid)``)
+  so no process materializes the full graph;
+* :mod:`~repro.cluster.snapshot` -- ``PartitionSession`` state through
+  ``repro.ckpt`` (atomic; format documented in the module docstring),
+  restorable onto a DIFFERENT device count by replaying the elastic
+  ``resize`` re-shard;
+* :mod:`~repro.cluster.supervisor` -- heartbeat/deadline detection,
+  injectable fault hooks (worker kill, checkpoint corruption, slow
+  worker), and the restart policy: re-bootstrap on the surviving
+  capacity, resume from the newest COMPLETE snapshot;
+* :mod:`~repro.cluster.worker` -- the spawnable worker loop (per-host
+  shards, KV-store label exchange on CPU, snapshot cadence);
+* :mod:`~repro.cluster.deploy` -- the serving-tier deployment mode:
+  ``PartitionScheduler(deployment=ClusterDeployment(...))`` pins
+  tenants to the cluster mesh and recovers failed dispatches from
+  snapshots.
+
+Same-capacity recovery is bit-identical to an uninterrupted run
+(sessions are deterministic in (graph, cfg, prev labels)); shrunk
+capacity resumes through ``resize`` within quality tolerance -- both
+asserted in ``tests/test_cluster.py`` and measured by
+``benchmarks/bench_elastic.py --fault`` into ``BENCH_cluster.json``.
+"""
+from .bootstrap import (ClusterConfig, ClusterHandle, PeerLost, bootstrap,
+                        free_port, load_edge_shard, load_local_shard,
+                        read_manifest, spawn_local_worker, worker_env,
+                        write_edge_shards)
+from .deploy import ClusterDeployment
+from .snapshot import (RestoreInfo, load_snapshot, newest_complete,
+                       restore_session, save_snapshot, snapshot_steps,
+                       snapshot_tree)
+from .supervisor import (ClusterSupervisorConfig, PartitionSupervisor,
+                         ProcessClusterConfig, ProcessClusterSupervisor,
+                         WorkerLost, corrupt_newest_snapshot_at,
+                         kill_worker_at, slow_worker_at)
+
+__all__ = [
+    "ClusterConfig", "ClusterHandle", "PeerLost", "bootstrap",
+    "free_port", "load_edge_shard", "load_local_shard", "read_manifest",
+    "spawn_local_worker", "worker_env", "write_edge_shards",
+    "ClusterDeployment",
+    "RestoreInfo", "load_snapshot", "newest_complete", "restore_session",
+    "save_snapshot", "snapshot_steps", "snapshot_tree",
+    "ClusterSupervisorConfig", "PartitionSupervisor",
+    "ProcessClusterConfig", "ProcessClusterSupervisor", "WorkerLost",
+    "corrupt_newest_snapshot_at", "kill_worker_at", "slow_worker_at",
+]

@@ -1,0 +1,251 @@
+"""The cluster worker: per-host LPA supersteps over the coordination service.
+
+Each process owns the vertex ranges of the edge-shard hosts mapped to
+it (``host % world == pid`` -- so a shrunk generation absorbs the dead
+workers' shards) and loads ONLY those hosts' edge files
+(:func:`bootstrap.load_edge_shard`).  One superstep per iteration:
+
+1. score my vertices from my local edges against the current global
+   labels (a host scatter-add -- O(E_local));
+2. ``propose`` / ``finish`` from ``engine.make_update_parts`` -- the
+   SAME Eq. 7-8 / 11-12 math every in-process engine runs -- with the
+   global reduction ``reduce_`` bound to :meth:`ClusterHandle
+   .allreduce_sum` (the (k,) migration-mass aggregator, the load delta
+   and the halting scalars ride the distributed KV store; on a 1-process
+   generation it degenerates to identity);
+3. exchange label slices per owned host range through the KV store;
+4. the Section 3.3 halting update, replicated on every host from the
+   globally reduced score.
+
+All randomness is drawn from ``fold_in(PRNGKey(seed), iteration)``
+over the FULL vertex set on every process, so the trajectory is a
+deterministic function of (graph, config, init labels) and INDEPENDENT
+of the world size: a generation that resumes from a snapshot with
+fewer processes walks the exact iterations the dead generation would
+have -- which is what makes same-capacity recovery bit-identical and
+lets tests compare any world size against a 1-process reference.
+
+Process 0 snapshots ``(labels, loads, best_score, stall, next_t)``
+through ``repro.ckpt`` every ``snapshot_every`` supersteps and writes
+``result.json`` + ``labels.npy`` at convergence.  Heartbeats are file
+mtimes under ``<workdir>/hb/`` (a dead process can't answer RPCs, but
+its stale file still accuses it); fault injection is declarative in
+``job.json`` (``{"fault": {"gen": 0, "pid": 1, "iteration": 6}}`` hard-
+exits that process at that superstep, simulating a worker loss).
+
+On the CPU backend the per-step compute runs on the process-local
+device (cross-process XLA collectives are unavailable there -- see
+``bootstrap``); on accelerator backends the same job can instead run
+the engine's ``shard_map`` path over ``ClusterHandle.global_mesh()``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List, Optional
+
+import numpy as np
+
+# import names, not the submodule: the package re-exports a function
+# called ``bootstrap`` that shadows the module attribute
+from . import snapshot as _snapshot
+from .bootstrap import (ClusterConfig, PeerLost, bootstrap, load_edge_shard,
+                        read_manifest)
+from repro.ckpt import checkpoint
+
+
+def _beat(workdir: str, gen: int, pid: int) -> None:
+    path = os.path.join(workdir, "hb", f"g{gen}_p{pid}")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(str(time.time()))
+
+
+def _host_range(h: int, v_per_host: int, V: int) -> tuple:
+    return h * v_per_host, min((h + 1) * v_per_host, V)
+
+
+def run_worker(workdir: str, gen: int, world: int, pid: int,
+               port: int) -> int:
+    with open(os.path.join(workdir, "job.json")) as f:
+        job = json.load(f)
+    _beat(workdir, gen, pid)
+
+    import jax
+    import jax.numpy as jnp
+    from repro.core.engine import make_update_parts
+
+    handle = bootstrap(ClusterConfig(
+        port=port, num_processes=world, process_id=pid,
+        rpc_timeout=float(job.get("rpc_timeout", 60.0))))
+
+    shard_dir = job["shard_dir"]
+    snap_dir = job.get("snapshot_dir",
+                       os.path.join(workdir, "snaps"))
+    manifest = read_manifest(shard_dir)
+    H, V = manifest["num_hosts"], manifest["num_vertices"]
+    v_per_host = manifest["v_per_host"]
+    owned = [h for h in range(H) if h % world == pid]
+    views = [load_edge_shard(shard_dir, h)[0] for h in owned]
+    src = np.concatenate([v.src for v in views]) if views else \
+        np.zeros(0, np.int32)
+    dst = np.concatenate([v.dst for v in views]) if views else \
+        np.zeros(0, np.int32)
+    w = np.concatenate([v.weight for v in views]) if views else \
+        np.zeros(0, np.float32)
+    deg_w = np.load(os.path.join(shard_dir, "deg_w.npy"))
+    own_mask = np.zeros(V, bool)
+    for h in owned:
+        lo, hi = _host_range(h, v_per_host, V)
+        own_mask[lo:hi] = True
+
+    k = int(job["k"])
+    cfg = {"c": float(job.get("c", 1.05)),
+           "eps": float(job.get("eps", 1e-3)),
+           "halt_window": int(job.get("halt_window", 5)),
+           "max_iters": int(job.get("max_iters", 120)),
+           "seed": int(job.get("seed", 0)),
+           "tie_noise": float(job.get("tie_noise", 1e-7)),
+           "current_bonus": float(job.get("current_bonus", 1e-6)),
+           "migration_weighting": job.get("migration_weighting", "edges")}
+    snapshot_every = int(job.get("snapshot_every", 5))
+    fault = job.get("fault")
+    C = cfg["c"] * manifest["total_weight"] / k
+
+    propose, finish = make_update_parts(
+        k, degree_weighted=cfg["migration_weighting"] == "edges",
+        current_bonus=cfg["current_bonus"])
+    key = jax.random.PRNGKey(cfg["seed"])
+    key, k_init = jax.random.split(key)
+
+    # resume from the newest complete snapshot, else deterministic init
+    try:
+        step0, tree = _snapshot.newest_complete(snap_dir)
+        labels = np.asarray(tree["labels"], np.int32)
+        loads = np.asarray(tree["loads"], np.float32)
+        best_score = float(tree["best_score"])
+        stall = int(tree["stall"])
+        t0 = int(tree["next_t"])
+    except FileNotFoundError:
+        labels = np.asarray(jax.random.randint(
+            k_init, (V,), 0, k), np.int32)
+        loads = np.zeros(k, np.float32)
+        np.add.at(loads, labels, deg_w.astype(np.float32))
+        best_score, stall, t0 = float("-inf"), 0, 0
+
+    jr = jax.random
+    deg_j = jnp.asarray(deg_w.astype(np.float32))
+    valid = jnp.asarray(own_mask)
+    halted = False
+    t = t0
+    for t in range(t0, cfg["max_iters"]):
+        _beat(workdir, gen, pid)
+        if (fault and int(fault.get("gen", 0)) == gen
+                and int(fault.get("pid", -1)) == pid
+                and int(fault.get("iteration", -1)) == t):
+            os._exit(int(fault.get("exit_code", 13)))
+
+        it_key = jr.fold_in(key, t)
+        noise = jr.uniform(jr.fold_in(it_key, 0), (V, k), jnp.float32,
+                           0.0, cfg["tie_noise"])
+        u = jr.uniform(jr.fold_in(it_key, 1), (V,), jnp.float32)
+
+        scores = np.zeros((V, k), np.float32)
+        if src.size:
+            np.add.at(scores, (src, labels[dst]), w)
+
+        seq = [0]
+
+        def reduce_(x):
+            if world == 1:
+                return x
+            seq[0] += 1
+            return jnp.asarray(handle.allreduce_sum(
+                f"g{gen}/t{t}/r{seq[0]}", np.asarray(x)))
+
+        best, tot_best, tot_cur, m_partial = propose(
+            jnp.asarray(scores), jnp.asarray(labels), deg_j,
+            jnp.asarray(loads), noise, valid, C)
+        new_labels, new_loads, score_g, _n_mig, _mass = finish(
+            best, tot_best, tot_cur, m_partial, jnp.asarray(labels),
+            deg_j, jnp.asarray(loads), u, valid, reduce_, C)
+
+        new_labels = np.asarray(new_labels, np.int32)
+        if world > 1:
+            for h in owned:
+                lo, hi = _host_range(h, v_per_host, V)
+                handle.kv_put_array(f"g{gen}/t{t}/lab/{h}",
+                                    new_labels[lo:hi])
+            merged = labels.copy()
+            for h in range(H):
+                lo, hi = _host_range(h, v_per_host, V)
+                merged[lo:hi] = handle.kv_get_array(
+                    f"g{gen}/t{t}/lab/{h}", np.int32, (hi - lo,))
+            labels = merged
+        else:
+            labels = new_labels
+        loads = np.asarray(new_loads, np.float32)
+        score = float(score_g)
+
+        # Section 3.3 halting, replicated on every host (same float path
+        # as engine._halting_update: the first iteration's -inf + inf
+        # comparison is False and counts toward the stall window)
+        tol = cfg["eps"] * max(1.0, abs(best_score))
+        improved = score > best_score + tol
+        best_score = max(best_score, score)
+        stall = 0 if improved else stall + 1
+        halted = stall >= cfg["halt_window"]
+
+        if pid == 0 and ((t + 1) % snapshot_every == 0 or halted):
+            checkpoint.save(snap_dir, t + 1, {
+                "labels": labels, "loads": loads,
+                "best_score": np.float64(best_score),
+                "stall": np.int64(stall),
+                "next_t": np.int64(t + 1),
+                "k": np.int64(k), "ndev": np.int64(world),
+                "num_vertices": np.int64(V)})
+            checkpoint.gc_old(snap_dir, keep=3)
+        if halted:
+            break
+
+    # distributed phi: locally-internal edge weight / total, via one
+    # final allreduce (each directed edge counted on its owner)
+    part = np.asarray([float(w[labels[src] == labels[dst]].sum())
+                       if src.size else 0.0,
+                       float(w.sum())], np.float64)
+    if world > 1:
+        part = handle.allreduce_sum(f"g{gen}/final/phi", part)
+    phi = part[0] / max(part[1], 1e-12)
+
+    if pid == 0:
+        np.save(os.path.join(workdir, "labels.npy"), labels)
+        with open(os.path.join(workdir, "result.json"), "w") as f:
+            json.dump({"iterations": t + 1, "halted": bool(halted),
+                       "phi": float(phi), "gen": gen, "world": world,
+                       "score": best_score}, f)
+    if world > 1:
+        handle.barrier(f"g{gen}/done")
+    handle.shutdown()
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--workdir", required=True)
+    ap.add_argument("--gen", type=int, default=0)
+    ap.add_argument("--world", type=int, required=True)
+    ap.add_argument("--pid", type=int, required=True)
+    ap.add_argument("--port", type=int, required=True)
+    a = ap.parse_args(argv)
+    try:
+        return run_worker(a.workdir, a.gen, a.world, a.pid, a.port)
+    except PeerLost as e:
+        print(f"peer lost: {e}", file=sys.stderr)
+        return 3
+
+
+if __name__ == "__main__":
+    sys.exit(main())

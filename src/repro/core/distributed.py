@@ -76,9 +76,32 @@ class ShardedGraph:
     interior_counts: Optional[np.ndarray] = None  # (ndev,) real interior
     frontier_counts: Optional[np.ndarray] = None  # (ndev,) real frontier
     edge_perm: Optional[np.ndarray] = None  # (ndev, E_shard) orig idx | -1
+    local_only: Optional[int] = None  # set: arrays hold ONE host's row
 
 
-def shard_graph(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
+@dataclasses.dataclass(frozen=True)
+class EdgeShardView:
+    """One host's edge file as ``shard_graph(local_only=...)`` input.
+
+    The multi-process bootstrap (``repro.cluster.bootstrap``) splits a
+    graph's directed-edge list by owning host and writes one file per
+    host; a worker process loads ONLY its file, so it never materializes
+    the full O(E) edge set.  ``deg_w`` is the full (V,) weighted-degree
+    vector -- O(V) vertex state, shipped in the shard manifest alongside
+    the globally agreed segment widths so all hosts build
+    layout-compatible rows.
+    """
+    num_vertices: int
+    src: np.ndarray
+    dst: np.ndarray
+    weight: np.ndarray
+    deg_w: np.ndarray
+
+
+def shard_graph(graph, ndev: int, pad: bool = False, *,
+                local_only: Optional[int] = None,
+                seg_widths: Optional[Tuple[int, int]] = None
+                ) -> ShardedGraph:
     """Range-partition vertices and edges into per-device shards.
 
     Pure layout: contiguous blocks of ceil(V/ndev) vertex ids per
@@ -100,6 +123,16 @@ def shard_graph(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
     own vertex 0 (global id ``p * v_per_dev``) so every dst view --
     global ids, the halo remap, the split local view -- stays in
     bounds; weight 0 makes all pads exact no-ops.
+
+    ``local_only=p`` is the per-host loading path: ``graph`` holds ONLY
+    host ``p``'s edges (a :class:`Graph` or an :class:`EdgeShardView`
+    from one edge file) and the result carries a single row -- row 0 is
+    device ``p``'s shard, byte-identical to row ``p`` of the full-graph
+    layout when ``seg_widths`` passes the globally agreed raw
+    ``(max interior, max frontier)`` counts (from the shard manifest;
+    the bucketing rules above are applied to them identically).  Without
+    ``seg_widths`` the widths come from the local counts alone --
+    standalone mode, fine when rows are never stacked across hosts.
     """
     from .graph import shape_bucket
     v_per_dev = -(-graph.num_vertices // ndev)
@@ -114,11 +147,23 @@ def shard_graph(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
     frontier_all = (graph.dst // v_per_dev) != owner_all
     oidx_all = np.arange(graph.src.shape[0], dtype=np.int32)
     owner, frontier = owner_all[real], frontier_all[real]
+    if local_only is not None:
+        if not 0 <= local_only < ndev:
+            raise ValueError(f"local_only={local_only} outside [0, {ndev})")
+        if owner.size and not (owner == local_only).all():
+            raise ValueError(
+                f"local_only={local_only}: edge list contains edges owned "
+                f"by hosts {sorted(set(np.unique(owner)) - {local_only})}")
     n_int = np.bincount(owner[~frontier], minlength=ndev).astype(np.int64)
     n_fro = np.bincount(owner[frontier], minlength=ndev).astype(np.int64)
     int_counts, fro_counts = n_int, n_fro
-    e_int = int(n_int.max()) if n_int.size else 0
-    e_fro = int(n_fro.max()) if n_fro.size else 0
+    if local_only is None:
+        e_int = int(n_int.max()) if n_int.size else 0
+        e_fro = int(n_fro.max()) if n_fro.size else 0
+    elif seg_widths is not None:
+        e_int, e_fro = int(seg_widths[0]), int(seg_widths[1])
+    else:
+        e_int, e_fro = int(n_int[local_only]), int(n_fro[local_only])
     if e_int + e_fro == 0:
         e_int = 1                       # keep one (zeroed) slot per shard
     if pad:
@@ -126,11 +171,13 @@ def shard_graph(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
         if e_fro:                       # 1-device shards stay frontier-free
             e_fro = max(128, 1 << (e_fro - 1).bit_length())
     e_shard = e_int + e_fro
-    src_l = np.zeros((ndev, e_shard), np.int32)
-    w = np.zeros((ndev, e_shard), np.float32)
-    perm = np.full((ndev, e_shard), -1, np.int32)
+    devs = range(ndev) if local_only is None else (local_only,)
+    rows = len(devs) if local_only is None else 1
+    src_l = np.zeros((rows, e_shard), np.int32)
+    w = np.zeros((rows, e_shard), np.float32)
+    perm = np.full((rows, e_shard), -1, np.int32)
     # pad slots read the owner's vertex 0 under every dst layout
-    dst = np.tile((np.arange(ndev, dtype=np.int32) * v_per_dev)[:, None],
+    dst = np.tile((np.asarray(list(devs), np.int32) * v_per_dev)[:, None],
                   (1, e_shard))
     # stable sort by (owner, frontier flag): per device, the interior run
     # comes first, each run in CSR order
@@ -141,22 +188,33 @@ def shard_graph(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:
     oidx = oidx_all[real][order]
     starts = np.zeros(2 * ndev + 1, np.int64)
     np.cumsum(np.stack([n_int, n_fro], axis=1).reshape(-1), out=starts[1:])
-    for p in range(ndev):
+    for row, p in enumerate(devs):
         for lo, hi, col in ((starts[2 * p], starts[2 * p + 1], 0),
                             (starts[2 * p + 1], starts[2 * p + 2], e_int)):
             n = hi - lo
-            src_l[p, col: col + n] = s[lo:hi] - p * v_per_dev
-            dst[p, col: col + n] = d[lo:hi]
-            w[p, col: col + n] = ww[lo:hi]
-            perm[p, col: col + n] = oidx[lo:hi]
-    deg = np.zeros(v_pad, np.float32)
-    deg[: graph.num_vertices] = graph.deg_w
+            src_l[row, col: col + n] = s[lo:hi] - p * v_per_dev
+            dst[row, col: col + n] = d[lo:hi]
+            w[row, col: col + n] = ww[lo:hi]
+            perm[row, col: col + n] = oidx[lo:hi]
+    if local_only is None:
+        deg = np.zeros(v_pad, np.float32)
+        deg[: graph.num_vertices] = graph.deg_w
+        deg = deg.reshape(ndev, v_per_dev)
+    else:
+        # deg_w must be the full (V,) vector; slice this host's range
+        p = local_only
+        deg = np.zeros((1, v_per_dev), np.float32)
+        lo, hi = p * v_per_dev, min((p + 1) * v_per_dev, graph.num_vertices)
+        deg[0, : hi - lo] = np.asarray(graph.deg_w)[lo:hi]
+        int_counts = n_int[[p]]
+        fro_counts = n_fro[[p]]
     return ShardedGraph(num_vertices=v_pad,
                         num_real_vertices=graph.num_vertices, ndev=ndev,
                         v_per_dev=v_per_dev, src_local=src_l, dst=dst,
-                        weight=w, deg_w=deg.reshape(ndev, v_per_dev),
+                        weight=w, deg_w=deg,
                         e_interior=e_int, interior_counts=int_counts,
-                        frontier_counts=fro_counts, edge_perm=perm)
+                        frontier_counts=fro_counts, edge_perm=perm,
+                        local_only=local_only)
 
 
 def shard_layout(graph: Graph, ndev: int, pad: bool = False) -> ShardedGraph:

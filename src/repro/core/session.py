@@ -145,6 +145,7 @@ class PartitionSession:
         self._staged: Optional[Graph] = None
         self._programs: dict = {}       # id(program) -> (program, base)
         self._runs = 0
+        self._delta_seq = 0             # delta batches accepted, ever
         self._closed = False
 
     # -- the logical graph (base + pending delta log) ----------------------
@@ -279,6 +280,7 @@ class PartitionSession:
             e_src, e_dst = edge_updates
             e_src, e_dst = _delta.check_edge_updates(
                 e_src, e_dst, self._graph.num_vertices, num_vertices)
+            self._delta_seq += 1
             grows = (num_vertices is not None
                      and num_vertices > self._graph.num_vertices)
             if not grows:
@@ -459,6 +461,7 @@ class PartitionSession:
         self._staged = None
         e_src, e_dst = _delta.check_edge_updates(
             edge_src, edge_dst, self._graph.num_vertices, num_vertices)
+        self._delta_seq += 1
         if num_vertices is not None \
                 and num_vertices > self._graph.num_vertices:
             self.graph = add_edges(self.graph, e_src, e_dst,
@@ -702,6 +705,7 @@ class PartitionSession:
             e_src, e_dst = _delta.check_edge_updates(
                 edge_updates[0], edge_updates[1],
                 self._graph.num_vertices, None)
+            self._delta_seq += 1
             out = self._fast_prepare(e_src, e_dst, prev_arr, False, None)
             if out is not None:
                 self._staged = None
@@ -803,6 +807,78 @@ class PartitionSession:
         """The previous stable assignment (None before the first run)."""
         return self._prev
 
+    @property
+    def delta_watermark(self) -> int:
+        """Monotone count of delta batches this session has accepted
+        (``update()`` / ``adapt(edge_updates=)`` / ``adapt_parts``),
+        whether merged on device, pending, or already materialized.
+        Snapshots record it so a restore knows how many batches the
+        saved labels reflect (``repro.cluster.snapshot``)."""
+        return self._delta_seq
+
+    def export_state(self) -> dict:
+        """The session's partition state as a flat pytree of host arrays
+        -- the checkpointable surface ``repro.cluster.snapshot`` saves
+        through ``repro.ckpt``.
+
+        O(V + k) only: the previous stable ``labels``, the ``loads``
+        they imply, the rng key every run derives from
+        (``jax.random.PRNGKey(cfg.seed)`` -- recorded for auditability;
+        runs are deterministic functions of (graph, cfg, prev labels),
+        which is what makes a restored session's continuation
+        bit-identical), and the run / delta-watermark counters.  The
+        graph itself is NOT included; it is rebuilt from the durable
+        inputs (edge shards / base graph + replayed deltas) on restore.
+        """
+        self._check_open()
+        if self._prev is None:
+            raise ValueError("no stable labels to snapshot; run "
+                             "partition() first or import_state()")
+        if self._last is not None:
+            loads = np.asarray(self._last.loads, np.float32)
+        else:                  # re-derive exactly as prepare_init does
+            loads = np.zeros(self.cfg.k, np.float32)
+            np.add.at(loads, self._prev,
+                      np.asarray(self._graph.deg_w, np.float32))
+        return {
+            "labels": np.asarray(self._prev, np.int32),
+            "loads": loads,
+            "rng_key": np.asarray(jax.random.PRNGKey(self.cfg.seed)),
+            "runs": np.int64(self._runs),
+            "delta_watermark": np.int64(self._delta_seq),
+            "k": np.int64(self.cfg.k),
+            "num_vertices": np.int64(self._graph.num_vertices),
+        }
+
+    def import_state(self, state: dict) -> "PartitionSession":
+        """Restore a snapshot produced by :meth:`export_state` into this
+        (freshly opened) session: the next ``adapt()``/``resize()``
+        continues from the restored labels exactly as if this session
+        had computed them.  The session's graph must already be at the
+        snapshot's logical state (same vertices, deltas up to the
+        watermark applied); labels for a since-grown vertex set are
+        extended by the usual -1 -> least-loaded rule on the next run.
+        Chainable."""
+        self._check_open()
+        labels = np.asarray(state["labels"], np.int32)
+        if labels.shape[0] > self._graph.num_vertices:
+            raise ValueError(
+                f"snapshot has {labels.shape[0]} labels but the session "
+                f"graph has {self._graph.num_vertices} vertices; rebuild "
+                f"the graph at (or past) the snapshot watermark first")
+        if int(state["k"]) != self.cfg.k:
+            raise ValueError(
+                f"snapshot was taken at k={int(state['k'])} but the "
+                f"session is configured with k={self.cfg.k}; open with "
+                f"the saved k and resize() afterwards")
+        self._prev = labels
+        self._last = None
+        self._runs = int(state["runs"])
+        self._delta_seq = int(state["delta_watermark"])
+        self._staged = None
+        self._dirty = None
+        return self
+
     def stats(self) -> dict:
         """Session state: shape buckets, compile/run counters, padded
         layout, the delta fast-path counters, and (on a mesh) the
@@ -829,6 +905,7 @@ class PartitionSession:
             "staged": (self._staged.num_vertices
                        if self._staged is not None else None),
             "delta": {
+                "watermark": self._delta_seq,
                 "pending_batches": len(self._pending),
                 "merged_batches": fs.merged if fs is not None else 0,
                 "fast_adapts": self._fast_adapts,

@@ -27,7 +27,8 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 
 def make_partition_mesh(num_devices: int | None = None,
-                        axis: str = "data") -> jax.sharding.Mesh:
+                        axis: str = "data",
+                        devices=None) -> jax.sharding.Mesh:
     """1-D vertex-sharding mesh for the sharded LPA engine.
 
     ``partition(g, cfg, engine="sharded", mesh=make_partition_mesh())``
@@ -40,15 +41,22 @@ def make_partition_mesh(num_devices: int | None = None,
     sharded.  Run under
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to exercise
     multi-device semantics on CPU.
+
+    ``devices`` pins an explicit device list instead of the process-local
+    default -- the process-spanning case: after
+    ``jax.distributed.initialize`` a coordinator builds the global mesh
+    with ``make_partition_mesh(devices=jax.devices())`` while each worker
+    keeps a local one from ``jax.local_devices()``
+    (see ``repro.cluster.bootstrap``).
     """
     import numpy as np
-    devices = jax.devices()
-    n = len(devices) if num_devices is None else num_devices
-    if n > len(devices):    # not an assert: must survive python -O
+    pool = list(devices) if devices is not None else jax.devices()
+    n = len(pool) if num_devices is None else num_devices
+    if n > len(pool):    # not an assert: must survive python -O
         raise ValueError(
-            f"need {n} devices, have {len(devices)}; run under "
+            f"need {n} devices, have {len(pool)}; run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
-    return jax.sharding.Mesh(np.asarray(devices[:n]), (axis,))
+    return jax.sharding.Mesh(np.asarray(pool[:n]), (axis,))
 
 
 def make_host_mesh(model_axis: int = 1) -> jax.sharding.Mesh:

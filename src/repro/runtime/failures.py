@@ -72,3 +72,19 @@ class TrainSupervisor:
                 checkpoint.gc_old(self.cfg.ckpt_dir, keep=self.cfg.keep)
         checkpoint.save(self.cfg.ckpt_dir, step, self.state)
         return self.state
+
+    def stats(self) -> dict:
+        """Straggler-watchdog report (consumed by the cluster supervisor).
+
+        ``flagged_steps`` is the list of ``(step, dt, median)`` walltime
+        outliers (> ``straggler_factor`` x running median); previously
+        accumulated but never surfaced.
+        """
+        times = sorted(self.step_times)
+        return {
+            "steps": len(self.step_times),
+            "start_step": self.start_step,
+            "median_step_time": times[len(times) // 2] if times else None,
+            "straggler_factor": self.cfg.straggler_factor,
+            "flagged_steps": list(self.flagged_steps),
+        }

@@ -211,10 +211,16 @@ class PartitionScheduler:
                  batch_min: Optional[int] = None,
                  preempt_staleness: Optional[float] = None,
                  policies: Optional[Sequence] = None,
+                 deployment=None,
                  clock: Callable[[], float] = time.monotonic) -> None:
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.max_batch = max_batch
+        # cluster deployment mode (repro.cluster.deploy.ClusterDeployment):
+        # tenants pinned to the deployment mesh, snapshotted on commit,
+        # recovered + retried once on dispatch failure
+        self.deployment = deployment
+        self._recoveries = 0
         self.batch_min = max(1, default_batch_min() if batch_min is None
                              else batch_min)
         self.preempt_staleness = preempt_staleness
@@ -251,6 +257,8 @@ class PartitionScheduler:
         first request must be ``partition``."""
         if name in self.tenants:
             raise ValueError(f"tenant {name!r} already registered")
+        if self.deployment is not None:
+            options = self.deployment.admit(name, options)
         t = Tenant(name=name,
                    session=PartitionSession(graph, cfg, options),
                    priority=float(priority))
@@ -389,13 +397,13 @@ class PartitionScheduler:
                 completed += self._finish(t, window,
                                           t.session.commit_adapt(out))
             except Exception as e:
-                completed += self._fail(t, window, e)
+                completed += self._resolve_failure(t, window, e)
         for t, window in serial:
             try:
                 completed += self._finish(t, window,
                                           self._dispatch_serial(t, window))
             except Exception as e:
-                completed += self._fail(t, window, e)
+                completed += self._resolve_failure(t, window, e)
         return completed
 
     def drain(self, max_rounds: Optional[int] = None) -> int:
@@ -481,7 +489,48 @@ class PartitionScheduler:
         t.completed += len(window)
         self._completed += len(window)
         self._last_finish = now
+        if self.deployment is not None:
+            self.deployment.after_commit(t.name, t.session)
         return len(window)
+
+    def _resolve_failure(self, t: Tenant, window: List[Ticket],
+                         err: BaseException) -> int:
+        """A dispatch raised: under a cluster deployment, recover the
+        tenant from its newest snapshot and retry the window ONCE;
+        otherwise (or when recovery itself cannot proceed) fail the
+        tickets.  The recovery graph is the failed session's
+        materialized logical graph -- base plus every accepted delta
+        batch, INCLUDING this window's (``adapt_parts``/``adapt``
+        append to the pending log before dispatching) -- so the retry
+        is a plain reconvergence: re-applying the window's
+        edge-updates would double-count them."""
+        if self.deployment is None:
+            return self._fail(t, window, err)
+        try:
+            graph = t.session.graph       # materializes the delta log
+            info = self.deployment.recover(t.name, graph,
+                                           options=t.session.options)
+            if info is None:              # no snapshot yet: fail normally
+                return self._fail(t, window, err)
+            old, t.session = t.session, info.session
+            old.close()
+            self._recoveries += 1
+            last = window[-1]
+            t.serial_dispatches += 1
+            self._serial_dispatches += 1
+            if last.kind == "partition":
+                res = t.session.partition(record_history=False)
+            elif last.kind == "resize":
+                res = t.session.resize(last.payload["k"],
+                                       record_history=False)
+            else:
+                kw: dict = {"record_history": False}
+                if last.payload.get("new_graph") is not None:
+                    kw["new_graph"] = last.payload["new_graph"]
+                res = t.session.adapt(**kw)
+            return self._finish(t, window, res)
+        except Exception as e:
+            return self._fail(t, window, e)
 
     def _fail(self, t: Tenant, window: List[Ticket],
               err: BaseException) -> int:
@@ -562,4 +611,7 @@ class PartitionScheduler:
                          (p.stats() if hasattr(p, "stats") else {})
                          for p in self.policies},
             "policy_errors": list(self._policy_errors),
+            "recoveries": self._recoveries,
+            "deployment": (self.deployment.stats()
+                           if self.deployment is not None else None),
         }
