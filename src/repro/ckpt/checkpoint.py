@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import os
 import shutil
+import time
 from typing import Any, Optional
 
 import jax
@@ -20,6 +21,28 @@ import numpy as np
 
 PyTree = Any
 _MANIFEST = "manifest.msgpack"
+
+# A step_*.tmp directory younger than this may be a concurrent save still
+# in flight (tmp written, rename pending); only colder ones are crashed
+# half-saves that writers may sweep.
+TMP_GC_AGE_S = 300.0
+
+
+def _gc_stale_tmp(directory: str, age: float = TMP_GC_AGE_S) -> None:
+    """Sweep crashed half-saves: ``step_*.tmp`` dirs older than ``age``
+    seconds.  Called only from the writer-side paths (:func:`save`,
+    :func:`gc_old`) -- read APIs must never delete a tmp dir another
+    process may be about to rename into place."""
+    now = time.time()
+    for d in os.listdir(directory):
+        if not (d.startswith("step_") and d.endswith(".tmp")):
+            continue
+        path = os.path.join(directory, d)
+        try:
+            if now - os.path.getmtime(path) > age:
+                shutil.rmtree(path, ignore_errors=True)
+        except OSError:
+            pass                      # raced with the owner's rename
 
 
 def _flatten(tree: PyTree):
@@ -53,29 +76,27 @@ def save(directory: str, step: int, tree: PyTree) -> str:
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    _gc_stale_tmp(directory)
     return final
 
 
 def latest_step(directory: str) -> Optional[int]:
-    """Newest complete step, garbage-collecting crashed half-saves.
+    """Newest complete step (read-only; ``step_*.tmp`` dirs are skipped).
 
     A crash between :func:`save`'s tmp-dir write and its atomic rename
-    leaves a ``step_*.tmp`` directory behind.  Such a directory is never
-    a valid checkpoint (the rename IS the commit), so besides skipping
-    tmp dirs this sweeps them out -- the next writer would clobber its
-    own step's tmp anyway, but a crashed save for a step that is never
-    re-attempted would otherwise linger forever.
+    leaves a ``step_*.tmp`` directory behind; such a directory is never
+    a valid checkpoint (the rename IS the commit).  It is NOT deleted
+    here: this is a read API that concurrent writers also race against
+    (a fresh tmp may be a save mid-flight whose rename would then
+    crash).  Writers sweep stale tmp dirs -- older than
+    :data:`TMP_GC_AGE_S` -- in :func:`save` and :func:`gc_old`, so a
+    crashed save for a step that is never re-attempted still gets
+    garbage-collected on the next write-side call.
     """
     if not os.path.isdir(directory):
         return None
-    steps = []
-    for d in os.listdir(directory):
-        if not d.startswith("step_"):
-            continue
-        if d.endswith(".tmp"):
-            shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
-            continue
-        steps.append(int(d.split("_")[1]))
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
     return max(steps) if steps else None
 
 
@@ -104,10 +125,13 @@ def restore(directory: str, like: PyTree, step: Optional[int] = None,
     return jax.tree_util.tree_unflatten(treedef, leaves)
 
 
-def gc_old(directory: str, keep: int = 3) -> None:
-    """Delete all but the newest ``keep`` checkpoints."""
+def gc_old(directory: str, keep: int = 3,
+           tmp_age: float = TMP_GC_AGE_S) -> None:
+    """Delete all but the newest ``keep`` checkpoints, plus any crashed
+    half-save tmp dirs older than ``tmp_age`` seconds."""
     if not os.path.isdir(directory):
         return
+    _gc_stale_tmp(directory, age=tmp_age)
     steps = sorted(int(d.split("_")[1]) for d in os.listdir(directory)
                    if d.startswith("step_") and not d.endswith(".tmp"))
     for s in steps[:-keep]:

@@ -66,6 +66,11 @@ class ClusterConfig:
     # default timeout for blocking KV reads / barriers (seconds); a dead
     # peer surfaces as a timeout here, converted to PeerLost by callers
     rpc_timeout: float = 60.0
+    # blocking KV reads wait in slices of this length so the handle's
+    # ``on_wait`` hook (the worker's heartbeat) fires while a superstep
+    # legitimately blocks on a slow peer -- a live waiter must not look
+    # stale to the process supervisor
+    poll_slice: float = 5.0
 
     @property
     def coordinator(self) -> str:
@@ -93,6 +98,10 @@ class ClusterHandle:
         self.process_id = jax.process_index() if cfg.num_processes > 1 \
             else cfg.process_id
         self.num_processes = cfg.num_processes
+        # called between blocking-wait slices in kv_get (the worker
+        # binds its heartbeat here): a process still polling the
+        # coordination service is alive, however slow its peers are
+        self.on_wait: Optional[callable] = None
 
     # -- meshes ------------------------------------------------------------
 
@@ -127,13 +136,30 @@ class ClusterHandle:
         self._client.key_value_set(key, value)
 
     def kv_get(self, key: str, timeout: Optional[float] = None) -> str:
-        ms = int(1000 * (self.cfg.rpc_timeout if timeout is None
-                         else timeout))
-        try:
-            return self._client.blocking_key_value_get(key, ms)
-        except Exception as e:                      # XlaRuntimeError etc.
-            raise PeerLost(f"kv_get({key!r}) timed out after {ms}ms: "
-                           f"{e}") from e
+        """Blocking read with the full ``rpc_timeout`` budget, waited in
+        ``poll_slice``-length slices with ``on_wait()`` fired between
+        them -- so a worker blocked on a slow peer keeps heartbeating
+        and is not misdeclared stale by the process supervisor."""
+        total = self.cfg.rpc_timeout if timeout is None else timeout
+        deadline = time.monotonic() + total
+        err: Optional[Exception] = None
+        while True:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise PeerLost(f"kv_get({key!r}) timed out after "
+                               f"{total}s: {err}") from err
+            ms = max(1, int(1000 * min(self.cfg.poll_slice, remaining)))
+            t_slice = time.monotonic()
+            try:
+                return self._client.blocking_key_value_get(key, ms)
+            except Exception as e:                  # XlaRuntimeError etc.
+                err = e
+                # a non-timeout failure (service down) returns instantly:
+                # don't spin hot while the deadline runs out
+                if time.monotonic() - t_slice < 0.05:
+                    time.sleep(0.05)
+            if self.on_wait is not None:
+                self.on_wait()
 
     def kv_put_array(self, key: str, arr: np.ndarray) -> None:
         self.kv_put(key, base64.b64encode(
@@ -161,6 +187,20 @@ class ClusterHandle:
             total = total + self.kv_get_array(
                 f"{tag}/{q}", arr.dtype, arr.shape, timeout)
         return total
+
+    def kv_delete(self, key: str) -> None:
+        """Best-effort delete of ``key`` (a trailing ``/`` deletes the
+        whole prefix).  The worker GCs iteration ``t-1``'s label/reduce
+        keys once iteration ``t``'s allreduce proves every peer is past
+        them, bounding coordinator memory to O(V) live keys instead of
+        O(V x iterations).  A no-op on runtimes without
+        ``key_value_delete``; GC must never kill a worker."""
+        try:
+            delete = getattr(self._client, "key_value_delete", None)
+            if delete is not None:
+                delete(key)
+        except Exception:
+            pass
 
     def barrier(self, name: str, timeout: Optional[float] = None) -> None:
         ms = int(1000 * (self.cfg.rpc_timeout if timeout is None

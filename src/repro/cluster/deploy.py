@@ -55,8 +55,14 @@ class ClusterDeployment:
         self.recoveries = 0
         self.recovery_failures = 0
         self.resized_recoveries = 0
+        self.k_roll_forwards = 0
         self.snapshot_errors = 0
         self._commits: Dict[str, int] = {}
+        # last COMMITTED k per tenant: with snapshot_every > 1 a
+        # committed resize() may postdate the newest snapshot, and a
+        # recovery restoring that snapshot must roll k forward again
+        # instead of silently reverting the tenant
+        self._committed_k: Dict[str, int] = {}
 
     # -- admission ---------------------------------------------------------
 
@@ -86,6 +92,7 @@ class ClusterDeployment:
         stands (it is complete by construction: atomic rename)."""
         n = self._commits.get(name, 0) + 1
         self._commits[name] = n
+        self._committed_k[name] = int(session.cfg.k)
         if n % self.snapshot_every or session.labels is None:
             return
         try:
@@ -97,10 +104,19 @@ class ClusterDeployment:
 
     # -- recovery ----------------------------------------------------------
 
-    def recover(self, name: str, graph, options=None):
+    def recover(self, name: str, graph, options=None, *,
+                roll_forward_k: bool = True):
         """A fresh session for tenant ``name`` restored from its newest
         complete snapshot onto the CURRENT capacity, or None when no
-        snapshot exists (the caller then fails the window normally)."""
+        snapshot exists (the caller then fails the window normally).
+
+        With ``snapshot_every > 1`` the snapshot may predate a
+        committed ``resize()``; unless ``roll_forward_k`` is off (the
+        scheduler turns it off when the retried window is itself a
+        resize, which sets k anyway), the restored session is resized
+        back to the tenant's last committed k -- rescaled like any
+        snapshot k when capacity changed -- so a recovery never
+        silently reverts a committed resize."""
         try:
             info = _snapshot.restore_session(
                 self.tenant_dir(name), graph,
@@ -112,6 +128,18 @@ class ClusterDeployment:
         self.recoveries += 1
         if info.resized:
             self.resized_recoveries += 1
+        committed = self._committed_k.get(name)
+        if roll_forward_k and committed is not None:
+            want = committed
+            if self.scale_k and info.ndev != info.saved_ndev:
+                want = max(1, round(committed * info.ndev
+                                    / info.saved_ndev))
+            if want != info.k:
+                info.result = info.session.resize(want,
+                                                  record_history=False)
+                info.k = want
+                info.resized = True
+                self.k_roll_forwards += 1
         return info
 
     def stats(self) -> dict:
@@ -122,6 +150,7 @@ class ClusterDeployment:
             "snapshot_errors": self.snapshot_errors,
             "recoveries": self.recoveries,
             "resized_recoveries": self.resized_recoveries,
+            "k_roll_forwards": self.k_roll_forwards,
             "recovery_failures": self.recovery_failures,
             "tenants_snapshotted": len(self._commits),
         }

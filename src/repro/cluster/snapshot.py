@@ -2,8 +2,8 @@
 
 Snapshot format (one ``repro.ckpt`` checkpoint per snapshot, so writes
 are atomic: tmp dir + rename; a crash mid-save never corrupts the
-newest complete snapshot and ``ckpt.checkpoint.latest_step`` sweeps the
-stale tmp)::
+newest complete snapshot, and the next writer-side call --
+``ckpt.checkpoint.save`` / ``gc_old`` -- sweeps the stale tmp)::
 
     <dir>/step_<n>/            n = work items (or iterations) completed
         labels.npy             (V,) int32 previous stable assignment

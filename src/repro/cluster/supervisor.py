@@ -140,7 +140,10 @@ class PartitionSupervisor:
     Work items are ``(kind, kwargs)``: ``("partition", {})``,
     ``("adapt", {...})``, ``("update", {...})``, ``("resize",
     {"k": n})``.  The stream plus the factory's base graph are the
-    durable inputs; restart resumes at the snapshot's item index and
+    durable inputs; restart re-applies the completed prefix's graph
+    mutations (``update`` / ``adapt(edge_updates=...)`` deltas,
+    verified against the snapshot's ``delta_watermark``) to the
+    rebuilt base graph, then resumes at the snapshot's item index and
     replays the tail, bit-identically on unchanged capacity.
     """
 
@@ -176,15 +179,62 @@ class PartitionSupervisor:
 
     # -- the supervised run ------------------------------------------------
 
-    def _boot(self, ndev: Optional[int]):
+    @staticmethod
+    def replay_graph_mutations(graph, work: Sequence[tuple], step: int):
+        """Re-apply the graph mutations carried by ``work[:step]`` to the
+        factory's base graph: ``update`` items, ``adapt`` items with
+        ``edge_updates=`` (both delta batches -- ``add_edges`` weight
+        semantics are order-independent, so per-item replay is exact)
+        and ``adapt(new_graph=...)`` rebinds.  Returns ``(graph,
+        n_delta_batches)``; the count must match the snapshot's
+        ``delta_watermark`` for the rebuilt graph to be the logical
+        graph the snapshot's labels reflect."""
+        from repro.core.graph import add_edges
+        n_delta = 0
+        for kind, kw in list(work)[:step]:
+            if kind == "update":
+                graph = add_edges(graph, kw["edge_src"], kw["edge_dst"],
+                                  directed=kw.get("directed", True),
+                                  num_vertices=kw.get("num_vertices"))
+                n_delta += 1
+            elif kind == "adapt":
+                if kw.get("edge_updates") is not None:
+                    e_src, e_dst = kw["edge_updates"]
+                    graph = add_edges(graph, e_src, e_dst,
+                                      num_vertices=kw.get("num_vertices"))
+                    n_delta += 1
+                elif kw.get("new_graph") is not None:
+                    graph = kw["new_graph"]
+        return graph, n_delta
+
+    def _boot(self, ndev: Optional[int], work: Sequence[tuple] = ()):
         """(session, items_completed): a fresh session, fast-forwarded
-        to the newest complete snapshot if one exists."""
+        to the newest complete snapshot if one exists.  The factory
+        returns the BASE graph, so before restoring, the graph
+        mutations of the already-completed ``work[:step]`` prefix are
+        replayed onto it (cross-checked against the snapshot's
+        ``delta_watermark``) -- a snapshot's labels reflect those
+        deltas, and resuming on a stale graph would silently diverge
+        from the documented bit-identical replay."""
         graph, cfg, options = self.factory(ndev)
         if _snapshot.snapshot_steps(self.cfg.snapshot_dir):
+            skipped: List[int] = []
+            step, tree = _snapshot.newest_complete(
+                self.cfg.snapshot_dir,
+                on_corrupt=lambda s, e: skipped.append(s))
+            graph, n_delta = self.replay_graph_mutations(graph, work, step)
+            watermark = int(tree["delta_watermark"]) \
+                if "delta_watermark" in tree else n_delta
+            if n_delta != watermark:
+                raise RuntimeError(
+                    f"snapshot step {step} reflects {watermark} delta "
+                    f"batches but work[:{step}] carries {n_delta}; the "
+                    f"snapshot's logical graph cannot be rebuilt from "
+                    f"the factory's base graph plus this work stream")
             info = _snapshot.restore_session(
                 self.cfg.snapshot_dir, graph, options=options,
-                ndev=ndev, scale_k=self.cfg.scale_k)
-            self.corrupt_skipped += info.corrupt_skipped
+                ndev=ndev, scale_k=self.cfg.scale_k, step=step)
+            self.corrupt_skipped += len(skipped)
             self.snapshots_restored += 1
             self.resized_on_restore |= info.resized
             self.k = info.k
@@ -217,7 +267,7 @@ class PartitionSupervisor:
         replayed prefixes keep the result computed during THIS run's
         replay)."""
         self.ndev = ndev
-        session, i = self._boot(ndev)
+        session, i = self._boot(ndev, work)
         results: list = [None] * len(work)
         attempts = 0
         while i < len(work):
@@ -253,7 +303,7 @@ class PartitionSupervisor:
                     session.close()
                 except Exception:
                     pass
-                session, i = self._boot(self.ndev)
+                session, i = self._boot(self.ndev, work)
                 self.recover_seconds.append(time.monotonic() - t0)
         if session.labels is not None:
             _snapshot.save_snapshot(self.cfg.snapshot_dir, session,

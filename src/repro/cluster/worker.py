@@ -29,7 +29,13 @@ Process 0 snapshots ``(labels, loads, best_score, stall, next_t)``
 through ``repro.ckpt`` every ``snapshot_every`` supersteps and writes
 ``result.json`` + ``labels.npy`` at convergence.  Heartbeats are file
 mtimes under ``<workdir>/hb/`` (a dead process can't answer RPCs, but
-its stale file still accuses it); fault injection is declarative in
+its stale file still accuses it), touched every superstep AND between
+the sliced blocking-wait polls inside ``kv_get`` (via
+``ClusterHandle.on_wait``) so a live worker blocked on a slow peer is
+never misdeclared stale.  Process 0 deletes iteration ``t-1``'s KV
+keys once iteration ``t``'s allreduce completes (proof every peer is
+past them), keeping coordinator memory O(V) instead of
+O(V x iterations).  Fault injection is declarative in
 ``job.json`` (``{"fault": {"gen": 0, "pid": 1, "iteration": 6}}`` hard-
 exits that process at that superstep, simulating a worker loss).
 
@@ -81,6 +87,10 @@ def run_worker(workdir: str, gen: int, world: int, pid: int,
     handle = bootstrap(ClusterConfig(
         port=port, num_processes=world, process_id=pid,
         rpc_timeout=float(job.get("rpc_timeout", 60.0))))
+    # beat while blocked in coordination waits too: a superstep
+    # legitimately blocks for up to rpc_timeout per read on a slow peer,
+    # which would otherwise outlast the supervisor's heartbeat deadline
+    handle.on_wait = lambda: _beat(workdir, gen, pid)
 
     shard_dir = job["shard_dir"]
     snap_dir = job.get("snapshot_dir",
@@ -173,6 +183,13 @@ def run_worker(workdir: str, gen: int, world: int, pid: int,
             best, tot_best, tot_cur, m_partial, jnp.asarray(labels),
             deg_j, jnp.asarray(loads), u, valid, reduce_, C)
 
+        # iteration t's allreduce just completed, so every peer has
+        # entered iteration t -- i.e. finished ALL of t-1's label reads
+        # -- and t-1's keys are dead: GC them so the coordination
+        # service holds O(V) live payload, not O(V x iterations)
+        if world > 1 and pid == 0 and t > t0:
+            handle.kv_delete(f"g{gen}/t{t - 1}/")
+
         new_labels = np.asarray(new_labels, np.int32)
         if world > 1:
             for h in owned:
@@ -218,6 +235,8 @@ def run_worker(workdir: str, gen: int, world: int, pid: int,
                        float(w.sum())], np.float64)
     if world > 1:
         part = handle.allreduce_sum(f"g{gen}/final/phi", part)
+        if pid == 0:    # everyone reached the phi reduce: t's keys are dead
+            handle.kv_delete(f"g{gen}/t{t}/")
     phi = part[0] / max(part[1], 1e-12)
 
     if pid == 0:

@@ -503,13 +503,16 @@ class PartitionScheduler:
         batch, INCLUDING this window's (``adapt_parts``/``adapt``
         append to the pending log before dispatching) -- so the retry
         is a plain reconvergence: re-applying the window's
-        edge-updates would double-count them."""
+        edge-updates would double-count them.  A resize committed after
+        the newest snapshot is rolled forward by ``recover`` (skipped
+        when the retried window is itself a resize, which sets k)."""
         if self.deployment is None:
             return self._fail(t, window, err)
         try:
             graph = t.session.graph       # materializes the delta log
-            info = self.deployment.recover(t.name, graph,
-                                           options=t.session.options)
+            info = self.deployment.recover(
+                t.name, graph, options=t.session.options,
+                roll_forward_k=window[-1].kind != "resize")
             if info is None:              # no snapshot yet: fail normally
                 return self._fail(t, window, err)
             old, t.session = t.session, info.session

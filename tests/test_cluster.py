@@ -12,8 +12,10 @@ The load-bearing claims (ISSUE 9 acceptance):
   re-shard and lands within 2% phi of an uninterrupted baseline at the
   rescaled k (subprocess test, 8 forced host devices);
 * snapshots are atomic: a crash mid-save leaves only a ``step_*.tmp``
-  dir, which ``latest_step`` skips AND garbage-collects; a corrupted
-  newest snapshot falls back to the previous complete one;
+  dir, which reads skip (without deleting -- a fresh tmp may be a save
+  in flight) and which the writer-side ``save``/``gc_old`` sweep once
+  stale; a corrupted newest snapshot falls back to the previous
+  complete one;
 * the serving tier recovers too: ``PartitionScheduler(deployment=...)``
   restores a failed tenant from its snapshot and retries the window
   once, including the resized path when deployment capacity shrank.
@@ -50,8 +52,16 @@ def _work(n_adapts=3):
 # Satellite: checkpoint tmp-dir GC + crash-mid-save atomicity
 # ---------------------------------------------------------------------------
 
+def _backdate(path, seconds=2 * checkpoint.TMP_GC_AGE_S):
+    old = time.time() - seconds
+    os.utime(path, (old, old))
+
+
 class TestCheckpointAtomicity:
-    def test_latest_step_skips_and_gcs_tmp(self, tmp_path):
+    def test_latest_step_skips_tmp_without_deleting(self, tmp_path):
+        """latest_step is a READ: it must skip a half-written tmp dir
+        but never delete it -- a fresh tmp may be a concurrent save
+        whose rename is about to land."""
         d = str(tmp_path / "ck")
         tree = {"w": np.arange(5.0), "n": np.int64(3)}
         checkpoint.save(d, 1, tree)
@@ -61,16 +71,42 @@ class TestCheckpointAtomicity:
         os.makedirs(tmp)
         np.save(os.path.join(tmp, "w.npy"), np.zeros(5))
         assert checkpoint.latest_step(d) == 1
-        assert not os.path.exists(tmp), "stale tmp dir must be swept"
+        assert os.path.exists(tmp), \
+            "read APIs must not sweep a possibly in-flight tmp dir"
         back = checkpoint.restore(d, {"w": np.zeros(5), "n": np.int64(0)})
         np.testing.assert_array_equal(back["w"], tree["w"])
         assert int(back["n"]) == 3
+        # ... and a save with the tmp's rename still pending succeeds
+        checkpoint.save(d, 2, tree)
+        assert checkpoint.latest_step(d) == 2
+
+    def test_writers_gc_stale_tmp_only(self, tmp_path):
+        d = str(tmp_path / "ck")
+        checkpoint.save(d, 1, {"w": np.zeros(3)})
+        stale = os.path.join(d, "step_00000002.tmp")
+        fresh = os.path.join(d, "step_00000003.tmp")
+        os.makedirs(stale), os.makedirs(fresh)
+        _backdate(stale)
+        checkpoint.gc_old(d, keep=3)
+        assert not os.path.exists(stale), "cold crashed save must be GCd"
+        assert os.path.exists(fresh), \
+            "a fresh tmp (possible concurrent save) must survive GC"
+        # save() sweeps stale tmps too (crash-mid-save roundtrip: the
+        # next writer cleans up after the crashed one)
+        _backdate(fresh)
+        checkpoint.save(d, 4, {"w": np.zeros(3)})
+        assert not os.path.exists(fresh)
+        assert checkpoint.latest_step(d) == 4
 
     def test_latest_step_empty_and_missing(self, tmp_path):
         assert checkpoint.latest_step(str(tmp_path / "nope")) is None
         d = str(tmp_path / "only_tmp")
-        os.makedirs(os.path.join(d, "step_00000001.tmp"))
+        tmp = os.path.join(d, "step_00000001.tmp")
+        os.makedirs(tmp)
         assert checkpoint.latest_step(d) is None
+        assert os.path.exists(tmp)
+        _backdate(tmp)
+        checkpoint.gc_old(d, keep=1)
         assert os.listdir(d) == []
 
 
@@ -230,6 +266,68 @@ class TestPartitionSupervisor:
         assert snapshot_steps(str(tmp_path / "b"))[-1] == len(work)
         s1.close(), s2.close()
 
+    def test_kill_after_graph_mutations_replays_deltas(self, small_world,
+                                                       tmp_path):
+        """A restart after graph-mutating items (``update`` /
+        ``adapt(edge_updates=...)``) must re-apply those deltas to the
+        factory's BASE graph before resuming -- snapshots carry only
+        labels/loads plus the delta watermark, so without replay the
+        restored session would silently continue on a stale graph."""
+        rng = np.random.default_rng(17)
+        V = small_world.num_vertices
+        d1 = (rng.integers(0, V, 12), rng.integers(0, V, 12))
+        d2 = (rng.integers(0, V, 9), rng.integers(0, V, 9))
+        work = [
+            ("partition", {}),
+            ("update", {"edge_src": d1[0], "edge_dst": d1[1]}),
+            ("adapt", {}),
+            ("adapt", {"edge_updates": d2}),
+            ("adapt", {}),
+        ]
+        clean = PartitionSupervisor(
+            ClusterSupervisorConfig(snapshot_dir=str(tmp_path / "a")),
+            self._factory(small_world))
+        s1, r1 = clean.run(work)
+        # kill AFTER both deltas: the restored run must rebuild base +
+        # d1 + d2 (watermark 2) before replaying the tail
+        faulty = PartitionSupervisor(
+            ClusterSupervisorConfig(snapshot_dir=str(tmp_path / "b")),
+            self._factory(small_world))
+        s2, r2 = faulty.run(work, faults=[kill_worker_at(4)])
+        assert faulty.restarts == 1 and faulty.snapshots_restored == 1
+        assert s2.delta_watermark == s1.delta_watermark == 2
+        assert s2.graph.num_directed_entries == \
+            s1.graph.num_directed_entries
+        assert np.array_equal(s1.labels, s2.labels), \
+            "restart after deltas must replay them bit-identically"
+        assert np.array_equal(r1[-1].labels, r2[-1].labels)
+        s1.close(), s2.close()
+
+    def test_boot_raises_on_watermark_mismatch(self, small_world,
+                                               tmp_path):
+        """Snapshots whose delta watermark the work stream cannot
+        reproduce must refuse to resume instead of silently continuing
+        on a graph missing those deltas."""
+        rng = np.random.default_rng(3)
+        V = small_world.num_vertices
+        with_delta = [
+            ("partition", {}),
+            ("update", {"edge_src": rng.integers(0, V, 8),
+                        "edge_dst": rng.integers(0, V, 8)}),
+            ("adapt", {}),
+        ]
+        d = str(tmp_path / "s")
+        sup = PartitionSupervisor(ClusterSupervisorConfig(snapshot_dir=d),
+                                  self._factory(small_world))
+        s, _ = sup.run(with_delta)
+        s.close()
+        # resuming the same snapshots with a stream that carries no
+        # delta items cannot rebuild the snapshot's logical graph
+        stale = PartitionSupervisor(ClusterSupervisorConfig(snapshot_dir=d),
+                                    self._factory(small_world))
+        with pytest.raises(RuntimeError, match="delta"):
+            stale.run(_work(3))
+
     def test_corrupt_snapshot_falls_back(self, small_world, tmp_path):
         work = _work(3)
         clean = PartitionSupervisor(
@@ -361,6 +459,99 @@ class TestSchedulerDeployment:
         sess = sched.tenants["a"].session
         assert sess.cfg.k == 4 and sess.labels.max() < 4
         assert metrics.rho(g, sess.labels, 4) < 1.2
+
+    def test_recovery_rolls_forward_committed_resize(self, tmp_path):
+        """With ``snapshot_every > 1`` a committed ``resize()`` can
+        postdate the newest snapshot; a recovery restoring that
+        snapshot must roll k forward to the last committed value, not
+        silently revert the tenant."""
+        from repro.serve import PartitionScheduler
+        g = generators.watts_strogatz(1200, 8, 0.1, seed=3)
+        cfg = SpinnerConfig(k=6, seed=1, max_iters=44)
+        dep = ClusterDeployment(str(tmp_path / "snaps"), snapshot_every=2)
+        sched = PartitionScheduler(deployment=dep)
+        sched.add_tenant("a", g, cfg)
+        sched.submit("a", "partition")
+        assert sched.drain() == 1
+        sched.submit("a", "adapt")
+        assert sched.drain() == 1 and dep.snapshots_written == 1
+        # committed AFTER the newest snapshot (commit 3, cadence 2)
+        tkr = sched.submit("a", "resize", k=9)
+        assert sched.drain() == 1 and not tkr.failed
+        assert dep.snapshots_written == 1
+
+        _poison_once(sched.tenants["a"].session)
+        tk = sched.submit("a", "adapt")
+        assert sched.drain() == 1 and not tk.failed, tk.error
+        assert dep.k_roll_forwards == 1
+        sess = sched.tenants["a"].session
+        assert sess.cfg.k == 9, \
+            "recovery must not revert a committed resize"
+        assert sess.labels.max() < 9
+        assert sched.stats()["deployment"]["k_roll_forwards"] == 1
+
+
+# ---------------------------------------------------------------------------
+# ClusterHandle: sliced blocking waits keep the heartbeat fresh
+# ---------------------------------------------------------------------------
+
+
+class TestKvGetSlicing:
+    def _handle(self, fake_client, poll_slice=0.01, rpc_timeout=0.05):
+        from repro.cluster.bootstrap import ClusterConfig, ClusterHandle
+
+        class H(ClusterHandle):
+            _client = property(lambda self: fake_client)
+
+        return H(ClusterConfig(num_processes=1, rpc_timeout=rpc_timeout,
+                               poll_slice=poll_slice))
+
+    def test_on_wait_fires_between_slices(self):
+        class Fake:
+            def __init__(self):
+                self.calls = 0
+
+            def blocking_key_value_get(self, key, ms):
+                self.calls += 1
+                if self.calls < 3:
+                    raise TimeoutError("deadline exceeded")
+                return "ok"
+
+        fake = Fake()
+        h = self._handle(fake, rpc_timeout=5.0)
+        beats = []
+        h.on_wait = lambda: beats.append(time.monotonic())
+        assert h.kv_get("x") == "ok"
+        assert fake.calls == 3
+        assert len(beats) == 2, \
+            "the heartbeat hook must fire between wait slices"
+
+    def test_exhausted_deadline_raises_peerlost(self):
+        from repro.cluster.bootstrap import PeerLost
+
+        class Dead:
+            def blocking_key_value_get(self, key, ms):
+                raise TimeoutError("deadline exceeded")
+
+        h = self._handle(Dead(), rpc_timeout=0.05)
+        with pytest.raises(PeerLost, match="timed out"):
+            h.kv_get("gone")
+
+    def test_kv_delete_is_best_effort(self):
+        class NoDelete:                 # runtime without key_value_delete
+            pass
+
+        class Counting:
+            def __init__(self):
+                self.deleted = []
+
+            def key_value_delete(self, key):
+                self.deleted.append(key)
+
+        self._handle(NoDelete()).kv_delete("g0/t1/")    # must not raise
+        c = Counting()
+        self._handle(c).kv_delete("g0/t1/")
+        assert c.deleted == ["g0/t1/"]
 
 
 # ---------------------------------------------------------------------------
