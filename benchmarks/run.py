@@ -44,9 +44,9 @@ def main() -> None:
     for name in selected:
         try:
             rows = suites[name](quick=args.quick)
-            if name in ("dynamic", "serve", "cluster"):
-                # perf-trajectory artifacts (delta adapt, serving tier):
-                # machine-readable, at the repo root
+            if name in ("dynamic", "serve", "cluster", "apps"):
+                # perf-trajectory artifacts (delta adapt, serving tier,
+                # application speedup): machine-readable, at the repo root
                 import json
                 import os
                 root = os.path.dirname(os.path.dirname(

@@ -1,0 +1,32 @@
+"""repro.apps -- the partition-consuming application layer.
+
+The paper's headline claim (Section 7) is that consuming Spinner
+partitions instead of hash partitioning speeds Pregel applications up
+~2x by cutting cross-worker message traffic.  This package is the
+consumer side that makes the measurement real:
+
+  * :mod:`repro.apps.layout` places vertices on devices by ANY label
+    vector (Spinner's, or the hash baseline) and reuses the engine's
+    sharded bucketed CSR layouts;
+  * :mod:`repro.apps.workloads` defines the suite -- PageRank,
+    connected components (WCC), BFS/SSSP -- with semantics matching
+    ``core.pregel``'s numpy oracles;
+  * :mod:`repro.apps.engine` runs each as ONE
+    ``shard_map(lax.while_loop)`` dispatch through the shared
+    ``core.comm`` exchange plans, the overlap schedule, and the fused
+    Pallas combiner (``kernels.pregel_combine``).
+
+Entry points: :func:`run_app` here, or
+``PartitionSession.run_app(workload)`` to consume the labels a session
+just computed.  ``benchmarks/bench_apps.py`` drives the hash-vs-spinner
+matrix into ``BENCH_apps.json``.
+"""
+from .engine import AppResult, AppState, run_app
+from .layout import AppLayout, build_app_layout, placement_from_labels
+from .workloads import APPS, AppSpec, finalize_values, init_active, init_values
+
+__all__ = [
+    "APPS", "AppLayout", "AppResult", "AppSpec", "AppState",
+    "build_app_layout", "finalize_values", "init_active", "init_values",
+    "placement_from_labels", "run_app",
+]

@@ -1,0 +1,84 @@
+"""The partition-consuming workload suite (paper Section 7 / Figure 8).
+
+Each workload is a Pregel vertex program expressed as the engine's
+three hooks over a combine MONOID:
+
+  * ``to_message`` -- the value a vertex sends along its out-edges
+    (PageRank: ``pr / out_degree``; min-propagation: the value itself);
+  * ``combine``    -- how incoming messages fold (``sum`` / ``min``);
+  * update         -- the new vertex value from the combined inbox
+    (PageRank's damped affine map; the monotone ``min(old, acc)``).
+
+Semantics mirror ``core.pregel``'s numpy oracles exactly: messages are
+UNWEIGHTED (the Eq. 3 edge weights only shape the partitioner), the
+PageRank share divisor is the directed-entry out-degree, WCC components
+converge to the minimum ORIGINAL vertex id (so results are
+placement-invariant by construction), and BFS/SSSP counts unit hops.
+
+``init_values`` / ``init_active`` produce the PERMUTED padded initial
+state for an :class:`repro.apps.layout.AppLayout`; pad vertices carry
+the monoid-neutral value and ``active = False`` forever.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.kernels.pregel_combine import INF_I32
+
+
+@dataclasses.dataclass(frozen=True)
+class AppSpec:
+    """Static description of one vertex program (program-cache key part)."""
+    name: str
+    combine: str            # "sum" | "min"
+    dtype: str              # "float32" | "int32"
+    bias: int               # added to each message (BFS hop count)
+    halts: bool             # drain-halt on zero changed vs. fixed iters
+    default_iters: int      # pagerank sweep length / halt-cap for others
+    default_plan: str       # exchange plan on a multi-device mesh
+
+
+APPS = {
+    "pagerank": AppSpec("pagerank", "sum", "float32", 0, False, 20, "halo"),
+    "wcc": AppSpec("wcc", "min", "int32", 0, True, 4096, "halo_delta"),
+    "bfs": AppSpec("bfs", "min", "int32", 1, True, 4096, "halo_delta"),
+}
+APPS["sssp"] = dataclasses.replace(APPS["bfs"], name="sssp")
+
+
+def init_values(spec: AppSpec, layout, source: int = 0) -> np.ndarray:
+    """(v_pad,) initial values in PERMUTED vertex order."""
+    v_pad, n = layout.v_pad, layout.num_real
+    if spec.combine == "sum":                      # pagerank
+        vals = np.zeros(v_pad, np.float32)
+        vals[layout.perm] = np.float32(1.0 / n)
+        return vals
+    vals = np.full(v_pad, INF_I32, np.int32)
+    if spec.name == "wcc":
+        # original ids as component seeds: the converged minimum is the
+        # same vertex id under every placement (bit-identical results)
+        vals[layout.perm] = np.arange(n, dtype=np.int32)
+    else:                                          # bfs / sssp
+        vals[layout.perm[source]] = 0
+    return vals
+
+
+def init_active(spec: AppSpec, layout, source: int = 0) -> np.ndarray:
+    """(v_pad,) bool: who sends in superstep 1 (permuted order)."""
+    act = np.zeros(layout.v_pad, bool)
+    if spec.name in ("bfs", "sssp"):
+        act[layout.perm[source]] = True
+    else:
+        act[layout.perm] = True
+    return act
+
+
+def finalize_values(spec: AppSpec, values: np.ndarray) -> np.ndarray:
+    """Oracle-comparable view: BFS/SSSP unreached -> inf (float), the
+    rest pass through."""
+    if spec.name in ("bfs", "sssp"):
+        out = values.astype(np.float64)
+        return np.where(values >= INF_I32, np.inf, out)
+    return values

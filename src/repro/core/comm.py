@@ -23,6 +23,11 @@ distributed Pregel applications (``repro.core.pregel_dist``):
         (the bit-compatible oracle; O(V) bytes per iteration);
       - ``halo``      -- ship only the boundary labels other devices'
         edge shards actually reference (O(cut) bytes, static);
+      - ``halo_delta`` -- the halo topology with delta accounting: only
+        boundary values that CHANGED since the last exchange are
+        counted (O(active cut) bytes -- placement-sensitive AND
+        decaying; the transport for ``repro.apps``' shrinking-frontier
+        workloads);
       - ``delta``     -- ship only labels that CHANGED last iteration
         (O(migrations) bytes, decaying like Figure 7 as the partitioning
         converges).
@@ -70,6 +75,8 @@ class HaloIndex:
     true_halo: int             # sum of real (unpadded) halo entries
     send_idx: np.ndarray       # (ndev, ndev, H) int32 local ids owner->needer
     ext_idx: np.ndarray        # (E,) int64 per-edge index into [local | halo]
+    send_counts: np.ndarray    # (ndev, ndev) int32 REAL entries per pair
+                               # (slots >= count are padding; see halo_delta)
 
 
 def build_halo_index(edge_owner: np.ndarray, remote_ids: np.ndarray,
@@ -108,8 +115,10 @@ def build_halo_index(edge_owner: np.ndarray, remote_ids: np.ndarray,
         H = shape_bucket(H, floor=8)
 
     send_idx = np.zeros((ndev, ndev, H), np.int32)   # [owner p][needer q]
+    send_counts = np.zeros((ndev, ndev), np.int32)
     for (q, p), ids in need.items():
         send_idx[p, q, : ids.size] = (ids - p * v_per_dev).astype(np.int32)
+        send_counts[p, q] = ids.size
 
     ext_idx = np.empty(edge_owner.shape[0], np.int64)
     local = remote_owner == edge_owner
@@ -121,7 +130,8 @@ def build_halo_index(edge_owner: np.ndarray, remote_ids: np.ndarray,
         ext_idx[sel] = v_per_dev + p * H + np.searchsorted(ids,
                                                            remote_ids[sel])
     return HaloIndex(ndev=ndev, v_per_dev=v_per_dev, halo_size=H,
-                     true_halo=true_halo, send_idx=send_idx, ext_idx=ext_idx)
+                     true_halo=true_halo, send_idx=send_idx, ext_idx=ext_idx,
+                     send_counts=send_counts)
 
 
 def halo_exchange_start(values_local: jax.Array, send_idx_dev: jax.Array,
@@ -299,6 +309,7 @@ class HaloPlan(ExchangePlan):
         self.halo_size = hidx.halo_size
         self.true_halo = hidx.true_halo
         self._send_idx = hidx.send_idx
+        self._send_counts = hidx.send_counts
         # regroup the remapped indices into the (ndev, E_shard) edge layout;
         # padding edges (weight 0) read slot 0 and contribute nothing
         dst_index = np.zeros(sg.dst.shape, np.int32)
@@ -347,6 +358,63 @@ class HaloPlan(ExchangePlan):
     def finish_exchange(self, pending):
         labels_local, halo, aux, wire_bytes = pending
         return halo_exchange_finish(labels_local, halo), aux, wire_bytes
+
+
+class HaloDeltaPlan(HaloPlan):
+    """Changed BOUNDARY values only: the halo topology with delta
+    accounting -- the transport for shrinking-frontier Pregel workloads
+    (WCC / BFS in ``repro.apps``) on a placed graph.
+
+    The physical collective is the halo plan's static-shape all_to_all
+    (bit-identical lookup), but the wire accounting models what a
+    message-passing runtime with per-value dirty tracking sends: 8
+    bytes (slot + value) per boundary value that CHANGED since the last
+    exchange, counted once per (owner, needer) pair it is pushed to.
+    Unlike ``delta``'s full-mirror broadcast (every changed value to
+    every device, placement-blind), this volume is BOTH
+    placement-sensitive (only cut-referenced vertices count -- a better
+    partition moves strictly less) and frontier-decaying (a converged
+    region stops paying); the aux carry is the previous send vector the
+    deltas are diffed against, bootstrapped uncounted by ``init_aux``
+    like the delta mirror.
+    """
+
+    name = "halo_delta"
+
+    def __init__(self, sg, pad: bool = False):
+        super().__init__(sg, pad=pad)
+        self._dev_args = None
+
+    def signature(self) -> tuple:
+        return (self.name, self.ndev, self.v_per_dev, self.halo_size)
+
+    def device_args(self):
+        if self._dev_args is None:
+            valid = (np.arange(self.halo_size)[None, None, :]
+                     < self._send_counts[:, :, None])
+            self._dev_args = (jnp.asarray(self._send_idx),
+                              jnp.asarray(valid.astype(np.float32)))
+        return self._dev_args
+
+    def arg_specs(self, axis):
+        return (PartitionSpec(axis), PartitionSpec(axis))
+
+    def wire_bytes_per_iter(self) -> Optional[int]:
+        return None        # measured: depends on per-iteration changes
+
+    def init_aux(self, labels_local, axis, *args):
+        return labels_local        # the previous send vector (the mirror)
+
+    def start_exchange(self, labels_local, aux, axis, send_idx, send_valid):
+        changed = (labels_local != aux).astype(jnp.float32)
+        wire = jax.lax.psum(jnp.sum(changed[send_idx] * send_valid),
+                            axis) * jnp.float32(8.0)
+        local, halo = halo_exchange_start(labels_local, send_idx, axis)
+        return local, halo, labels_local, wire
+
+    def finish_exchange(self, pending):
+        labels_local, halo, aux, wire = pending
+        return halo_exchange_finish(labels_local, halo), aux, wire
 
 
 class DeltaPlan(ExchangePlan):
@@ -435,6 +503,7 @@ class DeltaPlan(ExchangePlan):
 EXCHANGE_PLANS = {
     "allgather": AllGatherPlan,
     "halo": HaloPlan,
+    "halo_delta": HaloDeltaPlan,
     "delta": DeltaPlan,
 }
 
@@ -460,8 +529,9 @@ def make_exchange_plan(name: str, sg, delta_cap: Optional[int] = None,
     if name == "delta":
         key, build = ((name, delta_cap, pad),
                       lambda: DeltaPlan(sg, cap=delta_cap))
-    elif name == "halo":
-        key, build = (name, None, pad), lambda: HaloPlan(sg, pad=pad)
+    elif name in ("halo", "halo_delta"):
+        key, build = ((name, None, pad),
+                      lambda: EXCHANGE_PLANS[name](sg, pad=pad))
     else:
         key, build = (name, None, pad), lambda: EXCHANGE_PLANS[name](sg)
     return _graph_cached(_PLAN_CACHE, sg, key, build)

@@ -81,6 +81,11 @@ def comm_volume(graph: Graph, labels: np.ndarray, k: int) -> np.ndarray:
     superstep under a message-passing runtime.  The total over all
     partitions is the (unweighted) directed cut size; phi relates as
     ``comm_volume(...).sum() == (1 - phi) * num_directed_entries``.
+
+    ``summarize`` computes this unconditionally, so every benchmark row
+    built on it carries ``comm_volume`` -- the static predictor the
+    application bench (``benchmarks/bench_apps.py``) correlates with
+    the wire bytes the exchange plans actually move per superstep.
     """
     labels = np.asarray(labels)
     cut = labels[graph.src] != labels[graph.dst]

@@ -93,16 +93,20 @@ def _placement_session(key, graph, cfg):
 
 
 def place_experts(choices: np.ndarray, n_experts: int, n_shards: int,
-                  seed: int = 0, prev: Optional[np.ndarray] = None
+                  seed: int = 0, prev: Optional[np.ndarray] = None,
+                  graph: Optional[Graph] = None
                   ) -> Tuple[np.ndarray, dict]:
     """Spinner-partition experts across EP shards from router statistics.
 
     ``prev`` enables incremental re-placement as routing drifts
     (Section 3.4 applied to the serving plane); those calls ride a
     reused ``PartitionSession``, so re-placing after a routing shift
-    costs an upload, not a compile.
+    costs an upload, not a compile.  ``graph`` accepts a precomputed
+    co-activation graph (``coactivation_graph(choices, n_experts)``) so
+    callers that also consume the graph -- e.g. the application bench
+    running Pregel over it hash-vs-spinner -- build it once.
     """
-    g = coactivation_graph(choices, n_experts)
+    g = coactivation_graph(choices, n_experts) if graph is None else graph
     cfg = SpinnerConfig(k=n_shards, seed=seed, max_iters=150)
     if prev is None:
         res = partition(g, cfg, record_history=False)
@@ -123,6 +127,44 @@ def place_experts(choices: np.ndarray, n_experts: int, n_shards: int,
     stats["traffic_reduction"] = 1.0 - (
         stats["cross_after"] / max(1e-9, stats["cross_before"]))
     return res.labels, stats
+
+
+def expert_placement_case(n_experts: int = 256, n_tokens: int = 20_000,
+                          top_k: int = 2, n_shards: int = 8,
+                          seed: int = 0) -> Tuple[Graph, np.ndarray, dict]:
+    """(graph, labels, stats): a ready-made MoE expert-placement case.
+
+    Synthesizes clustered router statistics (experts fall into latent
+    groups tokens co-activate within), builds the co-activation graph
+    ONCE, Spinner-places it -- and returns the pair an application run
+    consumes: ``repro.apps.run_app(graph, labels, ...)`` vs the same
+    call with hash labels is the expert-graph leg of the
+    hash-vs-spinner bench (``benchmarks/bench_apps.py``).
+    """
+    rng = np.random.default_rng(seed)
+    groups = rng.integers(0, n_shards, n_experts)
+    tok_grp = rng.integers(0, n_shards, n_tokens)
+    choices = np.empty((n_tokens, top_k), np.int64)
+    for i in range(top_k):
+        # 95% of picks stay inside the token's latent group: routers
+        # specialize hard post-training, and the sharper the structure
+        # the more vertex-granular halo traffic placement can remove
+        in_grp = rng.random(n_tokens) < 0.95
+        pick = rng.integers(0, n_experts, n_tokens)
+        same = np.where(groups[pick] == tok_grp, True, False)
+        retry = pick.copy()
+        for _ in range(8):      # rejection-sample toward the group
+            bad = in_grp & ~same
+            if not bad.any():
+                break
+            retry[bad] = rng.integers(0, n_experts, int(bad.sum()))
+            same = groups[retry] == tok_grp
+            pick = retry
+        choices[:, i] = pick
+    g = coactivation_graph(choices, n_experts)
+    labels, stats = place_experts(choices, n_experts, n_shards, seed=seed,
+                                  graph=g)
+    return g, labels, stats
 
 
 def place_pipeline_stages(layer_costs: np.ndarray, n_stages: int,

@@ -11,8 +11,11 @@ remote_msgs * t_net  -- the straggler-at-the-barrier model the paper's
 Table 4 measures (unbalance -> idling; cut edges -> network).
 
 Three canonical programs: PageRank, SSSP (BFS on unit weights), WCC.
-All are pure numpy (the graphs here are CPU-scale); the distributed
-halo-exchange engine lives in ``pregel_dist.py``.
+All are pure numpy: these are the ORACLES the device-resident
+application engine (:mod:`repro.apps`) is tested against -- that
+engine runs the same programs as one ``shard_map(while_loop)``
+dispatch over real placements with measured wire bytes, driven by
+``PartitionSession.run_app()`` / ``benchmarks/bench_apps.py``.
 """
 from __future__ import annotations
 

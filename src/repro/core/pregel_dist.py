@@ -1,134 +1,52 @@
-"""Distributed Pregel with halo exchange (shard_map).
+"""Distributed PageRank over a label placement -- now a thin wrapper.
 
-The integration the paper performs on Giraph (Section 5.6), on our mesh:
-vertices are physically placed by partition label (one partition per
-device), and each superstep exchanges only the *boundary* values other
-devices actually reference -- an all_to_all halo exchange with
-precomputed index lists.  A better partitioning (Spinner vs hash) directly
-shrinks the halo, i.e. the bytes on the wire, which is exactly the
-mechanism behind the paper's 2x application speedup.
+The integration the paper performs on Giraph (Section 5.6), on our
+mesh: vertices are physically placed by partition label and each
+superstep exchanges only the *boundary* values other devices actually
+reference, so a better partitioning (Spinner vs hash) directly shrinks
+the bytes on the wire -- the mechanism behind the paper's 2x
+application speedup.
 
-The halo-plan construction itself (send lists + remapped edge indices)
-lives in ``repro.core.comm`` (``build_halo_index`` / ``halo_exchange``),
-shared with the sharded LPA engine's ``label_exchange="halo"`` plan; this
-module only adds the label-driven placement and the PageRank superstep.
-
-PageRank is implemented end-to-end; halo construction is generic.
+This module's hand-rolled halo plan and per-superstep dispatch loop
+were replaced by :mod:`repro.apps`: placement goes through
+``apps.layout`` (label-sorted equal chop onto ``shard_graph``),
+transport through the shared :class:`repro.core.comm.ExchangePlan`
+halo machinery, and the whole run is ONE cached
+``shard_map(lax.while_loop)`` program with on-device wire accounting.
+``pagerank_distributed`` remains as the back-compat entry returning
+``(values, stats)`` with the measured (not estimated) wire bytes.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
-from jax.sharding import PartitionSpec as P
-
-from . import comm
-from .graph import Graph
 
 
-@dataclasses.dataclass(frozen=True)
-class HaloPlan:
-    ndev: int
-    v_per_dev: int
-    perm: np.ndarray           # (V,) original id -> placed id
-    send_idx: np.ndarray       # (ndev, ndev, H) local indices to send
-    halo_size: int             # H (padded per pair)
-    true_halo: int             # sum of real (unpadded) halo entries
-    # per-device edge arrays (edges live at their dst owner)
-    src_ext: np.ndarray        # (ndev, E) index into [local values | halo]
-    dst_local: np.ndarray      # (ndev, E) local dst index
-    edge_valid: np.ndarray     # (ndev, E) bool
-    out_deg: np.ndarray        # (ndev, v_per_dev) f32 (global out-degree)
-
-
-def build_halo_plan(graph: Graph, labels: np.ndarray, ndev: int) -> HaloPlan:
-    V = graph.num_vertices
-    labels = np.asarray(labels)
-    assert labels.max() < ndev
-    # place partition p's vertices contiguously
-    order = np.argsort(labels, kind="stable")
-    counts = np.bincount(labels, minlength=ndev)
-    v_per_dev = int(counts.max())
-    perm = np.empty(V, np.int64)
-    off = 0
-    for p in range(ndev):
-        mine = order[off: off + counts[p]]
-        perm[mine] = p * v_per_dev + np.arange(counts[p])
-        off += counts[p]
-    src_p = perm[graph.src]
-    dst_p = perm[graph.dst]
-    owner_dst = dst_p // v_per_dev
-
-    # edges live at their dst owner and read their src's value: the shared
-    # halo machinery computes the send lists and the per-edge remap into
-    # [local values | halo]
-    hidx = comm.build_halo_index(owner_dst, src_p, ndev, v_per_dev)
-    H = hidx.halo_size
-
-    # group the remapped edges by owning device, padded square
-    e_per = np.bincount(owner_dst, minlength=ndev)
-    E = int(e_per.max()) if e_per.size else 1
-    src_ext = np.zeros((ndev, E), np.int64)
-    dst_local = np.zeros((ndev, E), np.int64)
-    valid = np.zeros((ndev, E), bool)
-    for q in range(ndev):
-        qe = np.where(owner_dst == q)[0]
-        src_ext[q, : qe.size] = hidx.ext_idx[qe]
-        dst_local[q, : qe.size] = dst_p[qe] - q * v_per_dev
-        valid[q, : qe.size] = True
-
-    out_deg = np.zeros(ndev * v_per_dev, np.float32)
-    np.add.at(out_deg, src_p, 1.0)
-    return HaloPlan(ndev=ndev, v_per_dev=v_per_dev, perm=perm,
-                    send_idx=hidx.send_idx, halo_size=H,
-                    true_halo=hidx.true_halo, src_ext=src_ext,
-                    dst_local=dst_local, edge_valid=valid,
-                    out_deg=out_deg.reshape(ndev, v_per_dev))
-
-
-def pagerank_distributed(graph: Graph, labels: np.ndarray, mesh: Mesh,
+def pagerank_distributed(graph, labels: np.ndarray, mesh: Mesh,
                          iters: int = 20, damping: float = 0.85,
-                         axis: str = "data") -> Tuple[np.ndarray, dict]:
-    ndev = mesh.shape[axis]
-    plan = build_halo_plan(graph, labels, ndev)
-    V = graph.num_vertices
-    vl, H = plan.v_per_dev, plan.halo_size
+                         axis: str = "data",
+                         plan: Optional[str] = None
+                         ) -> Tuple[np.ndarray, dict]:
+    """PageRank on ``graph`` placed by ``labels`` over ``mesh``.
 
-    send_idx = jnp.asarray(plan.send_idx)       # (ndev, ndev, H)
-    src_ext = jnp.asarray(plan.src_ext)
-    dst_local = jnp.asarray(plan.dst_local)
-    w_valid = jnp.asarray(plan.edge_valid.astype(np.float32))
-    out_deg = jnp.asarray(plan.out_deg)
+    Thin wrapper over :func:`repro.apps.run_app`; ``stats`` keeps the
+    historical ``halo_true_bytes_per_step`` key, now the on-device
+    accumulated per-superstep wire bytes of the shared halo plan
+    (0 on a single-device mesh: nothing crosses the wire).
+    """
+    from repro.apps import build_app_layout, run_app
 
-    def superstep(pr_l, send_l, src_l, dst_l, wv_l, deg_l):
-        share = (pr_l[0] / jnp.maximum(deg_l[0], 1.0)).astype(jnp.float32)
-        # boundary-only exchange, shared with the LPA engine's halo plan
-        ext = comm.halo_exchange(share, send_l[0], axis)
-        contrib = jnp.zeros((vl,), jnp.float32).at[dst_l[0]].add(
-            ext[src_l[0]] * wv_l[0])
-        pr_new = (1 - damping) / V + damping * contrib
-        return pr_new[None]
-
-    step = jax.jit(shard_map(
-        superstep, mesh=mesh,
-        in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
-        out_specs=P(axis), check_rep=False))
-
-    pr = jnp.full((ndev, vl), 1.0 / V, jnp.float32)
-    for _ in range(iters):
-        pr = step(pr, send_idx, src_ext, dst_local, w_valid, out_deg)
-    pr_flat = np.asarray(pr).reshape(-1)
-    values = np.empty(V, np.float32)
-    values = pr_flat[plan.perm]
+    res = run_app(graph, labels, "pagerank", mesh=mesh, axis=axis,
+                  plan=plan or "halo", iters=iters, damping=damping)
+    layout = build_app_layout(graph, np.asarray(labels), res.ndev)
     stats = {
-        "halo_padded_bytes_per_step": int(ndev * (ndev - 1) * H * 4),
-        "halo_true_bytes_per_step": int(plan.true_halo * 4),
-        "v_per_dev": vl,
+        "halo_true_bytes_per_step": res.wire_bytes_per_step,
+        "wire_bytes": res.wire_bytes,
+        "supersteps": res.supersteps,
+        "straggler_skew": res.straggler_skew,
+        "v_per_dev": layout.v_per_dev,
         "iters": iters,
     }
-    return values, stats
+    return res.values, stats

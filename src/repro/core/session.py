@@ -800,6 +800,37 @@ class PartitionSession:
         self._dirty = None
         return res
 
+    def run_app(self, workload: str, labels: Optional[np.ndarray] = None,
+                **kwargs) -> "repro.apps.AppResult":
+        """Consume this session's partition: run a Pregel application
+        (``"pagerank"`` / ``"wcc"`` / ``"bfs"`` / ``"sssp"``) on the
+        session graph placed by its labels -- the end-to-end speedup
+        measurement of the paper's Section 7, via
+        :func:`repro.apps.run_app`.
+
+        ``labels`` defaults to the session's current stable assignment
+        (``partition()`` must have run); pass any vector (e.g.
+        ``benchmarks.common.hash_labels``) to A/B a baseline placement
+        on the same graph with zero recompiles.  Keyword args forward
+        to :func:`repro.apps.run_app` (``plan``, ``combine``,
+        ``overlap``, ``iters``, ``source``, ...); the mesh defaults to
+        the session's ``options.mesh``.  The compiled app program joins
+        the session's compile accounting (``session.compiles``).
+        """
+        self._check_open()
+        from repro.apps import run_app as _run_app
+        if labels is None:
+            labels = self._prev
+            if labels is None:
+                raise ValueError("no labels yet: run partition() first "
+                                 "or pass labels= explicitly")
+        if "mesh" not in kwargs and self.options.mesh is not None:
+            kwargs["mesh"] = self.options.mesh
+        kwargs.setdefault("axis", self.options.axis)
+        res = _run_app(self.graph, np.asarray(labels), workload, **kwargs)
+        self._track(res.program)
+        return res
+
     # -- introspection -----------------------------------------------------
 
     @property
